@@ -1,0 +1,66 @@
+//! Baseline comparison: the seven methods of Table 2 on one dataset,
+//! printed as a markdown table with accuracy + convergence time
+//! (a one-dataset slice of `gad table2` / `gad fig6`).
+//!
+//! ```bash
+//! cargo run --release --example baseline_comparison -- [dataset]
+//! ```
+//! `dataset` defaults to `tiny`; use cora/pubmed/flickr/reddit for the
+//! full-size runs (minutes each).
+
+use gad::baselines::{train_method, Method};
+use gad::coordinator::TrainConfig;
+use gad::datasets::Dataset;
+use gad::metrics::MarkdownTable;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "tiny".to_string());
+    let dataset = Dataset::by_name(&name, 42)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+    println!(
+        "dataset {name}: {} nodes / {} edges",
+        dataset.num_nodes(),
+        dataset.graph.num_edges()
+    );
+
+    let cfg = TrainConfig {
+        partitions: 8,
+        workers: 4,
+        layers: 2,
+        hidden: if name == "tiny" { 32 } else { 128 },
+        lr: 0.01,
+        epochs: if name == "tiny" { 40 } else { 80 },
+        stop_on_converge: true,
+        seed: 42,
+        ..TrainConfig::default()
+    };
+    let batch = if name == "pubmed" { 1500 } else { 300 };
+
+    let mut table = MarkdownTable::new(&[
+        "Method",
+        "Test acc",
+        "Converge (s)",
+        "Epochs",
+        "Feature comm (MB)",
+    ]);
+    let mut gad_time = None;
+    for m in Method::ALL {
+        let r = train_method(&dataset, m, &cfg, batch)?;
+        eprintln!("{:30} acc {:.4}  t {:.1}s", m.label(), r.test_accuracy, r.time_to_converge);
+        if m == Method::Gad {
+            gad_time = Some(r.time_to_converge);
+        }
+        table.row(vec![
+            m.label().to_string(),
+            format!("{:.4}", r.test_accuracy),
+            format!("{:.2}", r.time_to_converge),
+            r.epochs_run.to_string(),
+            format!("{:.3}", r.comm.feature_mb()),
+        ]);
+    }
+    println!("\n{}", table.render());
+    if let Some(t) = gad_time {
+        println!("(GAD convergence time: {t:.2}s — compare per-row for the Fig. 6 speedups)");
+    }
+    Ok(())
+}

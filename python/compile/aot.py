@@ -1,0 +1,104 @@
+"""AOT lowering: L2 model (wrapping the L1 Pallas kernels) -> HLO text.
+
+Emits HLO **text**, not a serialized ``HloModuleProto``: jax >= 0.5
+writes protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and rust/src/runtime/).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+    # extra shape buckets:
+    python -m compile.aot --out-dir ../artifacts \
+        --variant 2,512,500,256,3
+
+Writes ``<out>/manifest.txt`` with one line per artifact:
+``kind layers nodes fdim hidden classes file`` — parsed by
+rust/src/runtime/manifest.rs.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import make_predict, make_train_step, weight_shapes
+
+# Default buckets: (layers, nodes, fdim, hidden, classes).
+#   f32/c4/h32  — the `tiny` dataset (tests + quickstart example)
+#   f1433/c7/h128 — cora-scale (end_to_end_train example)
+DEFAULT_VARIANTS = [
+    (2, 128, 32, 32, 4),
+    (2, 256, 32, 32, 4),
+    (2, 512, 32, 32, 4),
+    (2, 256, 1433, 128, 7),
+    (2, 512, 1433, 128, 7),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unpacks a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(layers, nodes, fdim, hidden, classes):
+    """Lower (train, predict) for one shape bucket; returns dict of
+    kind -> hlo text."""
+    f32 = jax.numpy.float32
+    spec = jax.ShapeDtypeStruct
+    adj = spec((nodes, nodes), f32)
+    x = spec((nodes, fdim), f32)
+    y = spec((nodes, classes), f32)
+    mask = spec((nodes,), f32)
+    ws = [spec(s, f32) for s in weight_shapes(layers, fdim, hidden, classes)]
+
+    train = jax.jit(make_train_step(layers)).lower(adj, x, y, mask, *ws)
+    predict = jax.jit(make_predict(layers)).lower(adj, x, *ws)
+    return {"train": to_hlo_text(train), "predict": to_hlo_text(predict)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variant",
+        action="append",
+        default=[],
+        metavar="L,N,F,H,C",
+        help="extra bucket: layers,nodes,fdim,hidden,classes",
+    )
+    ap.add_argument("--no-defaults", action="store_true", help="skip DEFAULT_VARIANTS")
+    args = ap.parse_args()
+
+    variants = [] if args.no_defaults else list(DEFAULT_VARIANTS)
+    for v in args.variant:
+        parts = tuple(int(p) for p in v.split(","))
+        assert len(parts) == 5, f"bad --variant '{v}'"
+        variants.append(parts)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = ["# kind layers nodes fdim hidden classes file"]
+    for layers, nodes, fdim, hidden, classes in variants:
+        hlos = lower_variant(layers, nodes, fdim, hidden, classes)
+        for kind, text in hlos.items():
+            fname = f"{kind}_l{layers}_n{nodes}_f{fdim}_h{hidden}_c{classes}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            manifest_lines.append(
+                f"{kind} {layers} {nodes} {fdim} {hidden} {classes} {fname}"
+            )
+            print(f"wrote {fname} ({len(text) / 1e6:.2f} MB)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines) - 1} artifacts")
+
+
+if __name__ == "__main__":
+    main()

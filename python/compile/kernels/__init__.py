@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; never imported at runtime)."""
+
+from .gcn_layer import gcn_layer_pallas, matmul_pallas, BM, BN, BK  # noqa: F401

@@ -1,0 +1,93 @@
+"""L1 — blocked Pallas kernels for the GCN layer hot spot.
+
+Computes ``Z = A @ (X @ W)`` (optionally ReLU'd) — the paper's
+per-processor hot spot (Eq. 7) — rethought for TPU:
+
+* ``X @ W`` feeds the MXU as (BM, BK) x (BK, BN) f32 tiles;
+* the neighbourhood aggregation ``A @ (XW)`` — a warp-level sparse
+  gather on the paper's GPUs — becomes a second blocked dense matmul
+  over the padded normalized adjacency. For the <= 2k-node subgraphs
+  GAD-Partition produces this is the right trade on a systolic array
+  (see DESIGN.md §Hardware-Adaptation);
+* the grid walks (i, j, k) with k innermost; the output tile is
+  revisited across the k sweep and used as the accumulator, so each
+  (i, j) tile stays resident in VMEM while A/X tiles stream from HBM —
+  the BlockSpec index maps express the HBM<->VMEM schedule the paper's
+  CUDA code expressed with threadblocks, and the pallas pipeline
+  double-buffers the streamed tiles.
+
+VMEM budget per grid step: 3 tiles x 128x128 x 4 B = 192 KiB, far
+under the ~16 MB budget; see EXPERIMENTS.md §Perf for the MXU
+utilisation estimate.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU perf is *estimated*, not measured.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: multiples of the MXU's 128x128 systolic array.
+BM = 128
+BN = 128
+BK = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_tiles: int, activate: bool):
+    """Blocked ``o = x @ w``; the output tile accumulates across the
+    innermost k sweep, ReLU applied on the final k step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    if activate:
+
+        @pl.when(k == k_tiles - 1)
+        def _relu():
+            o_ref[...] = jnp.maximum(o_ref[...], 0.0)
+
+
+def matmul_pallas(x, w, *, activate: bool = False, interpret: bool = True):
+    """Blocked Pallas matmul; pads operands to tile multiples and crops
+    the result, so any f32 shape works."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    mp, kp, np_ = _ceil_to(m, BM), _ceil_to(k, BK), _ceil_to(n, BN)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    k_tiles = kp // BK
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_tiles=k_tiles, activate=activate),
+        grid=(mp // BM, np_ // BN, k_tiles),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((BK, BN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def gcn_layer_pallas(adj, x, w, *, activate: bool = False, interpret: bool = True):
+    """One GCN layer ``Z = adj @ (x @ w)``.
+
+    ``X @ W`` runs first: with X (n, f) and W (f, h), XW (n, h) is the
+    cheap intermediate (h << f for the input layer); aggregating first
+    would put the wide f-dimension through the second matmul too.
+    """
+    xw = matmul_pallas(x, w, interpret=interpret)
+    return matmul_pallas(adj, xw, activate=activate, interpret=interpret)

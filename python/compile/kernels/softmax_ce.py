@@ -1,0 +1,97 @@
+"""L1 — masked softmax cross-entropy as a blocked Pallas kernel.
+
+The loss layer (paper Eq. 9, softmax form) as row-blocked kernels:
+
+* forward: per-node `-(y · log_softmax(z))` over (BM, C) tiles — one
+  VMEM-resident row block per grid step, the row reduction runs on the
+  VPU lanes;
+* backward: `(softmax(z) - y) * mask / denom` with the same tiling.
+
+Both directions are Pallas, glued by a ``custom_vjp`` in
+`masked_ce_pallas`, so the AOT train artifact's loss layer also lowers
+from L1 kernels. interpret=True as everywhere (CPU PJRT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block height; class dim is kept whole (c <= a few hundred).
+BM = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _ce_fwd_kernel(z_ref, y_ref, o_ref):
+    """Per-row CE: o[i] = -sum_c y[i,c] * log_softmax(z)[i,c]."""
+    z = z_ref[...]
+    m = jnp.max(z, axis=-1, keepdims=True)
+    shifted = z - m
+    logsumexp = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+    logp = shifted - logsumexp
+    o_ref[...] = -jnp.sum(y_ref[...] * logp, axis=-1)
+
+
+def _ce_bwd_kernel(z_ref, y_ref, s_ref, o_ref):
+    """dL/dz rows: (softmax(z) - y) * s  (s = mask/denom scale)."""
+    z = z_ref[...]
+    m = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (p - y_ref[...]) * s_ref[...][:, None]
+
+
+def _rows_call(kernel, out_shape_cols, logits, *args, interpret=True):
+    """Run a row-blocked kernel over padded (n, c) inputs."""
+    n, c = logits.shape
+    npad = _ceil_to(n, BM)
+    padded = [jnp.pad(a, ((0, npad - n),) + ((0, 0),) * (a.ndim - 1)) for a in (logits, *args)]
+    if out_shape_cols == 0:
+        out_shape = jax.ShapeDtypeStruct((npad,), jnp.float32)
+        out_spec = pl.BlockSpec((BM,), lambda i: (i,))
+    else:
+        out_shape = jax.ShapeDtypeStruct((npad, c), jnp.float32)
+        out_spec = pl.BlockSpec((BM, c), lambda i: (i, 0))
+    in_specs = []
+    for a in padded:
+        if a.ndim == 1:
+            in_specs.append(pl.BlockSpec((BM,), lambda i: (i,)))
+        else:
+            in_specs.append(pl.BlockSpec((BM, a.shape[1]), lambda i: (i, 0)))
+    out = pl.pallas_call(
+        kernel,
+        grid=(npad // BM,),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*padded)
+    return out[:n] if out_shape_cols == 0 else out[:n, :]
+
+
+@jax.custom_vjp
+def masked_ce_pallas(logits, y_onehot, mask):
+    """Masked mean softmax CE with Pallas forward and backward."""
+    per_node = _rows_call(_ce_fwd_kernel, 0, logits, y_onehot)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(per_node * mask) / denom
+
+
+def _fwd(logits, y_onehot, mask):
+    return masked_ce_pallas(logits, y_onehot, mask), (logits, y_onehot, mask)
+
+
+def _bwd(res, g):
+    logits, y_onehot, mask = res
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    scale = g * mask / denom
+    dlogits = _rows_call(_ce_bwd_kernel, logits.shape[1], logits, y_onehot, scale)
+    # labels / mask are constants of the training problem
+    return dlogits, jnp.zeros_like(y_onehot), jnp.zeros_like(mask)
+
+
+masked_ce_pallas.defvjp(_fwd, _bwd)

@@ -1,0 +1,105 @@
+"""L2 — the GCN model as a JAX program over the L1 Pallas kernels.
+
+The Pallas matmul is wrapped in a ``custom_vjp`` whose backward is
+*also* expressed with the Pallas kernel, so the whole train step —
+forward, loss and gradients — lowers into one HLO module built from the
+L1 kernels. ``aot.py`` lowers `train_step` / `predict` per shape bucket
+and the rust runtime executes them via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gcn_layer import matmul_pallas
+
+
+# ---------------------------------------------------------------------
+# differentiable pallas matmul
+# ---------------------------------------------------------------------
+
+@jax.custom_vjp
+def pmm(x, w):
+    """Pallas matmul with a Pallas backward."""
+    return matmul_pallas(x, w)
+
+
+def _pmm_fwd(x, w):
+    return matmul_pallas(x, w), (x, w)
+
+
+def _pmm_bwd(res, g):
+    x, w = res
+    # dX = g W^T, dW = X^T g — both through the same blocked kernel
+    dx = matmul_pallas(g, w.T)
+    dw = matmul_pallas(x.T, g)
+    return dx, dw
+
+
+pmm.defvjp(_pmm_fwd, _pmm_bwd)
+
+
+# ---------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------
+
+def gcn_logits(adj, x, ws):
+    """L-layer GCN (paper Eq. 7/8, pre-softmax): hidden layers ReLU'd,
+    aggregation and feature transform through the Pallas kernel."""
+    h = x
+    last = len(ws) - 1
+    for i, w in enumerate(ws):
+        h = pmm(adj, pmm(h, w))
+        if i != last:
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def masked_ce_loss(logits, y_onehot, mask):
+    """Masked mean softmax cross-entropy (Eq. 9, softmax form), via the
+    L1 Pallas kernel (forward AND backward lower from Pallas).
+    Padded rows carry ``mask == 0`` and contribute nothing."""
+    from .kernels.softmax_ce import masked_ce_pallas
+
+    return masked_ce_pallas(logits, y_onehot, mask)
+
+
+def masked_ce_loss_jnp(logits, y_onehot, mask):
+    """Pure-jnp loss (cross-check oracle for the Pallas kernel)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    per_node = -jnp.sum(y_onehot * logp, axis=-1)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(per_node * mask) / denom
+
+
+def make_train_step(num_layers):
+    """`(adj, x, y, mask, *ws) -> (loss, *grads)` for the AOT bucket."""
+
+    def train_step(adj, x, y_onehot, mask, *ws):
+        def loss_of(ws_tuple):
+            return masked_ce_loss(gcn_logits(adj, x, ws_tuple), y_onehot, mask)
+
+        loss, grads = jax.value_and_grad(loss_of)(tuple(ws))
+        assert len(grads) == num_layers
+        return (loss, *grads)
+
+    return train_step
+
+
+def make_predict(num_layers):  # noqa: ARG001 — symmetry with train
+    """`(adj, x, *ws) -> (logits,)` for the AOT bucket."""
+
+    def predict(adj, x, *ws):
+        return (gcn_logits(adj, x, ws),)
+
+    return predict
+
+
+def weight_shapes(layers, fdim, hidden, classes):
+    """Weight matrix shapes `f -> h -> ... -> h -> c` (mirrors
+    rust/src/model/params.rs)."""
+    if layers == 1:
+        return [(fdim, classes)]
+    shapes = [(fdim, hidden)]
+    shapes += [(hidden, hidden)] * (layers - 2)
+    shapes.append((hidden, classes))
+    return shapes

@@ -1,0 +1,29 @@
+//! Bench: Fig 5 — accuracy-vs-epoch curves for all methods on one
+//! scaled dataset (full version: `gad fig5`). Prints a compact curve
+//! every 5 epochs per method.
+
+use gad::baselines::{train_method, Method};
+use gad::coordinator::TrainConfig;
+use gad::datasets::Dataset;
+
+fn main() {
+    let ds = Dataset::by_name_scaled("cora", 42, 0.25).unwrap();
+    let cfg = TrainConfig {
+        partitions: 8,
+        workers: 4,
+        layers: 2,
+        hidden: 64,
+        lr: 0.01,
+        epochs: 30,
+        seed: 42,
+        ..Default::default()
+    };
+    println!("== Fig 5 (cora 1/4-scale): test accuracy by epoch ==");
+    println!("method,epoch,accuracy");
+    for m in Method::ALL {
+        let r = train_method(&ds, m, &cfg, 150).unwrap();
+        for p in r.curve.iter().filter(|p| p.epoch % 5 == 0) {
+            println!("{},{},{:.4}", m.label(), p.epoch, p.accuracy);
+        }
+    }
+}

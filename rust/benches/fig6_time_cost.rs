@@ -1,0 +1,45 @@
+//! Bench: Fig 6 — time-to-convergence per method (scaled datasets);
+//! prints the GAD speedup column the paper reports as 1.7-3.1x.
+
+use gad::baselines::{train_method, Method};
+use gad::coordinator::TrainConfig;
+use gad::datasets::Dataset;
+use gad::metrics::MarkdownTable;
+
+fn main() {
+    let datasets: Vec<Dataset> = ["cora", "pubmed"]
+        .iter()
+        .map(|&n| Dataset::by_name_scaled(n, 42, 0.125).unwrap())
+        .collect();
+    let cfg = TrainConfig {
+        partitions: 8,
+        workers: 4,
+        layers: 2,
+        hidden: 64,
+        lr: 0.01,
+        epochs: 40,
+        stop_on_converge: true,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut times = Vec::new();
+    for m in Method::ALL {
+        let mut total = 0.0;
+        for ds in &datasets {
+            let r = train_method(ds, m, &cfg, 200).unwrap();
+            total += r.time_to_converge;
+        }
+        times.push((m, total / datasets.len() as f64));
+        eprintln!("{:28} {:.2}s", m.label(), times.last().unwrap().1);
+    }
+    let gad = times.iter().find(|(m, _)| *m == Method::Gad).unwrap().1;
+    let mut t = MarkdownTable::new(&["Method", "avg convergence (s)", "GAD speedup"]);
+    for (m, s) in &times {
+        t.row(vec![
+            m.label().to_string(),
+            format!("{s:.2}"),
+            format!("{:.1}x", s / gad.max(1e-9)),
+        ]);
+    }
+    println!("\n== Fig 6 (1/8-scale) ==\n{}", t.render());
+}

@@ -1,0 +1,32 @@
+//! Bench: Fig 7 — training time vs workers x layers (pubmed, scaled).
+//! The paper's claim: time falls sub-linearly with workers and
+//! flattens (consensus overhead).
+
+use gad::coordinator::{train_gad, TrainConfig};
+use gad::datasets::Dataset;
+use gad::metrics::MarkdownTable;
+
+fn main() {
+    let ds = Dataset::by_name_scaled("pubmed", 42, 0.25).unwrap();
+    let mut t = MarkdownTable::new(&["Workers", "2 Layers (s)", "3 Layers (s)", "4 Layers (s)"]);
+    for workers in 1..=4usize {
+        let mut cells = vec![workers.to_string()];
+        for layers in 2..=4usize {
+            let cfg = TrainConfig {
+                partitions: 8,
+                workers,
+                layers,
+                hidden: 64,
+                lr: 0.01,
+                epochs: 15,
+                seed: 42,
+                ..Default::default()
+            };
+            let r = train_gad(&ds, &cfg).unwrap();
+            eprintln!("workers {workers} layers {layers}: {:.2}s", r.wall_seconds);
+            cells.push(format!("{:.2}", r.wall_seconds));
+        }
+        t.row(cells);
+    }
+    println!("\n== Fig 7 (pubmed 1/4-scale) ==\n{}", t.render());
+}

@@ -1,0 +1,40 @@
+//! Bench: Fig 8 — loss convergence vs partition count, augmentation
+//! on/off (pubmed, scaled). The paper's claim: curves spread without
+//! augmentation, collapse together with it.
+
+use gad::coordinator::{train_gad, TrainConfig};
+use gad::datasets::Dataset;
+
+fn main() {
+    let ds = Dataset::by_name_scaled("pubmed", 42, 0.125).unwrap();
+    println!("augment,partitions,final_loss,loss_at_half");
+    let mut spreads = Vec::new();
+    for augment in [true, false] {
+        let mut finals = Vec::new();
+        for k in [4usize, 10, 20] {
+            let cfg = TrainConfig {
+                partitions: k,
+                workers: 4,
+                layers: 3,
+                hidden: 64,
+                lr: 0.01,
+                epochs: 25,
+                augment,
+                alpha: 0.02,
+                seed: 42,
+                ..Default::default()
+            };
+            let r = train_gad(&ds, &cfg).unwrap();
+            let last = r.curve.last().unwrap().loss;
+            let mid = r.curve[r.curve.len() / 2].loss;
+            println!("{augment},{k},{last:.4},{mid:.4}");
+            finals.push(last);
+        }
+        let spread = finals.iter().cloned().fold(f32::MIN, f32::max)
+            - finals.iter().cloned().fold(f32::MAX, f32::min);
+        spreads.push((augment, spread));
+    }
+    for (augment, spread) in spreads {
+        println!("# loss spread across partition counts (aug={augment}): {spread:.4}");
+    }
+}

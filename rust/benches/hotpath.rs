@@ -1,0 +1,84 @@
+//! Bench: hot-path microbenchmarks — the §Perf working set.
+//! GEMM / SpMM / train_step (native + xla) / partition / augmentation /
+//! ζ / consensus. Before/after numbers for EXPERIMENTS.md §Perf come
+//! from here.
+
+use gad::augment::{augment_all, AugmentConfig};
+use gad::backend::{Backend, NativeBackend, XlaBackend};
+use gad::bench_util::Bencher;
+use gad::coordinator::{aggregate_gradients, batch_from_subgraph};
+use gad::datasets::SyntheticSpec;
+use gad::model::GcnParams;
+use gad::partition::{partition, PartitionConfig};
+use gad::rng::Rng;
+use gad::tensor::{gemm, Matrix};
+use gad::variance::{zeta, ZetaConfig};
+
+fn main() {
+    let mut b = Bencher::new(1, 5);
+    let mut rng = Rng::seed_from_u64(1);
+
+    // --- L3 tensor kernels ------------------------------------------------
+    println!("== tensor kernels ==");
+    for &(m, k, n) in &[(256usize, 256usize, 256usize), (512, 1433, 128), (1024, 512, 256)] {
+        let a = Matrix::rand_uniform(m, k, &mut rng);
+        let w = Matrix::rand_uniform(k, n, &mut rng);
+        let flops = 2.0 * (m * k * n) as f64;
+        let s = b.bench(&format!("gemm {m}x{k}x{n}"), || gemm(&a, &w));
+        println!(
+            "    -> {:.2} GFLOP/s",
+            flops / s.mean.as_secs_f64() / 1e9
+        );
+    }
+
+    // --- dataset fixture ----------------------------------------------------
+    let ds = SyntheticSpec::cora_like().generate(42);
+    let cfg = PartitionConfig { k: 16, seed: 42, ..Default::default() };
+
+    println!("\n== partition / augmentation ==");
+    b.bench("multilevel partition cora-like k=16", || partition(&ds.graph, &cfg));
+    let part = partition(&ds.graph, &cfg);
+    let acfg = AugmentConfig { alpha: 0.01, walk_length: 2, seed: 42, ..Default::default() };
+    b.bench("augment_all cora-like k=16", || {
+        augment_all(&ds.graph, &part.assignment, 16, &acfg)
+    });
+    let augs = augment_all(&ds.graph, &part.assignment, 16, &acfg);
+
+    println!("\n== batch build / zeta / consensus ==");
+    b.bench("batch_from_subgraph (one part)", || {
+        batch_from_subgraph(&ds, &augs[0], 0)
+    });
+    let batch = batch_from_subgraph(&ds, &augs[0], 0);
+    b.bench("zeta (one part, features)", || {
+        zeta(&augs[0].sub.csr, Some(&batch.features), &ZetaConfig::default())
+    });
+    let mut prng = Rng::seed_from_u64(2);
+    let params = GcnParams::init(ds.feature_dim(), 128, ds.num_classes, 2, &mut prng);
+    let grads: Vec<Vec<Matrix>> = (0..4).map(|_| params.ws.clone()).collect();
+    b.bench("aggregate_gradients 4 workers (f1433 h128)", || {
+        aggregate_gradients(&grads, &[1.0, 2.0, 3.0, 4.0])
+    });
+
+    println!("\n== train_step (one augmented cora subgraph) ==");
+    let mut native = NativeBackend::new();
+    b.bench("native train_step", || native.train_step(&batch, &params).unwrap());
+    b.bench("native predict", || native.predict(&batch, &params).unwrap());
+
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        match XlaBackend::new("artifacts") {
+            Ok(mut xla) => {
+                // first call compiles; bench steady-state after warmup
+                let _ = xla.train_step(&batch, &params);
+                b.bench("xla train_step (AOT pallas artifact)", || {
+                    xla.train_step(&batch, &params).unwrap()
+                });
+                b.bench("xla predict", || xla.predict(&batch, &params).unwrap());
+            }
+            Err(e) => eprintln!("xla backend unavailable: {e:#}"),
+        }
+    } else {
+        eprintln!("artifacts/ missing — skipping xla benches (run `make artifacts`)");
+    }
+
+    println!("\n== summary ==\n{}", b.markdown());
+}

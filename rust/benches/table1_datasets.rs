@@ -1,0 +1,30 @@
+//! Bench: Table 1 — dataset generation cost + printed statistics.
+//! Regenerates the statistics table the paper reports, and times the
+//! synthetic generators (the data substrate).
+
+use gad::bench_util::Bencher;
+use gad::datasets::{Dataset, SyntheticSpec};
+
+fn main() {
+    let mut b = Bencher::new(1, 3);
+    println!("== Table 1: dataset statistics (synthetic, Table-1-shaped) ==\n");
+    println!("| Dataset | Nodes | Edges | Labels | Features | Train/Val/Test |");
+    println!("|---|---|---|---|---|---|");
+    for spec in [
+        SyntheticSpec::cora_like(),
+        SyntheticSpec::pubmed_like(),
+        SyntheticSpec::flickr_like(),
+        SyntheticSpec::reddit_like(),
+    ] {
+        let ds = spec.generate(42);
+        ds.validate().expect("dataset invariant");
+        println!("{}", ds.stats_row());
+    }
+    println!("\n== generation cost ==");
+    b.bench("generate cora-like (2.7k nodes)", || SyntheticSpec::cora_like().generate(1));
+    b.bench("generate pubmed-like (19.7k nodes)", || SyntheticSpec::pubmed_like().generate(1));
+    b.bench("generate reddit-like (11.6k nodes, 580k edges)", || {
+        SyntheticSpec::reddit_like().generate(1)
+    });
+    let _ = Dataset::by_name("tiny", 1);
+}

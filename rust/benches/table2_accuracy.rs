@@ -1,0 +1,48 @@
+//! Bench: Table 2 — test accuracy of the 7 methods (scaled-down
+//! datasets so `cargo bench` terminates in minutes; `gad table2` runs
+//! the full sizes).
+
+use gad::baselines::{train_method, Method};
+use gad::coordinator::TrainConfig;
+use gad::datasets::Dataset;
+use gad::metrics::MarkdownTable;
+
+fn main() {
+    let cfg = TrainConfig {
+        partitions: 8,
+        workers: 4,
+        layers: 2,
+        hidden: 64,
+        lr: 0.01,
+        epochs: 30,
+        stop_on_converge: true,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut table = MarkdownTable::new(&["Method", "Cora", "Pubmed", "Flicker", "Reddit"]);
+    let datasets: Vec<(&str, Dataset)> = ["cora", "pubmed", "flickr", "reddit"]
+        .iter()
+        .map(|&n| (n, Dataset::by_name_scaled(n, 42, 0.125).unwrap()))
+        .collect();
+
+    for m in Method::ALL {
+        let mut cells = vec![m.label().to_string()];
+        for (name, ds) in &datasets {
+            if m == Method::SaintEdge && (*name == "flickr" || *name == "reddit") {
+                cells.push("-".into());
+                continue; // paper: SAINT-Edge skipped on large datasets
+            }
+            let t0 = std::time::Instant::now();
+            let r = train_method(ds, m, &cfg, if *name == "pubmed" { 400 } else { 150 }).unwrap();
+            eprintln!(
+                "{:28} {name:8} acc {:.4}  ({:.1}s)",
+                m.label(),
+                r.test_accuracy,
+                t0.elapsed().as_secs_f64()
+            );
+            cells.push(format!("{:.4}", r.test_accuracy));
+        }
+        table.row(cells);
+    }
+    println!("\n== Table 2 (1/8-scale) ==\n{}", table.render());
+}

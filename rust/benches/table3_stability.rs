@@ -1,0 +1,31 @@
+//! Bench: Table 3 — accuracy stability across workers x layers
+//! (pubmed, scaled).
+
+use gad::coordinator::{train_gad, TrainConfig};
+use gad::datasets::Dataset;
+use gad::metrics::MarkdownTable;
+
+fn main() {
+    let ds = Dataset::by_name_scaled("pubmed", 42, 0.125).unwrap();
+    let mut table = MarkdownTable::new(&["Workers", "2 Layers", "3 Layers", "4 Layers"]);
+    for workers in 1..=4usize {
+        let mut cells = vec![format!("{workers} worker(s)")];
+        for layers in 2..=4usize {
+            let cfg = TrainConfig {
+                partitions: 8,
+                workers,
+                layers,
+                hidden: 64,
+                lr: 0.01,
+                epochs: 30,
+                seed: 42,
+                ..Default::default()
+            };
+            let r = train_gad(&ds, &cfg).unwrap();
+            eprintln!("workers {workers} layers {layers}: acc {:.4} ({:.1}s)", r.test_accuracy, r.wall_seconds);
+            cells.push(format!("{:.4}", r.test_accuracy));
+        }
+        table.row(cells);
+    }
+    println!("\n== Table 3 (pubmed 1/8-scale) ==\n{}", table.render());
+}

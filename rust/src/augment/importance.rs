@@ -1,0 +1,206 @@
+//! Monte-Carlo random-walk importance (paper Eq. 3–4, Algorithm 1
+//! lines 1–17).
+//!
+//! Walks of length `l` (= GCN layers, Property 1) start from uniformly
+//! random boundary nodes of the part and step uniformly over the
+//! *original* graph, so they can leave the part and touch candidate
+//! replication nodes. `I(v)` is the fraction of walks that visit `v`.
+//! The pilot phase runs `d̄(B) · |B|` walks, estimates the visit
+//! distribution's mean/σ, and sizes the full run with the Monte-Carlo
+//! error formula `n = (z_c σ / (x̄ E))²` (Eq. 4).
+
+use super::AugmentConfig;
+use crate::graph::{avg_degree, boundary_nodes, Csr};
+use crate::rng::Rng;
+use std::collections::HashMap;
+
+/// Result of the importance estimation for one part.
+#[derive(Clone, Debug)]
+pub struct ImportanceReport {
+    /// `(global id, I(v))` per candidate, sorted by id.
+    pub importance: Vec<(u32, f64)>,
+    /// All walks performed (each = the node sequence).
+    pub walks: Vec<Vec<u32>>,
+    /// Total walk count actually used (pilot + main).
+    pub walks_used: usize,
+}
+
+impl ImportanceReport {
+    /// I(v) lookup.
+    pub fn get(&self, v: u32) -> f64 {
+        self.importance
+            .binary_search_by_key(&v, |&(g, _)| g)
+            .map(|i| self.importance[i].1)
+            .unwrap_or(0.0)
+    }
+}
+
+/// One uniform random walk of `len` steps starting at `start`.
+fn random_walk(graph: &Csr, start: u32, len: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut seq = Vec::with_capacity(len + 1);
+    seq.push(start);
+    let mut cur = start as usize;
+    for _ in 0..len {
+        let nbrs = graph.neighbors(cur);
+        if nbrs.is_empty() {
+            break;
+        }
+        cur = nbrs[rng.gen_range(nbrs.len())] as usize;
+        seq.push(cur as u32);
+    }
+    seq
+}
+
+/// Estimate `I(v)` for each node of `candidates` (Eq. 3).
+pub fn walk_importance(
+    graph: &Csr,
+    assignment: &[u32],
+    part: u32,
+    candidates: &[u32],
+    cfg: &AugmentConfig,
+    rng: &mut Rng,
+) -> ImportanceReport {
+    let boundary = boundary_nodes(graph, assignment, part);
+    if boundary.is_empty() || candidates.is_empty() {
+        return ImportanceReport {
+            importance: candidates.iter().map(|&c| (c, 0.0)).collect(),
+            walks: Vec::new(),
+            walks_used: 0,
+        };
+    }
+    let cand_index: HashMap<u32, usize> =
+        candidates.iter().enumerate().map(|(i, &c)| (c, i)).collect();
+
+    let mut visit_counts = vec![0u64; candidates.len()];
+    let mut walks: Vec<Vec<u32>> = Vec::new();
+
+    let run_walks = |count: usize,
+                         walks: &mut Vec<Vec<u32>>,
+                         visit_counts: &mut Vec<u64>,
+                         rng: &mut Rng| {
+        for _ in 0..count {
+            let start = boundary[rng.gen_range(boundary.len())];
+            let seq = random_walk(graph, start, cfg.walk_length, rng);
+            // Eq.3: RW_j(v) = 1 if v appears in the walk (dedup within a walk)
+            let mut seen_in_walk: Vec<usize> = seq
+                .iter()
+                .filter_map(|g| cand_index.get(g).copied())
+                .collect();
+            seen_in_walk.sort_unstable();
+            seen_in_walk.dedup();
+            for i in seen_in_walk {
+                visit_counts[i] += 1;
+            }
+            walks.push(seq);
+        }
+    };
+
+    // --- pilot: d̄(B) * |B| walks (Algorithm 1 line 4) -------------------
+    let pilot = ((avg_degree(graph, &boundary) * boundary.len() as f64).ceil() as usize)
+        .clamp(8, cfg.max_walks);
+    run_walks(pilot, &mut walks, &mut visit_counts, rng);
+
+    // --- size main run from MC error bound (Eq. 4) ----------------------
+    let probs: Vec<f64> = visit_counts
+        .iter()
+        .map(|&c| c as f64 / walks.len() as f64)
+        .collect();
+    let mean = probs.iter().sum::<f64>() / probs.len().max(1) as f64;
+    let var = probs.iter().map(|p| (p - mean) * (p - mean)).sum::<f64>()
+        / probs.len().max(1) as f64;
+    let sigma = var.sqrt();
+    let n_total = if mean > 0.0 {
+        let n = (cfg.z_c * sigma / (mean * cfg.mc_error)).powi(2);
+        (n.ceil() as usize).clamp(pilot, cfg.max_walks)
+    } else {
+        pilot
+    };
+    if n_total > pilot {
+        run_walks(n_total - pilot, &mut walks, &mut visit_counts, rng);
+    }
+
+    let total = walks.len() as f64;
+    let importance: Vec<(u32, f64)> = candidates
+        .iter()
+        .zip(&visit_counts)
+        .map(|(&c, &n)| (c, n as f64 / total))
+        .collect();
+
+    let walks_used = walks.len();
+    ImportanceReport { importance, walks, walks_used }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{candidate_replication_nodes, GraphBuilder};
+
+    /// Star of remote nodes behind a single boundary: 0,1 local (part 0),
+    /// 2 remote hub, 3..6 remote leaves. Hub must dominate importance.
+    fn hub_fixture() -> (Csr, Vec<u32>) {
+        let g = GraphBuilder::new(7)
+            .edges(&[(0, 1), (1, 2), (2, 3), (2, 4), (2, 5), (2, 6)])
+            .build();
+        let a = vec![0, 0, 1, 1, 1, 1, 1];
+        (g, a)
+    }
+
+    #[test]
+    fn hub_more_important_than_leaves() {
+        let (g, a) = hub_fixture();
+        let cands = candidate_replication_nodes(&g, &a, 0, 2);
+        assert!(cands.contains(&2));
+        let cfg = AugmentConfig { walk_length: 2, seed: 3, ..Default::default() };
+        let mut rng = Rng::seed_from_u64(3);
+        let rep = walk_importance(&g, &a, 0, &cands, &cfg, &mut rng);
+        let hub = rep.get(2);
+        for leaf in [3u32, 4, 5, 6] {
+            if cands.contains(&leaf) {
+                assert!(hub > rep.get(leaf), "hub {hub} vs leaf {}", rep.get(leaf));
+            }
+        }
+    }
+
+    #[test]
+    fn importance_bounded_zero_one() {
+        let (g, a) = hub_fixture();
+        let cands = candidate_replication_nodes(&g, &a, 0, 2);
+        let cfg = AugmentConfig::default();
+        let mut rng = Rng::seed_from_u64(5);
+        let rep = walk_importance(&g, &a, 0, &cands, &cfg, &mut rng);
+        for &(_, i) in &rep.importance {
+            assert!((0.0..=1.0).contains(&i));
+        }
+    }
+
+    #[test]
+    fn empty_boundary_gives_zero_importance() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (2, 3)]).build();
+        let a = vec![0, 0, 1, 1];
+        let cfg = AugmentConfig::default();
+        let mut rng = Rng::seed_from_u64(7);
+        let rep = walk_importance(&g, &a, 0, &[], &cfg, &mut rng);
+        assert!(rep.importance.is_empty());
+        assert_eq!(rep.walks_used, 0);
+    }
+
+    #[test]
+    fn walk_stays_on_graph_edges() {
+        let (g, _) = hub_fixture();
+        let mut rng = Rng::seed_from_u64(11);
+        for _ in 0..50 {
+            let w = random_walk(&g, 1, 3, &mut rng);
+            for pair in w.windows(2) {
+                assert!(g.has_edge(pair[0] as usize, pair[1] as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn eq4_sample_size_scales_with_variance() {
+        // direct check of the Eq.4 arithmetic used inside walk_importance
+        let n = |sigma: f64, mean: f64| (1.96 * sigma / (mean * 0.05)).powi(2);
+        assert!(n(0.2, 0.5) > n(0.1, 0.5));
+        assert!(n(0.1, 0.25) > n(0.1, 0.5));
+    }
+}

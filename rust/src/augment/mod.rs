@@ -1,0 +1,229 @@
+//! GAD-Partition local subgraph augmentation (paper §3.2.2, Algorithm 1).
+//!
+//! After partitioning, each subgraph is augmented with *replicated*
+//! copies of important remote nodes so that training needs (almost) no
+//! cross-processor neighbour fetches:
+//!
+//! 1. [`importance`] — Monte-Carlo random-walk importance `I(v)` over
+//!    the candidate replication nodes (Eq. 3), with the walk budget
+//!    chosen from the Monte-Carlo error bound (Eq. 4) and walk length
+//!    `l =` number of GCN layers (Property 1).
+//! 2. [`select`] — replication budget `n(g) = α (1 + d(g)) |v|`
+//!    (Eq. 5–6) and depth-first whole-walk selection, which cannot
+//!    produce dangling replicas (every walk starts at a boundary node).
+
+mod importance;
+mod select;
+
+pub use importance::{walk_importance, ImportanceReport};
+pub use select::select_replicas;
+
+use crate::graph::{candidate_replication_nodes, Csr, Subgraph};
+use crate::rng::Rng;
+
+/// Tunables for augmentation.
+#[derive(Clone, Debug)]
+pub struct AugmentConfig {
+    /// Replication coefficient α of Eq. 6 (paper: 0.01).
+    pub alpha: f64,
+    /// Walk length = GCN layer count (Property 1).
+    pub walk_length: usize,
+    /// Monte-Carlo relative error target E of Eq. 4 (paper: 0.05).
+    pub mc_error: f64,
+    /// z-statistic for the confidence level (paper: 1.96 ≙ 95%).
+    pub z_c: f64,
+    /// Hard cap on walks per subgraph (guards pathological variance).
+    pub max_walks: usize,
+    pub seed: u64,
+}
+
+impl Default for AugmentConfig {
+    fn default() -> Self {
+        AugmentConfig {
+            alpha: 0.01,
+            walk_length: 2,
+            mc_error: 0.05,
+            z_c: 1.96,
+            max_walks: 200_000,
+            seed: 0,
+        }
+    }
+}
+
+/// A partition subgraph extended with replicated remote nodes.
+#[derive(Clone, Debug)]
+pub struct AugmentedSubgraph {
+    /// Which part this came from.
+    pub part: u32,
+    /// Induced subgraph over base + replicated nodes (global ids in
+    /// `sub.global_ids`).
+    pub sub: Subgraph,
+    /// Per-local-node flag: true -> replica (excluded from the loss;
+    /// provides neighbourhood context only).
+    pub is_replica: Vec<bool>,
+    /// Importance I(v) of every candidate replication node considered
+    /// (global id -> importance), kept for communication accounting.
+    pub candidate_importance: Vec<(u32, f64)>,
+    /// Replicated global ids (sorted).
+    pub replicas: Vec<u32>,
+    /// Walks performed by the Monte-Carlo estimator (diagnostics).
+    pub walks_used: usize,
+}
+
+impl AugmentedSubgraph {
+    /// Number of base (non-replica) nodes.
+    pub fn base_len(&self) -> usize {
+        self.is_replica.iter().filter(|&&r| !r).count()
+    }
+}
+
+/// Augment one part of `assignment` per Algorithm 1.
+pub fn augment_part(
+    graph: &Csr,
+    assignment: &[u32],
+    part: u32,
+    cfg: &AugmentConfig,
+) -> AugmentedSubgraph {
+    let base_nodes: Vec<u32> = (0..graph.num_nodes() as u32)
+        .filter(|&v| assignment[v as usize] == part)
+        .collect();
+    let candidates = candidate_replication_nodes(graph, assignment, part, cfg.walk_length);
+
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ (part as u64).wrapping_mul(0x9E37_79B9));
+    let report = walk_importance(graph, assignment, part, &candidates, cfg, &mut rng);
+    let replicas = select_replicas(graph, &base_nodes, &candidates, &report, cfg);
+
+    let mut all = base_nodes.clone();
+    all.extend_from_slice(&replicas);
+    let sub = Subgraph::induce(graph, &all);
+    let base_set: std::collections::HashSet<u32> = base_nodes.iter().copied().collect();
+    let is_replica = sub
+        .global_ids
+        .iter()
+        .map(|g| !base_set.contains(g))
+        .collect();
+
+    AugmentedSubgraph {
+        part,
+        sub,
+        is_replica,
+        candidate_importance: report.importance,
+        replicas,
+        walks_used: report.walks_used,
+    }
+}
+
+/// Augment every part; returns one [`AugmentedSubgraph`] per part.
+pub fn augment_all(graph: &Csr, assignment: &[u32], k: usize, cfg: &AugmentConfig) -> Vec<AugmentedSubgraph> {
+    (0..k as u32)
+        .map(|p| augment_part(graph, assignment, p, cfg))
+        .collect()
+}
+
+/// A non-augmented part wrapped in the same type (replicas empty) so
+/// the trainer can run either mode through one code path.
+pub fn plain_part(graph: &Csr, assignment: &[u32], part: u32) -> AugmentedSubgraph {
+    let base_nodes: Vec<u32> = (0..graph.num_nodes() as u32)
+        .filter(|&v| assignment[v as usize] == part)
+        .collect();
+    let sub = Subgraph::induce(graph, &base_nodes);
+    let n = sub.len();
+    AugmentedSubgraph {
+        part,
+        sub,
+        is_replica: vec![false; n],
+        candidate_importance: Vec::new(),
+        replicas: Vec::new(),
+        walks_used: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SyntheticSpec;
+    use crate::partition::{partition, PartitionConfig};
+
+    fn fixture() -> (Csr, Vec<u32>) {
+        let d = SyntheticSpec::tiny().generate(1);
+        let p = partition(&d.graph, &PartitionConfig { k: 4, seed: 1, ..Default::default() });
+        (d.graph, p.assignment)
+    }
+
+    #[test]
+    fn replicas_are_remote_nodes() {
+        let (g, a) = fixture();
+        let aug = augment_part(&g, &a, 0, &AugmentConfig::default());
+        for &r in &aug.replicas {
+            assert_ne!(a[r as usize], 0, "replica {r} should be remote");
+        }
+    }
+
+    #[test]
+    fn budget_respected() {
+        let (g, a) = fixture();
+        let cfg = AugmentConfig { alpha: 0.01, ..Default::default() };
+        let aug = augment_part(&g, &a, 0, &cfg);
+        let base = aug.base_len();
+        // n(g) = alpha * (1 + d) * |v| <= alpha * 2 * |v| (+1 walk slack)
+        let max_budget = (cfg.alpha * 2.0 * base as f64).ceil() as usize + cfg.walk_length + 1;
+        assert!(
+            aug.replicas.len() <= max_budget.max(1),
+            "replicas {} > budget {max_budget}",
+            aug.replicas.len()
+        );
+    }
+
+    #[test]
+    fn no_dangling_replicas() {
+        // every replica must be connected to the subgraph (depth-first
+        // whole-walk selection guarantees a path to a boundary node)
+        let (g, a) = fixture();
+        let aug = augment_part(&g, &a, 1, &AugmentConfig::default());
+        // BFS from base nodes within the augmented subgraph
+        let n = aug.sub.len();
+        let mut seen: Vec<bool> = aug.is_replica.iter().map(|&r| !r).collect();
+        let mut queue: std::collections::VecDeque<usize> =
+            (0..n).filter(|&i| seen[i]).collect();
+        while let Some(v) = queue.pop_front() {
+            for &t in aug.sub.csr.neighbors(v) {
+                if !seen[t as usize] {
+                    seen[t as usize] = true;
+                    queue.push_back(t as usize);
+                }
+            }
+        }
+        for i in 0..n {
+            if aug.is_replica[i] {
+                assert!(seen[i], "dangling replica local={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn plain_part_has_no_replicas() {
+        let (g, a) = fixture();
+        let p = plain_part(&g, &a, 2);
+        assert!(p.replicas.is_empty());
+        assert!(p.is_replica.iter().all(|&r| !r));
+        assert_eq!(p.base_len(), p.sub.len());
+    }
+
+    #[test]
+    fn augment_all_covers_every_part() {
+        let (g, a) = fixture();
+        let augs = augment_all(&g, &a, 4, &AugmentConfig::default());
+        assert_eq!(augs.len(), 4);
+        let total_base: usize = augs.iter().map(|s| s.base_len()).sum();
+        assert_eq!(total_base, g.num_nodes());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (g, a) = fixture();
+        let c = AugmentConfig { seed: 9, ..Default::default() };
+        let x = augment_part(&g, &a, 0, &c);
+        let y = augment_part(&g, &a, 0, &c);
+        assert_eq!(x.replicas, y.replicas);
+    }
+}

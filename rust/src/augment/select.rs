@@ -1,0 +1,158 @@
+//! Depth-first whole-walk replica selection (paper Algorithm 1 lines
+//! 18–26).
+//!
+//! Naively copying the top-`n(g)` important candidates can produce
+//! *dangling* replicas (no path back to the subgraph). The paper's fix:
+//! score whole walks `I(RW) = Σ_{v∈RW} I(v)`, take walks in descending
+//! score order, and add their unseen candidate nodes until the budget
+//! `n(g) = α (1 + d(g)) |v|` (Eq. 6) is filled. Every walk starts at a
+//! boundary node, so every replica arrives with a path into the part.
+
+use super::importance::ImportanceReport;
+use super::AugmentConfig;
+use crate::graph::{density, Csr, Subgraph};
+use std::collections::HashSet;
+
+/// Replication budget `n(g)` of Eq. 6 for a part with `base_nodes`.
+pub fn replication_budget(graph: &Csr, base_nodes: &[u32], alpha: f64) -> usize {
+    let sub = Subgraph::induce(graph, base_nodes);
+    let d = density(&sub.csr);
+    (alpha * (1.0 + d) * base_nodes.len() as f64).ceil() as usize
+}
+
+/// Pick replicas per the depth-first walk strategy. Returns sorted
+/// global ids, at most `budget (+ one final walk's overshoot)` — the
+/// paper fills until `|v'| = n(g)`, we stop the moment the budget is
+/// met mid-walk, so the bound is exact.
+pub fn select_replicas(
+    graph: &Csr,
+    base_nodes: &[u32],
+    candidates: &[u32],
+    report: &ImportanceReport,
+    cfg: &AugmentConfig,
+) -> Vec<u32> {
+    let budget = replication_budget(graph, base_nodes, cfg.alpha);
+    if budget == 0 || candidates.is_empty() || report.walks.is_empty() {
+        return Vec::new();
+    }
+    let cand_set: HashSet<u32> = candidates.iter().copied().collect();
+
+    // score each walk: sum of I(v) over its candidate nodes
+    let mut scored: Vec<(f64, usize)> = report
+        .walks
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            let s: f64 = w
+                .iter()
+                .filter(|v| cand_set.contains(v))
+                .map(|&v| report.get(v))
+                .sum();
+            (s, i)
+        })
+        .filter(|&(s, _)| s > 0.0)
+        .collect();
+    // descending by score; stable tiebreak on index for determinism
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+
+    // Importance threshold: the I(v) of the budget-th best candidate.
+    // Within a walk we keep descending only while nodes clear the
+    // threshold — otherwise whole-walk copying burns the budget on a
+    // hub's low-importance walk tail (hub + 2 arbitrary neighbours)
+    // instead of the next hub. Connectivity is preserved because a
+    // node is added only while its walk prefix is local or chosen.
+    let theta = {
+        let mut imps: Vec<f64> = candidates.iter().map(|&c| report.get(c)).collect();
+        imps.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        imps.get(budget.saturating_sub(1)).copied().unwrap_or(0.0)
+    };
+
+    let base_set: HashSet<u32> = base_nodes.iter().copied().collect();
+    let mut chosen: Vec<u32> = Vec::with_capacity(budget);
+    let mut seen: HashSet<u32> = HashSet::with_capacity(budget * 2);
+    // two passes: strict threshold first, then fill leftover budget
+    for pass_theta in [theta, 0.0] {
+        'walks: for &(_, wi) in &scored {
+            for &v in &report.walks[wi] {
+                if base_set.contains(&v) || seen.contains(&v) {
+                    continue; // local or already replicated: stays connected
+                }
+                if !cand_set.contains(&v) {
+                    continue 'walks; // left the candidate region
+                }
+                if report.get(v) < pass_theta {
+                    continue 'walks; // deeper nodes would dangle off a skipped one
+                }
+                seen.insert(v);
+                chosen.push(v);
+                if chosen.len() >= budget {
+                    chosen.sort_unstable();
+                    return chosen;
+                }
+            }
+        }
+    }
+    chosen.sort_unstable();
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::augment::walk_importance;
+    use crate::graph::{candidate_replication_nodes, GraphBuilder};
+    use crate::rng::Rng;
+
+    #[test]
+    fn budget_formula_matches_eq6() {
+        // path graph of 4 nodes: density = 0.5, alpha=0.5 ->
+        // n = ceil(0.5 * 1.5 * 4) = 3
+        let g = GraphBuilder::new(8)
+            .edges(&[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7)])
+            .build();
+        let base = [0u32, 1, 2, 3];
+        assert_eq!(replication_budget(&g, &base, 0.5), 3);
+        // alpha=0 -> no replication
+        assert_eq!(replication_budget(&g, &base, 0.0), 0);
+    }
+
+    #[test]
+    fn selection_never_exceeds_budget() {
+        let g = GraphBuilder::new(10)
+            .edges(&[
+                (0, 1),
+                (1, 2),
+                (2, 3),
+                (2, 4),
+                (4, 5),
+                (5, 6),
+                (6, 7),
+                (7, 8),
+                (8, 9),
+            ])
+            .build();
+        let a = vec![0, 0, 0, 1, 1, 1, 1, 1, 1, 1];
+        let base: Vec<u32> = vec![0, 1, 2];
+        let cands = candidate_replication_nodes(&g, &a, 0, 3);
+        let cfg = AugmentConfig { alpha: 0.4, walk_length: 3, seed: 1, ..Default::default() };
+        let mut rng = Rng::seed_from_u64(1);
+        let rep = walk_importance(&g, &a, 0, &cands, &cfg, &mut rng);
+        let budget = replication_budget(&g, &base, cfg.alpha);
+        let sel = select_replicas(&g, &base, &cands, &rep, &cfg);
+        assert!(sel.len() <= budget);
+        for v in &sel {
+            assert!(cands.contains(v));
+        }
+    }
+
+    #[test]
+    fn zero_alpha_selects_nothing() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3)]).build();
+        let a = vec![0, 0, 1, 1];
+        let cands = candidate_replication_nodes(&g, &a, 0, 2);
+        let cfg = AugmentConfig { alpha: 0.0, ..Default::default() };
+        let mut rng = Rng::seed_from_u64(2);
+        let rep = walk_importance(&g, &a, 0, &cands, &cfg, &mut rng);
+        assert!(select_replicas(&g, &[0, 1], &cands, &rep, &cfg).is_empty());
+    }
+}

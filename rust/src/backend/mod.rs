@@ -1,0 +1,71 @@
+//! Compute backends: the pluggable engine that turns a [`Batch`] +
+//! [`GcnParams`] into loss/gradients (train) or predictions (eval).
+//!
+//! * [`NativeBackend`] — pure-rust fwd/bwd on the in-repo tensor lib;
+//!   works for any shape; the numerical oracle.
+//! * [`XlaBackend`] — executes the AOT artifacts produced by
+//!   `python/compile/aot.py` (L2 JAX model wrapping the L1 Pallas
+//!   kernel) through PJRT; the production hot path. Shape-static, so
+//!   batches are padded to the nearest compiled bucket.
+
+mod native;
+mod xla_backend;
+
+pub use native::NativeBackend;
+pub use xla_backend::XlaBackend;
+
+use crate::model::{Batch, GcnParams, StepOutput};
+use anyhow::Result;
+
+/// Which backend the run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Xla,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => Err(format!("unknown backend '{other}' (native|xla)")),
+        }
+    }
+}
+
+/// A compute engine for GCN training steps.
+///
+/// Deliberately NOT `Send`: the xla crate's PJRT handles hold raw
+/// pointers. Worker threads receive a [`BackendFactory`] and construct
+/// their backend locally instead of moving one across threads.
+pub trait Backend {
+    /// Forward + backward: loss over `batch.loss_mask` and gradients
+    /// for every weight matrix.
+    fn train_step(&mut self, batch: &Batch, params: &GcnParams) -> Result<StepOutput>;
+
+    /// Forward only: per-node predicted class.
+    fn predict(&mut self, batch: &Batch, params: &GcnParams) -> Result<Vec<u32>>;
+
+    /// Human-readable engine name for logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Thread-safe constructor for per-worker backends.
+pub type BackendFactory = std::sync::Arc<dyn Fn() -> Result<Box<dyn Backend>> + Send + Sync>;
+
+/// Construct a backend of the given kind. For [`BackendKind::Xla`],
+/// `artifact_dir` must contain `manifest.txt` from `make artifacts`.
+pub fn make_backend(kind: BackendKind, artifact_dir: &str) -> Result<Box<dyn Backend>> {
+    Ok(match kind {
+        BackendKind::Native => Box::new(NativeBackend::new()),
+        BackendKind::Xla => Box::new(XlaBackend::new(artifact_dir)?),
+    })
+}
+
+/// A [`BackendFactory`] for the given kind/dir.
+pub fn backend_factory(kind: BackendKind, artifact_dir: &str) -> BackendFactory {
+    let dir = artifact_dir.to_string();
+    std::sync::Arc::new(move || make_backend(kind, &dir))
+}

@@ -1,0 +1,127 @@
+//! XLA compute backend: pads batches to the nearest compiled shape
+//! bucket and runs the AOT train/predict artifacts through [`Runtime`].
+
+use super::Backend;
+use crate::model::{Batch, GcnParams, StepOutput};
+use crate::runtime::{literal_1d, literal_2d, ArtifactKind, BucketKey, Runtime};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
+
+/// See module docs. One instance per worker thread (PJRT handles are
+/// not `Send`).
+pub struct XlaBackend {
+    rt: Runtime,
+}
+
+impl XlaBackend {
+    /// Open the artifact directory (`make artifacts` output).
+    pub fn new(artifact_dir: &str) -> Result<XlaBackend> {
+        Ok(XlaBackend { rt: Runtime::new(artifact_dir)? })
+    }
+
+    /// Hidden width as the manifest encodes it (0 for 1-layer models).
+    fn hidden_of(params: &GcnParams) -> usize {
+        if params.layers() > 1 {
+            params.ws[0].cols
+        } else {
+            0
+        }
+    }
+
+    fn bucket(&self, kind: ArtifactKind, batch: &Batch, params: &GcnParams) -> Result<BucketKey> {
+        let fdim = batch.features.cols;
+        let hidden = Self::hidden_of(params);
+        self.rt
+            .find_bucket(kind, params.layers(), fdim, hidden, batch.num_classes, batch.len())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no {kind:?} artifact bucket for layers={} n>={} f={} h={} c={}; \
+                     regenerate with `make artifacts` (see python/compile/aot.py --help)",
+                    params.layers(),
+                    batch.len(),
+                    fdim,
+                    hidden,
+                    batch.num_classes
+                )
+            })
+    }
+
+    /// Common input marshalling: padded adj, x (+ optional y/mask).
+    fn marshal(
+        &self,
+        batch: &Batch,
+        params: &GcnParams,
+        bucket_nodes: usize,
+        with_labels: bool,
+    ) -> Result<Vec<xla::Literal>> {
+        let n = batch.len();
+        let np = bucket_nodes;
+        let mut inputs = Vec::with_capacity(4 + params.layers());
+
+        let adj = batch.adj.to_dense(np);
+        inputs.push(literal_2d(adj.data(), np, np)?);
+
+        let x = batch.features.pad_to(np, batch.features.cols);
+        inputs.push(literal_2d(x.data(), np, x.cols)?);
+
+        if with_labels {
+            let c = batch.num_classes;
+            let mut y = Matrix::zeros(np, c);
+            for i in 0..n {
+                y[(i, batch.labels[i] as usize)] = 1.0;
+            }
+            inputs.push(literal_2d(y.data(), np, c)?);
+            let mut mask = vec![0f32; np];
+            for i in 0..n {
+                if batch.loss_mask[i] {
+                    mask[i] = 1.0;
+                }
+            }
+            inputs.push(literal_1d(&mask));
+        }
+
+        for w in &params.ws {
+            inputs.push(literal_2d(w.data(), w.rows, w.cols)?);
+        }
+        Ok(inputs)
+    }
+}
+
+impl Backend for XlaBackend {
+    fn train_step(&mut self, batch: &Batch, params: &GcnParams) -> Result<StepOutput> {
+        let key = self.bucket(ArtifactKind::Train, batch, params)?;
+        let inputs = self.marshal(batch, params, key.nodes, true)?;
+        let outs = self.rt.execute(&key, &inputs)?;
+        if outs.len() != 1 + params.layers() {
+            return Err(anyhow!("train artifact returned {} outputs, want {}", outs.len(), 1 + params.layers()));
+        }
+        let loss = outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss fetch: {e:?}"))?[0];
+        let mut grads = Vec::with_capacity(params.layers());
+        for (i, w) in params.ws.iter().enumerate() {
+            let data = outs[i + 1]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("grad {i} fetch: {e:?}"))?;
+            grads.push(Matrix::from_vec(w.rows, w.cols, data));
+        }
+        Ok(StepOutput { loss, grads })
+    }
+
+    fn predict(&mut self, batch: &Batch, params: &GcnParams) -> Result<Vec<u32>> {
+        let key = self.bucket(ArtifactKind::Predict, batch, params)?;
+        let inputs = self.marshal(batch, params, key.nodes, false)?;
+        let outs = self.rt.execute(&key, &inputs)?;
+        let logits = outs
+            .first()
+            .ok_or_else(|| anyhow!("predict artifact returned no outputs"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits fetch: {e:?}"))?;
+        let full = Matrix::from_vec(key.nodes, batch.num_classes, logits);
+        Ok(full.crop(batch.len(), batch.num_classes).argmax_rows())
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

@@ -1,0 +1,341 @@
+//! Minibatch samplers for the baseline methods: GraphSAGE uniform
+//! neighbour expansion and the three GraphSAINT strategies
+//! (node / edge / random-walk). Each draw induces a subgraph over the
+//! sampled nodes and builds a training [`Batch`] from it.
+
+use crate::coordinator::{batch_from_subgraph, BatchSource};
+use crate::datasets::Dataset;
+use crate::graph::Subgraph;
+use crate::model::Batch;
+use crate::rng::Rng;
+use std::sync::Arc;
+
+/// Which sampling rule to apply.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SamplerKind {
+    /// GraphSAGE: uniform roots + `fanout` neighbours per hop.
+    Sage { fanout: usize },
+    /// GraphSAINT node sampler: roots drawn with prob ∝ degree.
+    SaintNode,
+    /// GraphSAINT edge sampler: edges drawn with prob ∝ 1/du + 1/dv.
+    SaintEdge,
+    /// GraphSAINT random-walk sampler: uniform roots + walks.
+    SaintRw { walk_len: usize },
+    /// Jiang & Rumi (2021): communication-efficient sampling — local
+    /// nodes get sampling weight 1, remote-adjacent boundary nodes get
+    /// `remote_weight < 1`, shrinking the expected cross-processor
+    /// traffic (related-work baseline, used by the ablation harness).
+    LocalityAware { remote_weight: f64 },
+}
+
+/// Per-worker sampler parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplerSpec {
+    pub kind: SamplerKind,
+    /// Target nodes per batch (paper's `b`).
+    pub batch_size: usize,
+    pub batches_per_epoch: usize,
+    pub seed: u64,
+}
+
+/// Draw one sampled batch from `shard` (node ids restricted to the
+/// worker's shard — locality-aware sampling).
+pub fn sample_batch(dataset: &Dataset, shard: &[u32], spec: &SamplerSpec, rng: &mut Rng, id: u64) -> Batch {
+    let nodes = match spec.kind {
+        SamplerKind::Sage { fanout } => sample_sage(dataset, shard, spec.batch_size, fanout, rng),
+        SamplerKind::SaintNode => sample_saint_node(dataset, shard, spec.batch_size, rng),
+        SamplerKind::SaintEdge => sample_saint_edge(dataset, shard, spec.batch_size, rng),
+        SamplerKind::SaintRw { walk_len } => {
+            sample_saint_rw(dataset, shard, spec.batch_size, walk_len, rng)
+        }
+        SamplerKind::LocalityAware { remote_weight } => {
+            sample_locality_aware(dataset, shard, spec.batch_size, remote_weight, rng)
+        }
+    };
+    let sub = Subgraph::induce(&dataset.graph, &nodes);
+    // wrap in an AugmentedSubgraph-shaped view: no replicas
+    let aug = crate::augment::AugmentedSubgraph {
+        part: 0,
+        is_replica: vec![false; sub.len()],
+        sub,
+        candidate_importance: Vec::new(),
+        replicas: Vec::new(),
+        walks_used: 0,
+    };
+    batch_from_subgraph(dataset, &aug, id)
+}
+
+fn shard_set(shard: &[u32]) -> std::collections::HashSet<u32> {
+    shard.iter().copied().collect()
+}
+
+/// GraphSAGE: uniform roots; expand each hop with ≤ `fanout` uniform
+/// neighbours (within the shard); union of all hops is the batch.
+fn sample_sage(dataset: &Dataset, shard: &[u32], b: usize, fanout: usize, rng: &mut Rng) -> Vec<u32> {
+    let local = shard_set(shard);
+    let n_roots = b.min(shard.len()).max(1);
+    let mut nodes: Vec<u32> = rng
+        .sample_indices(shard.len(), n_roots)
+        .into_iter()
+        .map(|i| shard[i])
+        .collect();
+    let mut frontier = nodes.clone();
+    let mut seen: std::collections::HashSet<u32> = nodes.iter().copied().collect();
+    // 2 hops of expansion (standard SAGE depth)
+    for _ in 0..2 {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            let nbrs = dataset.graph.neighbors(v as usize);
+            let take = fanout.min(nbrs.len());
+            for i in rng.sample_indices(nbrs.len(), take) {
+                let t = nbrs[i];
+                if local.contains(&t) && seen.insert(t) {
+                    next.push(t);
+                    nodes.push(t);
+                }
+            }
+        }
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    nodes
+}
+
+/// GraphSAINT node sampler: `b` draws with replacement, prob ∝ degree.
+fn sample_saint_node(dataset: &Dataset, shard: &[u32], b: usize, rng: &mut Rng) -> Vec<u32> {
+    // cumulative degree weights over the shard
+    let mut cum: Vec<f64> = Vec::with_capacity(shard.len());
+    let mut acc = 0.0;
+    for &v in shard {
+        acc += dataset.graph.degree(v as usize) as f64 + 1.0;
+        cum.push(acc);
+    }
+    let mut out = Vec::with_capacity(b);
+    for _ in 0..b {
+        let t = rng.gen_f64() * acc;
+        let i = cum.partition_point(|&c| c < t).min(shard.len() - 1);
+        out.push(shard[i]);
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// GraphSAINT edge sampler: pick ~b/2 shard-internal edges with prob
+/// ∝ 1/du + 1/dv; batch = endpoint union.
+fn sample_saint_edge(dataset: &Dataset, shard: &[u32], b: usize, rng: &mut Rng) -> Vec<u32> {
+    let local = shard_set(shard);
+    let edges: Vec<(u32, u32)> = shard
+        .iter()
+        .flat_map(|&u| {
+            dataset
+                .graph
+                .neighbors(u as usize)
+                .iter()
+                .filter(move |&&v| u < v)
+                .filter(|&&v| local.contains(&v))
+                .map(move |&v| (u, v))
+        })
+        .collect();
+    if edges.is_empty() {
+        return shard.iter().take(b.max(2)).copied().collect();
+    }
+    let weights: Vec<f64> = edges
+        .iter()
+        .map(|&(u, v)| {
+            1.0 / dataset.graph.degree(u as usize).max(1) as f64
+                + 1.0 / dataset.graph.degree(v as usize).max(1) as f64
+        })
+        .collect();
+    let mut out = Vec::with_capacity(b);
+    for _ in 0..(b / 2).max(1) {
+        let (u, v) = edges[rng.choose_weighted(&weights)];
+        out.push(u);
+        out.push(v);
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// GraphSAINT RW sampler: `b / (walk_len+1)` uniform roots, one walk
+/// each (within the shard where possible).
+fn sample_saint_rw(dataset: &Dataset, shard: &[u32], b: usize, walk_len: usize, rng: &mut Rng) -> Vec<u32> {
+    let local = shard_set(shard);
+    let n_roots = (b / (walk_len + 1)).max(1).min(shard.len());
+    let mut out: Vec<u32> = Vec::with_capacity(b);
+    for i in rng.sample_indices(shard.len(), n_roots) {
+        let mut cur = shard[i];
+        out.push(cur);
+        for _ in 0..walk_len {
+            let nbrs: Vec<u32> = dataset
+                .graph
+                .neighbors(cur as usize)
+                .iter()
+                .copied()
+                .filter(|t| local.contains(t))
+                .collect();
+            if nbrs.is_empty() {
+                break;
+            }
+            cur = nbrs[rng.gen_range(nbrs.len())];
+            out.push(cur);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Jiang et al. locality-aware sampling: down-weight nodes whose
+/// neighbourhood leaves the shard (they would trigger remote fetches).
+fn sample_locality_aware(
+    dataset: &Dataset,
+    shard: &[u32],
+    b: usize,
+    remote_weight: f64,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let local = shard_set(shard);
+    let weights: Vec<f64> = shard
+        .iter()
+        .map(|&v| {
+            let has_remote = dataset
+                .graph
+                .neighbors(v as usize)
+                .iter()
+                .any(|t| !local.contains(t));
+            if has_remote {
+                remote_weight
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    let mut out = Vec::with_capacity(b);
+    for _ in 0..b.min(shard.len() * 2) {
+        out.push(shard[rng.choose_weighted(&weights)]);
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// [`BatchSource`] drawing fresh sampled batches each epoch
+/// (deterministic in `(epoch, round, seed)` so eval reuses epoch 0).
+pub struct SampledSource {
+    dataset: Arc<Dataset>,
+    shard: Vec<u32>,
+    spec: SamplerSpec,
+}
+
+impl SampledSource {
+    pub fn new(dataset: Arc<Dataset>, shard: Vec<u32>, spec: SamplerSpec) -> Self {
+        SampledSource { dataset, shard, spec }
+    }
+}
+
+impl BatchSource for SampledSource {
+    fn batches_per_epoch(&self) -> usize {
+        self.spec.batches_per_epoch
+    }
+
+    fn batch(&mut self, epoch: usize, round: usize) -> Option<(Arc<Batch>, f64)> {
+        if round >= self.spec.batches_per_epoch || self.shard.is_empty() {
+            return None;
+        }
+        // key randomness on (seed, epoch, round) for replayability
+        let mut rng = Rng::seed_from_u64(
+            self.spec.seed ^ (epoch as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (round as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+        );
+        let id = (epoch as u64) << 32 | round as u64;
+        let batch = sample_batch(&self.dataset, &self.shard, &self.spec, &mut rng, id);
+        Some((Arc::new(batch), 1.0))
+    }
+
+    fn resident_bytes(&self) -> usize {
+        // the worker holds its shard's features + adjacency resident
+        let f = self.dataset.feature_dim() * 4;
+        self.shard.len() * (f + 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SyntheticSpec;
+
+    fn fixture() -> (Arc<Dataset>, Vec<u32>) {
+        let d = Arc::new(SyntheticSpec::tiny().generate(2));
+        let shard: Vec<u32> = (0..d.num_nodes() as u32).filter(|v| v % 2 == 0).collect();
+        (d, shard)
+    }
+
+    #[test]
+    fn all_samplers_produce_valid_batches() {
+        let (d, shard) = fixture();
+        for kind in [
+            SamplerKind::Sage { fanout: 5 },
+            SamplerKind::SaintNode,
+            SamplerKind::SaintEdge,
+            SamplerKind::SaintRw { walk_len: 2 },
+        ] {
+            let spec = SamplerSpec { kind, batch_size: 60, batches_per_epoch: 2, seed: 1 };
+            let mut rng = Rng::seed_from_u64(1);
+            let b = sample_batch(&d, &shard, &spec, &mut rng, 0);
+            b.validate().unwrap();
+            assert!(!b.is_empty(), "{kind:?} empty batch");
+            assert!(b.len() <= 3 * 60 + 60, "{kind:?} oversize {}", b.len());
+        }
+    }
+
+    #[test]
+    fn saint_node_prefers_high_degree() {
+        let (d, _) = fixture();
+        let shard: Vec<u32> = (0..d.num_nodes() as u32).collect();
+        let mut rng = Rng::seed_from_u64(4);
+        let mut picked = vec![0usize; d.num_nodes()];
+        for _ in 0..200 {
+            for v in sample_saint_node(&d, &shard, 30, &mut rng) {
+                picked[v as usize] += 1;
+            }
+        }
+        // correlation: mean degree of picked nodes > global mean degree
+        let deg = |v: usize| d.graph.degree(v) as f64;
+        let total_picks: usize = picked.iter().sum();
+        let mean_picked: f64 =
+            (0..d.num_nodes()).map(|v| deg(v) * picked[v] as f64).sum::<f64>() / total_picks as f64;
+        let mean_all: f64 = (0..d.num_nodes()).map(deg).sum::<f64>() / d.num_nodes() as f64;
+        assert!(mean_picked > mean_all, "picked {mean_picked} vs all {mean_all}");
+    }
+
+    #[test]
+    fn sampled_source_is_replayable() {
+        let (d, shard) = fixture();
+        let spec = SamplerSpec {
+            kind: SamplerKind::SaintRw { walk_len: 2 },
+            batch_size: 40,
+            batches_per_epoch: 3,
+            seed: 7,
+        };
+        let mut s1 = SampledSource::new(d.clone(), shard.clone(), spec);
+        let mut s2 = SampledSource::new(d, shard, spec);
+        let (a, _) = s1.batch(5, 1).unwrap();
+        let (b, _) = s2.batch(5, 1).unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.len(), b.len());
+        assert!(s1.batch(0, 3).is_none());
+    }
+
+    #[test]
+    fn rw_sampler_respects_shard() {
+        let (d, shard) = fixture();
+        let local: std::collections::HashSet<u32> = shard.iter().copied().collect();
+        let mut rng = Rng::seed_from_u64(9);
+        let nodes = sample_saint_rw(&d, &shard, 50, 3, &mut rng);
+        assert!(nodes.iter().all(|v| local.contains(v)));
+    }
+}

@@ -1,0 +1,153 @@
+//! Tiny criterion replacement (criterion is not in the offline
+//! registry): warmup + timed samples, mean/σ/min/max, markdown rows.
+//! Used by every target in `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    /// criterion-style one-liner.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  ({} samples)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.mean),
+            fmt_dur(self.max),
+            self.samples
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner: `warmup` untimed runs then `samples` timed runs.
+pub struct Bencher {
+    pub warmup: usize,
+    pub samples: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, samples: 5, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bencher { warmup, samples, results: Vec::new() }
+    }
+
+    /// Time `f`, which must return something observable (guards against
+    /// the optimizer deleting the body). Prints the summary line.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        let total: Duration = times.iter().sum();
+        let mean = total / times.len() as u32;
+        let var = times
+            .iter()
+            .map(|t| {
+                let d = t.as_secs_f64() - mean.as_secs_f64();
+                d * d
+            })
+            .sum::<f64>()
+            / times.len() as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples: times.len(),
+            mean,
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: *times.iter().min().unwrap(),
+            max: *times.iter().max().unwrap(),
+        };
+        println!("{}", stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All recorded stats.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Markdown table of every result.
+    pub fn markdown(&self) -> String {
+        let mut s = String::from("| benchmark | mean | min | max | samples |\n|---|---|---|---|---|\n");
+        for r in &self.results {
+            s.push_str(&format!(
+                "| {} | {} | {} | {} | {} |\n",
+                r.name,
+                fmt_dur(r.mean),
+                fmt_dur(r.min),
+                fmt_dur(r.max),
+                r.samples
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new(0, 3);
+        let s = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.mean.as_nanos() > 0);
+        assert_eq!(s.samples, 3);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn markdown_contains_rows() {
+        let mut b = Bencher::new(0, 1);
+        b.bench("x", || 1);
+        assert!(b.markdown().contains("| x |"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with("s"));
+    }
+}

@@ -1,0 +1,216 @@
+//! `gad` command-line interface (hand-rolled — clap is not in the
+//! offline registry).
+//!
+//! ```text
+//! gad <command> [--flag value] [--switch]
+//!
+//! commands:
+//!   stats                     Table 1 dataset statistics
+//!   partition                 partition quality report
+//!   augment                   augmentation report for one dataset
+//!   train                     one training run (gad or a baseline)
+//!   table2 table3 table4      regenerate the paper's tables
+//!   fig5 fig6 fig7 fig8 fig9  regenerate the paper's figures (CSV)
+//!   all                       every table + figure (writes results/)
+//! ```
+
+pub mod experiments;
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `args` (excluding argv[0]).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // `--flag value` or bare `--switch`
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.switches.push(name.to_string());
+                    i += 1;
+                }
+            } else if out.cmd.is_empty() {
+                out.cmd = a.clone();
+                i += 1;
+            } else {
+                return Err(anyhow!("unexpected positional argument '{a}'"));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flags.get(name).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} wants an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} wants a number, got '{v}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+/// Shared experiment options extracted from flags.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    pub seed: u64,
+    pub fast: bool,
+    pub out_dir: String,
+    pub backend: crate::backend::BackendKind,
+    pub artifact_dir: String,
+}
+
+impl RunOpts {
+    pub fn from_args(args: &Args) -> Result<RunOpts> {
+        Ok(RunOpts {
+            seed: args.get_usize("seed", 42)? as u64,
+            fast: args.has("fast"),
+            out_dir: args.get("out-dir", "results").to_string(),
+            backend: args.get("backend", "native").parse().map_err(|e: String| anyhow!(e))?,
+            artifact_dir: args.get("artifacts", "artifacts").to_string(),
+        })
+    }
+
+    /// Dataset size scale: fast mode shrinks everything 8x.
+    pub fn scale(&self) -> f64 {
+        if self.fast {
+            0.125
+        } else {
+            1.0
+        }
+    }
+
+    /// Epoch budget scale.
+    pub fn epochs(&self, full: usize) -> usize {
+        if self.fast {
+            (full / 5).max(5)
+        } else {
+            full
+        }
+    }
+}
+
+/// Top-level dispatch; returns process exit code.
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let opts = RunOpts::from_args(&args)?;
+    match args.cmd.as_str() {
+        "stats" => experiments::table1_stats(&args, &opts),
+        "partition" => experiments::partition_report(&args, &opts),
+        "augment" => experiments::augment_report(&args, &opts),
+        "train" => experiments::train_once(&args, &opts),
+        "table2" => experiments::table2_accuracy(&args, &opts),
+        "table3" => experiments::table3_stability(&args, &opts),
+        "table4" => experiments::table4_augmentation(&args, &opts),
+        "fig5" => experiments::fig5_curves(&args, &opts),
+        "fig6" => experiments::fig6_time(&args, &opts),
+        "fig7" => experiments::fig7_scaling(&args, &opts),
+        "fig8" => experiments::fig8_partitions(&args, &opts),
+        "fig9" => experiments::fig9_consensus(&args, &opts),
+        "ablate" => experiments::ablation(&args, &opts),
+        "all" => experiments::run_all(&args, &opts),
+        "" | "help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}'\n{HELP}")),
+    }
+}
+
+const HELP: &str = "\
+gad — Graph-Augmentation-based Distributed GCN (paper reproduction)
+
+usage: gad <command> [flags]
+
+commands
+  stats       Table 1 dataset statistics
+  partition   partition quality (edge cut, balance) for one dataset
+  augment     augmentation report (replicas, traffic) for one dataset
+  train       one training run
+  table2      accuracy of the 7 methods on the 4 datasets
+  table3      accuracy stability across workers x layers (pubmed)
+  table4      augmentation impact: accuracy / memory / comm
+  fig5        accuracy-vs-epoch curves (CSV per dataset)
+  fig6        convergence-time comparison
+  fig7        training time vs workers x layers
+  fig8        loss convergence vs partition count, aug on/off
+  fig9        weighted vs plain consensus loss curves
+  ablate      design-choice ablations (+ crash-fault run)
+  all         everything above into --out-dir
+
+common flags
+  --dataset <cora|pubmed|flickr|reddit|tiny>   (default cora)
+  --method  <gcn|sage|clustergcn|saint-node|saint-edge|saint-rw|gad>
+  --workers N --partitions N --layers N --hidden N --epochs N
+  --lr F --alpha F --seed N --backend <native|xla> --artifacts DIR
+  --consensus <plain|weighted> --no-augment
+  --fast         8x-smaller datasets, 5x fewer epochs
+  --out-dir DIR  where results/*.md and *.csv land (default results)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_command_flags_switches() {
+        let a = Args::parse(&argv("train --dataset cora --fast --epochs 10")).unwrap();
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.get("dataset", "x"), "cora");
+        assert_eq!(a.get_usize("epochs", 1).unwrap(), 10);
+        assert!(a.has("fast"));
+        assert!(!a.has("slow"));
+    }
+
+    #[test]
+    fn parse_rejects_double_positional() {
+        assert!(Args::parse(&argv("train extra")).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv("stats")).unwrap();
+        let o = RunOpts::from_args(&a).unwrap();
+        assert_eq!(o.seed, 42);
+        assert!(!o.fast);
+        assert_eq!(o.scale(), 1.0);
+    }
+
+    #[test]
+    fn fast_scales() {
+        let a = Args::parse(&argv("stats --fast")).unwrap();
+        let o = RunOpts::from_args(&a).unwrap();
+        assert_eq!(o.scale(), 0.125);
+        assert_eq!(o.epochs(100), 20);
+    }
+}

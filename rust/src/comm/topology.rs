@@ -1,0 +1,138 @@
+//! Interconnect topology model.
+//!
+//! The paper's testbed is "four 1080 Ti with **no NVLink**" — i.e. a
+//! star over PCIe through host memory. This module models the three
+//! topologies a deployment would pick from and converts the byte
+//! ledger into estimated network time, which is what separates Fig. 7's
+//! flattening from ideal linear scaling.
+
+/// Interconnect shape between `n` workers and the leader.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Every worker exchanges with the leader over a shared root link
+    /// (PCIe-without-NVLink, the paper's testbed).
+    Star,
+    /// Ring all-reduce: 2(n-1)/n of the payload crosses each of n links
+    /// in parallel.
+    Ring,
+    /// Dedicated full-mesh links; leader exchange fully parallel.
+    FullMesh,
+}
+
+impl std::str::FromStr for Topology {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "star" => Ok(Topology::Star),
+            "ring" => Ok(Topology::Ring),
+            "mesh" | "fullmesh" => Ok(Topology::FullMesh),
+            other => Err(format!("unknown topology '{other}' (star|ring|mesh)")),
+        }
+    }
+}
+
+/// Link parameters (defaults ≈ PCIe 3.0 x16: 12 GB/s, 5 µs latency).
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    pub bandwidth_bytes_per_sec: f64,
+    pub latency_sec: f64,
+}
+
+impl Default for LinkSpec {
+    fn default() -> Self {
+        LinkSpec { bandwidth_bytes_per_sec: 12.0e9, latency_sec: 5.0e-6 }
+    }
+}
+
+/// Estimated wall-clock seconds for one synchronous gradient exchange
+/// of `payload` bytes per worker across `workers` workers.
+pub fn sync_time_sec(topology: Topology, link: LinkSpec, workers: usize, payload: u64) -> f64 {
+    if workers <= 1 {
+        return 0.0;
+    }
+    let n = workers as f64;
+    let p = payload as f64;
+    match topology {
+        // all up-loads + all down-loads serialise over the root link
+        Topology::Star => 2.0 * n * p / link.bandwidth_bytes_per_sec + 2.0 * link.latency_sec,
+        // ring all-reduce: 2(n-1) steps, each moving p/n per link in parallel
+        Topology::Ring => {
+            2.0 * (n - 1.0) * (p / n) / link.bandwidth_bytes_per_sec
+                + 2.0 * (n - 1.0) * link.latency_sec
+        }
+        // parallel dedicated links: one up + one down
+        Topology::FullMesh => 2.0 * p / link.bandwidth_bytes_per_sec + 2.0 * link.latency_sec,
+    }
+}
+
+/// Estimated network seconds for a whole run.
+pub fn run_network_time_sec(
+    topology: Topology,
+    link: LinkSpec,
+    workers: usize,
+    payload_per_round: u64,
+    rounds: usize,
+    feature_bytes_total: u64,
+) -> f64 {
+    let grads = sync_time_sec(topology, link, workers, payload_per_round) * rounds as f64;
+    // feature fetches: pairwise transfers, overlap across workers on
+    // non-star topologies
+    let feat = match topology {
+        Topology::Star => feature_bytes_total as f64 / link.bandwidth_bytes_per_sec,
+        _ => feature_bytes_total as f64 / link.bandwidth_bytes_per_sec / workers.max(1) as f64,
+    };
+    grads + feat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_worker_costs_nothing() {
+        for t in [Topology::Star, Topology::Ring, Topology::FullMesh] {
+            assert_eq!(sync_time_sec(t, LinkSpec::default(), 1, 1 << 20), 0.0);
+        }
+    }
+
+    #[test]
+    fn star_scales_linearly_with_workers() {
+        let l = LinkSpec::default();
+        let t2 = sync_time_sec(Topology::Star, l, 2, 1 << 20);
+        let t8 = sync_time_sec(Topology::Star, l, 8, 1 << 20);
+        assert!(t8 > 3.5 * t2, "t2 {t2} t8 {t8}");
+    }
+
+    #[test]
+    fn ring_beats_star_at_scale() {
+        let l = LinkSpec::default();
+        let payload = 100u64 << 20;
+        let star = sync_time_sec(Topology::Star, l, 8, payload);
+        let ring = sync_time_sec(Topology::Ring, l, 8, payload);
+        assert!(ring < star, "ring {ring} star {star}");
+    }
+
+    #[test]
+    fn mesh_is_worker_count_independent() {
+        let l = LinkSpec::default();
+        let a = sync_time_sec(Topology::FullMesh, l, 2, 1 << 20);
+        let b = sync_time_sec(Topology::FullMesh, l, 16, 1 << 20);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_topologies() {
+        assert_eq!("star".parse::<Topology>().unwrap(), Topology::Star);
+        assert_eq!("ring".parse::<Topology>().unwrap(), Topology::Ring);
+        assert_eq!("mesh".parse::<Topology>().unwrap(), Topology::FullMesh);
+        assert!("torus".parse::<Topology>().is_err());
+    }
+
+    #[test]
+    fn run_time_accumulates_rounds() {
+        let l = LinkSpec::default();
+        let one = run_network_time_sec(Topology::Star, l, 4, 1 << 20, 1, 0);
+        let ten = run_network_time_sec(Topology::Star, l, 4, 1 << 20, 10, 0);
+        assert!((ten - 10.0 * one).abs() < 1e-9);
+    }
+}

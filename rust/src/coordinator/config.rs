@@ -1,0 +1,122 @@
+//! Run configuration.
+
+use crate::backend::BackendKind;
+
+/// Plain (Eq. 11) vs ζ-weighted (Eq. 15) gradient aggregation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConsensusMode {
+    Plain,
+    Weighted,
+}
+
+impl std::str::FromStr for ConsensusMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "plain" => Ok(ConsensusMode::Plain),
+            "weighted" => Ok(ConsensusMode::Weighted),
+            other => Err(format!("unknown consensus '{other}' (plain|weighted)")),
+        }
+    }
+}
+
+/// Everything a training run needs besides the dataset.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Subgraph count `k` of GAD-Partition.
+    pub partitions: usize,
+    /// Worker (processor) count `n`.
+    pub workers: usize,
+    /// GCN depth `l` (= augmentation walk length, Property 1).
+    pub layers: usize,
+    /// Hidden width `h`.
+    pub hidden: usize,
+    /// Learning rate η.
+    pub lr: f32,
+    /// Epoch budget.
+    pub epochs: usize,
+    /// Enable GAD-Partition augmentation.
+    pub augment: bool,
+    /// Replication coefficient α (Eq. 6).
+    pub alpha: f64,
+    /// Gradient aggregation rule.
+    pub consensus: ConsensusMode,
+    /// Compute engine.
+    pub backend: BackendKind,
+    /// Artifact directory for [`BackendKind::Xla`].
+    pub artifact_dir: String,
+    /// Convergence tolerance / patience (see `CurveRecorder`).
+    pub conv_tol: f32,
+    pub conv_patience: usize,
+    /// Stop at convergence instead of exhausting `epochs`.
+    pub stop_on_converge: bool,
+    pub seed: u64,
+    /// Print an epoch line every N epochs (0 = silent).
+    pub log_every: usize,
+    /// Learning-rate schedule applied on top of `lr`.
+    pub schedule: crate::model::LrSchedule,
+    /// Injected failures (crashes / stragglers); empty = healthy run.
+    pub faults: super::FaultPlan,
+    /// Interconnect model used for the estimated-network-time report.
+    pub topology: crate::comm::Topology,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            partitions: 8,
+            workers: 4,
+            layers: 2,
+            hidden: 128,
+            lr: 0.01,
+            epochs: 100,
+            augment: true,
+            alpha: 0.01,
+            consensus: ConsensusMode::Weighted,
+            backend: BackendKind::Native,
+            artifact_dir: "artifacts".to_string(),
+            conv_tol: 0.002,
+            conv_patience: 10,
+            stop_on_converge: false,
+            seed: 0,
+            log_every: 0,
+            schedule: crate::model::LrSchedule::Constant,
+            faults: super::FaultPlan::none(),
+            topology: crate::comm::Topology::Star,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// The paper's per-dataset best settings (§4.2).
+    pub fn paper_best(dataset: &str) -> TrainConfig {
+        let (layers, hidden) = match dataset {
+            "cora" => (3, 128),
+            "pubmed" => (2, 256),
+            "flickr" | "flicker" => (4, 128),
+            "reddit" => (3, 256),
+            _ => (2, 128),
+        };
+        TrainConfig { layers, hidden, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consensus_parse() {
+        assert_eq!("plain".parse::<ConsensusMode>().unwrap(), ConsensusMode::Plain);
+        assert_eq!("weighted".parse::<ConsensusMode>().unwrap(), ConsensusMode::Weighted);
+        assert!("x".parse::<ConsensusMode>().is_err());
+    }
+
+    #[test]
+    fn paper_best_table() {
+        assert_eq!(TrainConfig::paper_best("cora").layers, 3);
+        assert_eq!(TrainConfig::paper_best("pubmed").hidden, 256);
+        assert_eq!(TrainConfig::paper_best("flickr").layers, 4);
+        assert_eq!(TrainConfig::paper_best("reddit").hidden, 256);
+    }
+}

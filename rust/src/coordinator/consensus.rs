@@ -1,0 +1,82 @@
+//! Global consensus: gradient aggregation across workers.
+//!
+//! Plain (Definition 4, Eq. 11): `∇W = (1/n) Σ ∇W_i`.
+//! Weighted (Eq. 15): `∇Ŵ = Σ ζ_i ∇W_i / Σ ζ_i` — subgraphs with lower
+//! variance (higher ζ) steer the update.
+
+use crate::tensor::Matrix;
+
+/// Aggregate per-worker gradients with the given weights (pass all-1s
+/// for plain consensus). Workers that contributed nothing this round
+/// are passed with weight 0. Panics on shape mismatch; returns zeros if
+/// every weight is 0 (idle round).
+pub fn aggregate_gradients(grads: &[Vec<Matrix>], weights: &[f64]) -> Vec<Matrix> {
+    assert_eq!(grads.len(), weights.len());
+    assert!(!grads.is_empty());
+    let shapes: Vec<(usize, usize)> = grads[0].iter().map(|m| (m.rows, m.cols)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut out: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+    if total <= 0.0 {
+        return out;
+    }
+    for (g, &w) in grads.iter().zip(weights) {
+        if w == 0.0 {
+            continue;
+        }
+        assert_eq!(g.len(), out.len(), "gradient layer count mismatch");
+        let scale = (w / total) as f32;
+        for (acc, m) in out.iter_mut().zip(g) {
+            assert_eq!((m.rows, m.cols), (acc.rows, acc.cols), "gradient shape mismatch");
+            for (a, v) in acc.data_mut().iter_mut().zip(m.data()) {
+                *a += scale * v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad(v: f32) -> Vec<Matrix> {
+        vec![Matrix::from_vec(1, 2, vec![v, 2.0 * v])]
+    }
+
+    #[test]
+    fn plain_is_mean() {
+        let gs = vec![grad(1.0), grad(3.0)];
+        let agg = aggregate_gradients(&gs, &[1.0, 1.0]);
+        assert_eq!(agg[0].data(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn weighted_matches_eq15() {
+        let gs = vec![grad(1.0), grad(3.0)];
+        // ζ = (3, 1): ∇Ŵ = (3*1 + 1*3)/4 = 1.5
+        let agg = aggregate_gradients(&gs, &[3.0, 1.0]);
+        assert!((agg[0].data()[0] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_weight_worker_ignored() {
+        let gs = vec![grad(1.0), grad(100.0)];
+        let agg = aggregate_gradients(&gs, &[1.0, 0.0]);
+        assert_eq!(agg[0].data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn all_zero_weights_give_zero_grad() {
+        let gs = vec![grad(1.0)];
+        let agg = aggregate_gradients(&gs, &[0.0]);
+        assert_eq!(agg[0].data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn invariant_under_weight_scaling() {
+        let gs = vec![grad(1.0), grad(2.0), grad(5.0)];
+        let a = aggregate_gradients(&gs, &[1.0, 2.0, 3.0]);
+        let b = aggregate_gradients(&gs, &[10.0, 20.0, 30.0]);
+        assert!(a[0].allclose(&b[0], 1e-6));
+    }
+}

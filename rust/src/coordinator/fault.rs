@@ -1,0 +1,121 @@
+//! Failure injection: worker crashes and stragglers.
+//!
+//! The paper's testbed assumes four healthy GPUs; a production
+//! coordinator must survive less. The [`FaultPlan`] injects faults at
+//! configured epochs and the trainer degrades gracefully:
+//!
+//! * **crash** — the worker stops responding; the leader detects it on
+//!   the next collect, drops it from the consensus (weight 0 forever),
+//!   and redistributes nothing (its subgraphs' gradient signal is lost,
+//!   exactly like a synchronous data-parallel job running with a
+//!   reduced denominator — accuracy degrades smoothly because every
+//!   replica still applies the same consensus updates).
+//! * **straggler** — the worker sleeps before each step; synchronous
+//!   rounds stretch to the slowest worker, which is precisely the
+//!   effect Fig. 7's flattening curve attributes to "communication and
+//!   blocking".
+
+use crate::rng::Rng;
+
+/// A single injected fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Worker exits permanently at the start of `epoch`.
+    Crash { worker: usize, epoch: usize },
+    /// Worker sleeps `millis` before every step from `epoch` on.
+    Straggle { worker: usize, epoch: usize, millis: u64 },
+}
+
+/// The set of faults a run injects.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// One random crash in the first half of the run (chaos testing).
+    pub fn random_crash(workers: usize, epochs: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        FaultPlan {
+            faults: vec![Fault::Crash {
+                worker: rng.gen_range(workers),
+                epoch: 1 + rng.gen_range((epochs / 2).max(1)),
+            }],
+        }
+    }
+
+    /// True if `worker` is crashed at (or before) `epoch`.
+    pub fn crashed(&self, worker: usize, epoch: usize) -> bool {
+        self.faults.iter().any(|f| {
+            matches!(f, Fault::Crash { worker: w, epoch: e } if *w == worker && epoch >= *e)
+        })
+    }
+
+    /// Sleep to inject for `worker` at `epoch`, if any.
+    pub fn straggle_ms(&self, worker: usize, epoch: usize) -> Option<u64> {
+        self.faults.iter().find_map(|f| match f {
+            Fault::Straggle { worker: w, epoch: e, millis } if *w == worker && epoch >= *e => {
+                Some(*millis)
+            }
+            _ => None,
+        })
+    }
+
+    /// Workers still alive at `epoch`.
+    pub fn alive_workers(&self, workers: usize, epoch: usize) -> usize {
+        (0..workers).filter(|&w| !self.crashed(w, epoch)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_is_permanent() {
+        let p = FaultPlan { faults: vec![Fault::Crash { worker: 1, epoch: 5 }] };
+        assert!(!p.crashed(1, 4));
+        assert!(p.crashed(1, 5));
+        assert!(p.crashed(1, 100));
+        assert!(!p.crashed(0, 100));
+    }
+
+    #[test]
+    fn straggler_from_epoch() {
+        let p = FaultPlan {
+            faults: vec![Fault::Straggle { worker: 2, epoch: 3, millis: 50 }],
+        };
+        assert_eq!(p.straggle_ms(2, 2), None);
+        assert_eq!(p.straggle_ms(2, 3), Some(50));
+        assert_eq!(p.straggle_ms(0, 9), None);
+    }
+
+    #[test]
+    fn alive_count() {
+        let p = FaultPlan {
+            faults: vec![
+                Fault::Crash { worker: 0, epoch: 2 },
+                Fault::Crash { worker: 3, epoch: 7 },
+            ],
+        };
+        assert_eq!(p.alive_workers(4, 0), 4);
+        assert_eq!(p.alive_workers(4, 2), 3);
+        assert_eq!(p.alive_workers(4, 7), 2);
+    }
+
+    #[test]
+    fn random_crash_in_range() {
+        let p = FaultPlan::random_crash(4, 20, 9);
+        match p.faults[0] {
+            Fault::Crash { worker, epoch } => {
+                assert!(worker < 4);
+                assert!((1..=10).contains(&epoch));
+            }
+            _ => panic!("expected crash"),
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Subgraph loading (paper §3.2.3): deal augmented subgraphs to
+//! processors so node counts stay balanced — iterate subgraphs
+//! (largest first) and hand each to the currently least-loaded worker.
+
+/// `sizes[i]` = node count of subgraph `i`; returns, per worker, the
+/// list of subgraph indices it owns.
+pub fn allocate_subgraphs(sizes: &[usize], workers: usize) -> Vec<Vec<usize>> {
+    assert!(workers > 0);
+    let mut order: Vec<usize> = (0..sizes.len()).collect();
+    // largest-first (LPT) gives the classic 4/3-approx of makespan
+    order.sort_by_key(|&i| std::cmp::Reverse(sizes[i]));
+    let mut load = vec![0usize; workers];
+    let mut owned: Vec<Vec<usize>> = vec![Vec::new(); workers];
+    for i in order {
+        let w = (0..workers).min_by_key(|&w| (load[w], w)).unwrap();
+        load[w] += sizes[i];
+        owned[w].push(i);
+    }
+    // deterministic round order within each worker
+    for o in &mut owned {
+        o.sort_unstable();
+    }
+    owned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_subgraphs_once() {
+        let sizes = [10, 20, 30, 40, 50];
+        let alloc = allocate_subgraphs(&sizes, 2);
+        let mut all: Vec<usize> = alloc.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn balances_loads() {
+        let sizes = [50, 40, 30, 20, 10];
+        let alloc = allocate_subgraphs(&sizes, 2);
+        let load = |w: &Vec<usize>| w.iter().map(|&i| sizes[i]).sum::<usize>();
+        let (a, b) = (load(&alloc[0]), load(&alloc[1]));
+        assert!((a as i64 - b as i64).abs() <= 10, "loads {a} vs {b}");
+    }
+
+    #[test]
+    fn more_workers_than_subgraphs() {
+        let alloc = allocate_subgraphs(&[5, 5], 4);
+        let used: usize = alloc.iter().filter(|w| !w.is_empty()).count();
+        assert_eq!(used, 2);
+    }
+
+    #[test]
+    fn single_worker_gets_everything() {
+        let alloc = allocate_subgraphs(&[1, 2, 3], 1);
+        assert_eq!(alloc[0], vec![0, 1, 2]);
+    }
+}

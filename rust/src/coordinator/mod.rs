@@ -1,0 +1,31 @@
+//! L3 coordinator: the distributed training loop (paper §3.3–3.4,
+//! Algorithm 2).
+//!
+//! Topology: one **leader** (the calling thread) plus `workers` worker
+//! threads. Each worker owns a private model replica, its own compute
+//! backend (constructed in-thread — PJRT handles are not `Send`) and a
+//! set of subgraph batches. Training proceeds in synchronous rounds:
+//!
+//! 1. every worker runs forward/backward on its next batch,
+//! 2. the leader aggregates gradients — plain average (Eq. 11) or
+//!    ζ-weighted consensus (Eq. 15),
+//! 3. the consensus gradient is broadcast and every replica applies the
+//!    identical optimizer update (Eq. 12/16), keeping replicas in
+//!    lock-step without parameter exchange beyond the gradient.
+//!
+//! Communication is accounted in a [`CommLedger`]: gradient bytes per
+//! round, feature bytes per epoch for non-replicated remote candidates.
+
+mod config;
+mod consensus;
+mod fault;
+mod loading;
+mod trainer;
+mod worker;
+
+pub use config::{ConsensusMode, TrainConfig};
+pub use consensus::aggregate_gradients;
+pub use fault::{Fault, FaultPlan};
+pub use loading::allocate_subgraphs;
+pub use trainer::{batch_from_subgraph, batch_zeta, train_gad, train_with_plans, TrainReport};
+pub use worker::{fixed_source_is_stable, BatchSource, FixedSource, WorkerCommand, WorkerPlan, WorkerResult};

@@ -1,0 +1,486 @@
+//! The synchronous distributed training loop (Algorithm 2) and the
+//! full GAD pipeline driver.
+
+use super::config::{ConsensusMode, TrainConfig};
+use super::consensus::aggregate_gradients;
+use super::loading::allocate_subgraphs;
+use super::worker::{worker_main, BatchSource, FixedSource, WorkerCommand, WorkerPlan, WorkerResult};
+use crate::augment::{augment_all, plain_part, AugmentConfig, AugmentedSubgraph};
+use crate::backend::backend_factory;
+use crate::comm::{weighted_feature_traffic_per_epoch, CommLedger, CommStats};
+use crate::graph::boundary_nodes;
+use crate::datasets::Dataset;
+use crate::metrics::{AccuracyMeter, CurveRecorder};
+use crate::model::{Adam, Batch, GcnParams, NormAdj};
+use crate::partition::{partition, PartitionConfig};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+use crate::variance::{zeta, ZetaConfig};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Outcome of a training run — everything the experiment harness needs
+/// to print a paper table/figure row.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub test_accuracy: f32,
+    pub val_accuracy: f32,
+    pub train_accuracy: f32,
+    pub epochs_run: usize,
+    pub wall_seconds: f64,
+    /// Seconds until the loss plateaued (Fig. 6's quantity).
+    pub time_to_converge: f64,
+    pub converged_epoch: Option<usize>,
+    /// `(epoch, seconds, loss, test_accuracy)` per epoch.
+    pub curve: Vec<crate::metrics::CurvePoint>,
+    pub comm: CommStats,
+    /// Estimated network seconds under the configured [`Topology`]
+    /// (what a real interconnect would add to `wall_seconds`).
+    ///
+    /// [`Topology`]: crate::comm::Topology
+    pub network_time_est_sec: f64,
+    /// Resident graph-state bytes per worker (+ one replica of params).
+    pub memory_per_worker: Vec<usize>,
+    pub edge_cut: usize,
+    pub replicas_total: usize,
+    pub workers: usize,
+}
+
+impl TrainReport {
+    /// Mean allocated memory per worker in MB.
+    pub fn memory_mb_per_worker(&self) -> f64 {
+        if self.memory_per_worker.is_empty() {
+            return 0.0;
+        }
+        let sum: usize = self.memory_per_worker.iter().sum();
+        sum as f64 / self.memory_per_worker.len() as f64 / 1e6
+    }
+}
+
+/// Build the [`Batch`] for one augmented subgraph.
+pub fn batch_from_subgraph(dataset: &Dataset, aug: &AugmentedSubgraph, id: u64) -> Batch {
+    let n = aug.sub.len();
+    let f = dataset.feature_dim();
+    let mut features = Matrix::zeros(n, f);
+    let mut labels = vec![0u32; n];
+    let mut loss_mask = vec![false; n];
+    let mut val_mask = vec![false; n];
+    let mut test_mask = vec![false; n];
+    for (local, &global) in aug.sub.global_ids.iter().enumerate() {
+        let g = global as usize;
+        features.row_mut(local).copy_from_slice(dataset.features.row(g));
+        labels[local] = dataset.labels[g];
+        if !aug.is_replica[local] {
+            loss_mask[local] = dataset.split.train[g];
+            val_mask[local] = dataset.split.val[g];
+            test_mask[local] = dataset.split.test[g];
+        }
+    }
+    Batch {
+        id,
+        adj: NormAdj::from_csr(&aug.sub.csr),
+        features,
+        labels,
+        loss_mask,
+        val_mask,
+        test_mask,
+        num_classes: dataset.num_classes,
+    }
+}
+
+/// ζ(g') for a built batch (degree probabilities from the local
+/// adjacency, Euclidean distances from the local features).
+pub fn batch_zeta(batch: &Batch, aug: &AugmentedSubgraph, seed: u64) -> f64 {
+    zeta(
+        &aug.sub.csr,
+        Some(&batch.features),
+        &ZetaConfig { seed, ..Default::default() },
+    )
+}
+
+/// Full GAD pipeline: partition → (optionally) augment → load → train
+/// with (optionally ζ-weighted) global consensus.
+pub fn train_gad(dataset: &Dataset, cfg: &TrainConfig) -> Result<TrainReport> {
+    let part = partition(
+        &dataset.graph,
+        &PartitionConfig { k: cfg.partitions, seed: cfg.seed, ..Default::default() },
+    );
+
+    // Run the Monte-Carlo importance estimation in both modes: with
+    // augmentation off it still defines the access-frequency model the
+    // communication accounting uses (same yardstick for Table 4's
+    // with/without comparison).
+    let measured: Vec<AugmentedSubgraph> = augment_all(
+        &dataset.graph,
+        &part.assignment,
+        cfg.partitions,
+        &AugmentConfig {
+            alpha: cfg.alpha,
+            walk_length: cfg.layers,
+            seed: cfg.seed,
+            ..Default::default()
+        },
+    );
+    let augs: Vec<AugmentedSubgraph> = if cfg.augment {
+        measured.clone()
+    } else {
+        (0..cfg.partitions as u32)
+            .map(|p| plain_part(&dataset.graph, &part.assignment, p))
+            .collect()
+    };
+
+    // per-epoch cross-processor feature traffic under the random-walk
+    // access model (paper §4.4): candidate v is fetched I(v)·|B(g)|
+    // times per epoch unless replicated locally
+    let feature_traffic: u64 = measured
+        .iter()
+        .zip(&augs)
+        .map(|(m, a)| {
+            let boundary = boundary_nodes(&dataset.graph, &part.assignment, m.part);
+            weighted_feature_traffic_per_epoch(
+                &m.candidate_importance,
+                &a.replicas,
+                boundary.len(),
+                dataset.feature_dim(),
+            )
+        })
+        .sum();
+
+    let replicas_total = augs.iter().map(|a| a.replicas.len()).sum();
+
+    // batches + ζ
+    let mut batches: Vec<Batch> = Vec::with_capacity(augs.len());
+    let mut zetas: Vec<f64> = Vec::with_capacity(augs.len());
+    for (i, aug) in augs.iter().enumerate() {
+        let b = batch_from_subgraph(dataset, aug, i as u64);
+        zetas.push(batch_zeta(&b, aug, cfg.seed));
+        batches.push(b);
+    }
+
+    // subgraph loading (§3.2.3)
+    let sizes: Vec<usize> = batches.iter().map(|b| b.len()).collect();
+    let alloc = allocate_subgraphs(&sizes, cfg.workers);
+
+    // deal batches to workers
+    let mut per_worker: Vec<(Vec<Batch>, Vec<f64>)> = (0..cfg.workers).map(|_| (Vec::new(), Vec::new())).collect();
+    // iterate in reverse so `pop`-less moves stay O(1): collect by index
+    let mut batch_opts: Vec<Option<Batch>> = batches.into_iter().map(Some).collect();
+    for (w, owned) in alloc.iter().enumerate() {
+        for &i in owned {
+            per_worker[w].0.push(batch_opts[i].take().unwrap());
+            per_worker[w].1.push(zetas[i]);
+        }
+    }
+    let sources: Vec<Box<dyn BatchSource>> = per_worker
+        .into_iter()
+        .map(|(b, z)| Box::new(FixedSource::new(b, z)) as Box<dyn BatchSource>)
+        .collect();
+
+    train_with_plans(dataset, sources, feature_traffic, part.edge_cut, replicas_total, cfg)
+}
+
+/// The generic synchronous loop over arbitrary batch sources (used by
+/// `train_gad` and every baseline).
+pub fn train_with_plans(
+    dataset: &Dataset,
+    sources: Vec<Box<dyn BatchSource>>,
+    feature_traffic_per_epoch_bytes: u64,
+    edge_cut: usize,
+    replicas_total: usize,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let workers = sources.len();
+    assert!(workers > 0, "need at least one worker");
+    let started = Instant::now();
+
+    // one "device" per worker: divide the cores so wall-clock scaling
+    // with worker count reflects a multi-device deployment rather than
+    // intra-op threading saturating the whole machine
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    crate::tensor::set_intra_threads((cores / workers).max(1));
+
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x6AD);
+    let params0 = GcnParams::init(dataset.feature_dim(), cfg.hidden, dataset.num_classes, cfg.layers, &mut rng);
+    let grad_bytes_per_sync = 2 * params0.nbytes() as u64; // up + down
+
+    let rounds_per_epoch = sources.iter().map(|s| s.batches_per_epoch()).max().unwrap_or(0);
+    if rounds_per_epoch == 0 {
+        return Err(anyhow!("no batches to train on"));
+    }
+    let memory_per_worker: Vec<usize> =
+        sources.iter().map(|s| s.resident_bytes() + params0.nbytes()).collect();
+
+    let ledger = CommLedger::new();
+    let factory = backend_factory(cfg.backend, &cfg.artifact_dir);
+
+    // spawn workers
+    let (result_tx, result_rx) = mpsc::channel::<WorkerResult>();
+    let mut cmd_txs: Vec<mpsc::Sender<WorkerCommand>> = Vec::with_capacity(workers);
+    let mut handles = Vec::with_capacity(workers);
+    for (w, source) in sources.into_iter().enumerate() {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<WorkerCommand>();
+        cmd_txs.push(cmd_tx);
+        let plan = WorkerPlan {
+            worker: w,
+            source,
+            factory: factory.clone(),
+            init_params: params0.clone(),
+            optimizer: Box::new(Adam::new(cfg.lr)),
+        };
+        let tx = result_tx.clone();
+        handles.push(std::thread::spawn(move || worker_main(plan, cmd_rx, tx)));
+    }
+    drop(result_tx);
+
+    let collect = |rx: &mpsc::Receiver<WorkerResult>, n: usize| -> Result<Vec<WorkerResult>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match rx.recv() {
+                Ok(WorkerResult::Error { worker, message }) => {
+                    return Err(anyhow!("worker {worker}: {message}"));
+                }
+                Ok(r) => out.push(r),
+                Err(_) => return Err(anyhow!("worker channel closed early")),
+            }
+        }
+        Ok(out)
+    };
+
+    let mut recorder = CurveRecorder::new(cfg.conv_tol, cfg.conv_patience);
+    let mut epochs_run = 0usize;
+    let mut final_train = AccuracyMeter::default();
+    let mut final_val = AccuracyMeter::default();
+    let mut final_test = AccuracyMeter::default();
+
+    let run = (|| -> Result<()> {
+        for epoch in 0..cfg.epochs {
+            epochs_run = epoch + 1;
+            let mut loss_sum = 0.0f64;
+            let mut loss_count = 0usize;
+
+            // fault injection: crashed workers stop receiving commands
+            let alive: Vec<bool> = (0..workers).map(|w| !cfg.faults.crashed(w, epoch)).collect();
+            let n_alive = alive.iter().filter(|&&a| a).count();
+            if n_alive == 0 {
+                return Err(anyhow!("all workers crashed at epoch {epoch}"));
+            }
+
+            // LR schedule: identical factor on every replica
+            let lr_factor = cfg.schedule.factor(epoch);
+            for (w, tx) in cmd_txs.iter().enumerate() {
+                if alive[w] {
+                    tx.send(WorkerCommand::SetLr { factor: lr_factor })
+                        .map_err(|_| anyhow!("worker died"))?;
+                }
+            }
+
+            for round in 0..rounds_per_epoch {
+                for (w, tx) in cmd_txs.iter().enumerate() {
+                    if !alive[w] {
+                        continue;
+                    }
+                    let delay_ms = cfg.faults.straggle_ms(w, epoch).unwrap_or(0);
+                    tx.send(WorkerCommand::Step { epoch, round, delay_ms })
+                        .map_err(|_| anyhow!("worker died"))?;
+                }
+                let mut results = collect(&result_rx, n_alive)?;
+                // results arrive in thread-completion order; sort by
+                // worker id so float aggregation order (and thus the
+                // whole run) is deterministic
+                results.sort_by_key(|r| match r {
+                    WorkerResult::Step { worker, .. } | WorkerResult::Eval { worker, .. } => *worker,
+                    WorkerResult::Error { worker, .. } => *worker,
+                });
+
+                let mut grads: Vec<Vec<Matrix>> = Vec::with_capacity(workers);
+                let mut weights: Vec<f64> = Vec::with_capacity(workers);
+                let mut active = 0u64;
+                for r in results {
+                    if let WorkerResult::Step { grads: Some(g), loss, zeta, .. } = r {
+                        weights.push(match cfg.consensus {
+                            ConsensusMode::Plain => 1.0,
+                            // guard: non-positive ζ falls back to plain weight
+                            ConsensusMode::Weighted => if zeta > 0.0 { zeta } else { 1.0 },
+                        });
+                        grads.push(g);
+                        loss_sum += loss as f64;
+                        loss_count += 1;
+                        active += 1;
+                    }
+                }
+                if grads.is_empty() {
+                    continue;
+                }
+                let consensus = aggregate_gradients(&grads, &weights);
+                // a single co-located worker exchanges nothing over the
+                // interconnect; otherwise every active worker uploads its
+                // gradient and downloads the consensus
+                if workers > 1 {
+                    ledger.record_gradient(active * grad_bytes_per_sync);
+                }
+                for (w, tx) in cmd_txs.iter().enumerate() {
+                    if !alive[w] {
+                        continue;
+                    }
+                    tx.send(WorkerCommand::Update { grads: consensus.clone() })
+                        .map_err(|_| anyhow!("worker died"))?;
+                }
+            }
+            ledger.record_feature(feature_traffic_per_epoch_bytes);
+
+            // distributed eval (crashed workers' shards go unreported,
+            // like a real partial outage)
+            for (w, tx) in cmd_txs.iter().enumerate() {
+                if !alive[w] {
+                    continue;
+                }
+                tx.send(WorkerCommand::Eval).map_err(|_| anyhow!("worker died"))?;
+            }
+            let mut test_meter = AccuracyMeter::default();
+            let mut val_meter = AccuracyMeter::default();
+            let mut train_meter = AccuracyMeter::default();
+            for r in collect(&result_rx, n_alive)? {
+                if let WorkerResult::Eval { train, val, test, .. } = r {
+                    train_meter.merge(train);
+                    val_meter.merge(val);
+                    test_meter.merge(test);
+                }
+            }
+            final_train = train_meter;
+            final_val = val_meter;
+            final_test = test_meter;
+
+            let mean_loss = if loss_count > 0 { (loss_sum / loss_count as f64) as f32 } else { 0.0 };
+            let converged = recorder.record(epoch, mean_loss, test_meter.value());
+            if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+                eprintln!(
+                    "epoch {epoch:4}  loss {mean_loss:.4}  test_acc {:.4}",
+                    test_meter.value()
+                );
+            }
+            if converged && cfg.stop_on_converge {
+                break;
+            }
+        }
+        Ok(())
+    })();
+
+    for tx in &cmd_txs {
+        let _ = tx.send(WorkerCommand::Stop);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    run?;
+
+    let network_time_est_sec = crate::comm::run_network_time_sec(
+        cfg.topology,
+        crate::comm::LinkSpec::default(),
+        workers,
+        params0.nbytes() as u64,
+        epochs_run * rounds_per_epoch,
+        ledger.feature_bytes(),
+    );
+
+    Ok(TrainReport {
+        test_accuracy: final_test.value(),
+        val_accuracy: final_val.value(),
+        train_accuracy: final_train.value(),
+        epochs_run,
+        wall_seconds: started.elapsed().as_secs_f64(),
+        time_to_converge: recorder.time_to_converge(),
+        converged_epoch: recorder.converged().map(|(e, _)| e),
+        curve: recorder.points.clone(),
+        comm: CommStats::from_ledger(&ledger),
+        network_time_est_sec,
+        memory_per_worker,
+        edge_cut,
+        replicas_total,
+        workers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SyntheticSpec;
+
+    fn quick_cfg() -> TrainConfig {
+        TrainConfig {
+            partitions: 4,
+            workers: 2,
+            layers: 2,
+            hidden: 32,
+            lr: 0.02,
+            epochs: 25,
+            seed: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn gad_learns_tiny_dataset() {
+        let ds = SyntheticSpec::tiny().generate(1);
+        let report = train_gad(&ds, &quick_cfg()).unwrap();
+        assert!(report.test_accuracy > 0.5, "test acc {}", report.test_accuracy);
+        assert_eq!(report.curve.len(), report.epochs_run);
+        assert!(report.comm.gradient_bytes > 0);
+    }
+
+    #[test]
+    fn augmentation_reduces_feature_traffic() {
+        let ds = SyntheticSpec::tiny().generate(2);
+        let mut cfg = quick_cfg();
+        cfg.epochs = 3;
+        cfg.augment = true;
+        cfg.alpha = 0.05;
+        let with_aug = train_gad(&ds, &cfg).unwrap();
+        cfg.augment = false;
+        let without = train_gad(&ds, &cfg).unwrap();
+        assert!(
+            with_aug.comm.feature_bytes < without.comm.feature_bytes,
+            "aug {} vs plain {}",
+            with_aug.comm.feature_bytes,
+            without.comm.feature_bytes
+        );
+        assert!(with_aug.replicas_total > 0);
+        assert_eq!(without.replicas_total, 0);
+    }
+
+    #[test]
+    fn single_worker_single_partition_runs() {
+        let ds = SyntheticSpec::tiny().generate(3);
+        let cfg = TrainConfig {
+            partitions: 1,
+            workers: 1,
+            epochs: 5,
+            hidden: 16,
+            ..quick_cfg()
+        };
+        let report = train_gad(&ds, &cfg).unwrap();
+        assert_eq!(report.workers, 1);
+        assert_eq!(report.edge_cut, 0);
+        assert_eq!(report.comm.feature_bytes, 0);
+    }
+
+    #[test]
+    fn weighted_and_plain_consensus_both_run() {
+        let ds = SyntheticSpec::tiny().generate(4);
+        for mode in [ConsensusMode::Plain, ConsensusMode::Weighted] {
+            let cfg = TrainConfig { consensus: mode, epochs: 5, ..quick_cfg() };
+            let report = train_gad(&ds, &cfg).unwrap();
+            assert!(report.test_accuracy > 0.2);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = SyntheticSpec::tiny().generate(5);
+        let cfg = TrainConfig { epochs: 5, ..quick_cfg() };
+        let a = train_gad(&ds, &cfg).unwrap();
+        let b = train_gad(&ds, &cfg).unwrap();
+        assert_eq!(a.test_accuracy, b.test_accuracy);
+        assert_eq!(a.comm.feature_bytes, b.comm.feature_bytes);
+    }
+}

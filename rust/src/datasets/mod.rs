@@ -1,0 +1,132 @@
+//! Datasets: Table-1-shaped synthetic graphs + loaders.
+//!
+//! The evaluation datasets of the paper (Cora, Pubmed, Flickr, Reddit)
+//! are fetched by PyTorch-Geometric at runtime in the original; this
+//! image is offline, so `SyntheticSpec` generates label-correlated
+//! stochastic block models with the same node/edge/label/feature-dim
+//! statistics (Reddit and Flickr scale-reduced — see the constants
+//! below and DESIGN.md §Substitutions). Homophily + degree
+//! heterogeneity are tuned so GCN-family methods actually learn and so
+//! degree-based samplers (GraphSAINT) are meaningfully non-uniform.
+
+mod features;
+pub mod io;
+mod split;
+mod synthetic;
+
+pub use split::Split;
+pub use synthetic::SyntheticSpec;
+
+use crate::graph::Csr;
+use crate::tensor::Matrix;
+
+/// A node-classification dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub graph: Csr,
+    /// `n x f` node features.
+    pub features: Matrix,
+    /// Class label per node.
+    pub labels: Vec<u32>,
+    pub num_classes: usize,
+    pub split: Split,
+}
+
+impl Dataset {
+    /// Feature dimensionality.
+    pub fn feature_dim(&self) -> usize {
+        self.features.cols
+    }
+
+    /// Node count.
+    pub fn num_nodes(&self) -> usize {
+        self.graph.num_nodes()
+    }
+
+    /// One markdown row of Table-1 statistics.
+    pub fn stats_row(&self) -> String {
+        format!(
+            "| {} | {} | {} | {} | {} | {}/{}/{} (%) |",
+            self.name,
+            self.num_nodes(),
+            self.graph.num_edges(),
+            self.num_classes,
+            self.feature_dim(),
+            (100.0 * self.split.train_fraction()).round() as u32,
+            (100.0 * self.split.val_fraction()).round() as u32,
+            (100.0 * self.split.test_fraction()).round() as u32,
+        )
+    }
+
+    /// Bytes of features + adjacency (memory accounting baseline).
+    pub fn nbytes(&self) -> usize {
+        self.features.nbytes() + self.graph.nbytes() + self.labels.len() * 4
+    }
+
+    /// Sanity checks used by tests and the CLI `stats` command.
+    pub fn validate(&self) -> Result<(), String> {
+        self.graph.validate()?;
+        if self.features.rows != self.num_nodes() {
+            return Err("feature rows != nodes".into());
+        }
+        if self.labels.len() != self.num_nodes() {
+            return Err("labels != nodes".into());
+        }
+        if self.labels.iter().any(|&l| l as usize >= self.num_classes) {
+            return Err("label out of range".into());
+        }
+        self.split.validate(self.num_nodes())
+    }
+
+    /// The four paper datasets, generated at the default scales.
+    pub fn paper_suite(seed: u64) -> Vec<Dataset> {
+        vec![
+            SyntheticSpec::cora_like().generate(seed),
+            SyntheticSpec::pubmed_like().generate(seed + 1),
+            SyntheticSpec::flickr_like().generate(seed + 2),
+            SyntheticSpec::reddit_like().generate(seed + 3),
+        ]
+    }
+
+    /// Like [`Dataset::by_name`] with a size scale factor (fast modes).
+    pub fn by_name_scaled(name: &str, seed: u64, scale: f64) -> Option<Dataset> {
+        Self::spec_by_name(name).map(|s| s.scale(scale).generate(seed))
+    }
+
+    /// Look a dataset up by name (`cora|pubmed|flickr|reddit|tiny`).
+    pub fn by_name(name: &str, seed: u64) -> Option<Dataset> {
+        Self::spec_by_name(name).map(|s| s.generate(seed))
+    }
+
+    /// The spec behind a dataset name.
+    pub fn spec_by_name(name: &str) -> Option<SyntheticSpec> {
+        let spec = match name {
+            "cora" => SyntheticSpec::cora_like(),
+            "pubmed" => SyntheticSpec::pubmed_like(),
+            "flickr" | "flicker" => SyntheticSpec::flickr_like(),
+            "reddit" => SyntheticSpec::reddit_like(),
+            "tiny" => SyntheticSpec::tiny(),
+            _ => return None,
+        };
+        Some(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_known_and_unknown() {
+        assert!(Dataset::by_name("tiny", 1).is_some());
+        assert!(Dataset::by_name("cora", 1).is_some());
+        assert!(Dataset::by_name("imaginary", 1).is_none());
+    }
+
+    #[test]
+    fn tiny_validates() {
+        let d = Dataset::by_name("tiny", 2).unwrap();
+        d.validate().unwrap();
+    }
+}

@@ -1,0 +1,88 @@
+//! Train/validation/test node splits.
+
+use crate::rng::Rng;
+
+/// Boolean masks over nodes; exactly one of the three is set per node.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Vec<bool>,
+    pub val: Vec<bool>,
+    pub test: Vec<bool>,
+}
+
+impl Split {
+    /// Random split with the given fractions (train + val + test must
+    /// be ≈ 1; test takes the remainder).
+    pub fn random(n: usize, train_frac: f64, val_frac: f64, rng: &mut Rng) -> Split {
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let n_train = (n as f64 * train_frac).round() as usize;
+        let n_val = (n as f64 * val_frac).round() as usize;
+        let mut s = Split {
+            train: vec![false; n],
+            val: vec![false; n],
+            test: vec![false; n],
+        };
+        for (i, &v) in order.iter().enumerate() {
+            if i < n_train {
+                s.train[v] = true;
+            } else if i < n_train + n_val {
+                s.val[v] = true;
+            } else {
+                s.test[v] = true;
+            }
+        }
+        s
+    }
+
+    pub fn train_fraction(&self) -> f64 {
+        self.count(&self.train) as f64 / self.train.len() as f64
+    }
+    pub fn val_fraction(&self) -> f64 {
+        self.count(&self.val) as f64 / self.val.len() as f64
+    }
+    pub fn test_fraction(&self) -> f64 {
+        self.count(&self.test) as f64 / self.test.len() as f64
+    }
+
+    fn count(&self, m: &[bool]) -> usize {
+        m.iter().filter(|&&x| x).count()
+    }
+
+    /// Every node in exactly one fold.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if self.train.len() != n || self.val.len() != n || self.test.len() != n {
+            return Err("split length mismatch".into());
+        }
+        for i in 0..n {
+            let c = self.train[i] as u8 + self.val[i] as u8 + self.test[i] as u8;
+            if c != 1 {
+                return Err(format!("node {i} in {c} folds"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_and_partition() {
+        let mut rng = Rng::seed_from_u64(1);
+        let s = Split::random(1000, 0.7, 0.2, &mut rng);
+        s.validate(1000).unwrap();
+        assert!((s.train_fraction() - 0.7).abs() < 0.01);
+        assert!((s.val_fraction() - 0.2).abs() < 0.01);
+        assert!((s.test_fraction() - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn degenerate_all_train() {
+        let mut rng = Rng::seed_from_u64(2);
+        let s = Split::random(10, 1.0, 0.0, &mut rng);
+        s.validate(10).unwrap();
+        assert_eq!(s.train_fraction(), 1.0);
+    }
+}

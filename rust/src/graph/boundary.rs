@@ -1,0 +1,104 @@
+//! Boundary nodes and candidate replication nodes (paper Definition 2).
+//!
+//! Given a partition assignment, the boundary of part `i` is the set of
+//! its nodes with at least one edge leaving the part; the *candidate
+//! replication nodes* `C(g_i)` are the x-hop neighbourhood (x = number
+//! of GCN layers) of those boundary nodes, restricted to nodes outside
+//! the part — exactly the remote nodes a distributed GCN would have to
+//! fetch during training.
+
+use super::Csr;
+
+/// Nodes of part `part` that have at least one cross-part edge.
+pub fn boundary_nodes(graph: &Csr, assignment: &[u32], part: u32) -> Vec<u32> {
+    let mut out = Vec::new();
+    for v in 0..graph.num_nodes() {
+        if assignment[v] != part {
+            continue;
+        }
+        if graph
+            .neighbors(v)
+            .iter()
+            .any(|&t| assignment[t as usize] != part)
+        {
+            out.push(v as u32);
+        }
+    }
+    out
+}
+
+/// `C(g_part)`: all nodes outside `part` reachable within `hops` edges
+/// from the part's boundary nodes (paths may pass through any node).
+/// Returned sorted.
+pub fn candidate_replication_nodes(
+    graph: &Csr,
+    assignment: &[u32],
+    part: u32,
+    hops: usize,
+) -> Vec<u32> {
+    let n = graph.num_nodes();
+    // BFS frontier from all boundary nodes simultaneously.
+    let mut dist = vec![u32::MAX; n];
+    let mut frontier: Vec<u32> = boundary_nodes(graph, assignment, part);
+    for &v in &frontier {
+        dist[v as usize] = 0;
+    }
+    let mut out = Vec::new();
+    for d in 1..=hops as u32 {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for &t in graph.neighbors(v as usize) {
+                if dist[t as usize] == u32::MAX {
+                    dist[t as usize] = d;
+                    next.push(t);
+                    if assignment[t as usize] != part {
+                        out.push(t);
+                    }
+                }
+            }
+        }
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// path graph 0-1-2-3-4-5, parts [0,0,0,1,1,1]
+    fn path6() -> (Csr, Vec<u32>) {
+        let g = GraphBuilder::new(6)
+            .edges(&[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)])
+            .build();
+        (g, vec![0, 0, 0, 1, 1, 1])
+    }
+
+    #[test]
+    fn boundary_is_cut_endpoints() {
+        let (g, a) = path6();
+        assert_eq!(boundary_nodes(&g, &a, 0), vec![2]);
+        assert_eq!(boundary_nodes(&g, &a, 1), vec![3]);
+    }
+
+    #[test]
+    fn candidates_respect_hops() {
+        let (g, a) = path6();
+        assert_eq!(candidate_replication_nodes(&g, &a, 0, 1), vec![3]);
+        assert_eq!(candidate_replication_nodes(&g, &a, 0, 2), vec![3, 4]);
+        assert_eq!(candidate_replication_nodes(&g, &a, 0, 10), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn no_candidates_when_isolated_part() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (2, 3)]).build();
+        let a = vec![0, 0, 1, 1];
+        assert!(boundary_nodes(&g, &a, 0).is_empty());
+        assert!(candidate_replication_nodes(&g, &a, 0, 3).is_empty());
+    }
+}

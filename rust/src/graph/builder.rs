@@ -1,0 +1,105 @@
+//! Edge-list -> CSR builder with dedup, self-loop removal and
+//! symmetrization.
+
+use super::Csr;
+
+/// Accumulates an edge list and finalises it into a canonical [`Csr`].
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(u32, u32)>,
+}
+
+impl GraphBuilder {
+    /// Builder for a graph on `n` nodes.
+    pub fn new(n: usize) -> Self {
+        GraphBuilder { n, edges: Vec::new() }
+    }
+
+    /// Add one undirected edge (either orientation; self-loops dropped
+    /// at build time).
+    pub fn edge(&mut self, u: u32, v: u32) -> &mut Self {
+        self.edges.push((u, v));
+        self
+    }
+
+    /// Add many edges (chainable, consuming style used in tests).
+    pub fn edges(mut self, es: &[(u32, u32)]) -> Self {
+        self.edges.extend_from_slice(es);
+        self
+    }
+
+    /// Number of raw (pre-dedup) edges added so far.
+    pub fn raw_len(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Finalise: dedup, drop self loops, symmetrize, sort adjacency.
+    pub fn build(self) -> Csr {
+        let n = self.n;
+        // canonical orientation + dedup
+        let mut canon: Vec<(u32, u32)> = self
+            .edges
+            .into_iter()
+            .filter(|&(u, v)| u != v)
+            .map(|(u, v)| if u < v { (u, v) } else { (v, u) })
+            .collect();
+        for &(u, v) in &canon {
+            assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range");
+        }
+        canon.sort_unstable();
+        canon.dedup();
+
+        // counting sort into CSR, both directions
+        let mut deg = vec![0usize; n];
+        for &(u, v) in &canon {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + deg[v];
+        }
+        let mut cursor = offsets.clone();
+        let mut targets = vec![0u32; canon.len() * 2];
+        for &(u, v) in &canon {
+            targets[cursor[u as usize]] = v;
+            cursor[u as usize] += 1;
+            targets[cursor[v as usize]] = u;
+            cursor[v as usize] += 1;
+        }
+        // adjacency lists sorted (canon is sorted by (u,v) so the u-side
+        // is already in order, but the v-side is not — sort each list)
+        for v in 0..n {
+            targets[offsets[v]..offsets[v + 1]].sort_unstable();
+        }
+        Csr::from_raw(offsets, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = GraphBuilder::new(3)
+            .edges(&[(0, 1), (1, 0), (0, 1), (2, 2), (1, 2)])
+            .build();
+        assert_eq!(g.num_edges(), 2);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn isolated_nodes_allowed() {
+        let g = GraphBuilder::new(5).edges(&[(0, 1)]).build();
+        assert_eq!(g.num_nodes(), 5);
+        assert_eq!(g.degree(4), 0);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_edge_panics() {
+        GraphBuilder::new(2).edges(&[(0, 5)]).build();
+    }
+}

@@ -1,0 +1,161 @@
+//! Compressed-sparse-row undirected graph.
+
+/// An undirected graph in CSR form. Every edge `{u,v}` is stored in both
+/// adjacency lists; `num_edges()` reports undirected edge count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    offsets: Vec<usize>,
+    targets: Vec<u32>,
+}
+
+impl Csr {
+    /// Build directly from CSR arrays (must be a valid symmetric CSR).
+    pub fn from_raw(offsets: Vec<usize>, targets: Vec<u32>) -> Self {
+        assert!(!offsets.is_empty());
+        assert_eq!(*offsets.last().unwrap(), targets.len());
+        Csr { offsets, targets }
+    }
+
+    /// Empty graph with `n` isolated nodes.
+    pub fn empty(n: usize) -> Self {
+        Csr { offsets: vec![0; n + 1], targets: Vec::new() }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of *undirected* edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.targets.len() / 2
+    }
+
+    /// Number of stored directed arcs (2x undirected edges).
+    #[inline]
+    pub fn num_arcs(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Neighbours of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.targets[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Raw offsets array (`num_nodes()+1` entries).
+    #[inline]
+    pub fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    /// Raw targets array.
+    #[inline]
+    pub fn targets(&self) -> &[u32] {
+        &self.targets
+    }
+
+    /// True if `{u,v}` is an edge (binary search; lists are sorted).
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.neighbors(u).binary_search(&(v as u32)).is_ok()
+    }
+
+    /// Iterate undirected edges as `(u, v)` with `u < v`.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.num_nodes()).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .filter(move |&&v| (u as u32) < v)
+                .map(move |&v| (u as u32, v))
+        })
+    }
+
+    /// Bytes held by the adjacency structure (memory accounting).
+    pub fn nbytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>()
+            + self.targets.len() * std::mem::size_of::<u32>()
+    }
+
+    /// Validate structural invariants (tests / debug builds).
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_nodes();
+        for v in 0..n {
+            if self.offsets[v] > self.offsets[v + 1] {
+                return Err(format!("offsets not monotone at {v}"));
+            }
+            let mut prev: Option<u32> = None;
+            for &t in self.neighbors(v) {
+                if t as usize >= n {
+                    return Err(format!("target {t} out of range at node {v}"));
+                }
+                if t as usize == v {
+                    return Err(format!("self loop at {v}"));
+                }
+                if let Some(p) = prev {
+                    if t <= p {
+                        return Err(format!("neighbors of {v} not strictly sorted"));
+                    }
+                }
+                prev = Some(t);
+            }
+        }
+        // symmetry
+        for v in 0..n {
+            for &t in self.neighbors(v) {
+                if !self.has_edge(t as usize, v) {
+                    return Err(format!("asymmetric edge {v}->{t}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn triangle_plus_tail() -> Csr {
+        // 0-1, 1-2, 2-0, 2-3
+        GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 0), (2, 3)]).build()
+    }
+
+    #[test]
+    fn counts() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.num_arcs(), 8);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.degree(3), 1);
+    }
+
+    #[test]
+    fn has_edge_symmetric() {
+        let g = triangle_plus_tail();
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn edge_iterator_each_once() {
+        let g = triangle_plus_tail();
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es.len(), 4);
+        assert!(es.contains(&(0, 1)) && es.contains(&(2, 3)));
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(triangle_plus_tail().validate().is_ok());
+    }
+}

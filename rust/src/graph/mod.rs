@@ -1,0 +1,15 @@
+//! Graph substrate: CSR storage, builders, subgraph extraction,
+//! boundary / candidate-replication sets (paper Def. 2), and the
+//! degree/density statistics the augmentation budget uses (Def. 3).
+
+mod boundary;
+mod builder;
+mod csr;
+mod stats;
+mod subgraph;
+
+pub use boundary::{boundary_nodes, candidate_replication_nodes};
+pub use builder::GraphBuilder;
+pub use csr::Csr;
+pub use stats::{avg_degree, degree_histogram, density};
+pub use subgraph::Subgraph;

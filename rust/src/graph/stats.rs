@@ -1,0 +1,65 @@
+//! Degree / density statistics (paper Definition 3).
+
+use super::Csr;
+
+/// Graph density `2|E| / (|V| (|V|-1))` — Definition 3. Zero for
+/// graphs with fewer than two nodes.
+pub fn density(g: &Csr) -> f64 {
+    let n = g.num_nodes();
+    if n < 2 {
+        return 0.0;
+    }
+    2.0 * g.num_edges() as f64 / (n as f64 * (n - 1) as f64)
+}
+
+/// Mean degree over a node subset (used for Algorithm 1's pilot
+/// walk count `d * |B(g)|`).
+pub fn avg_degree(g: &Csr, nodes: &[u32]) -> f64 {
+    if nodes.is_empty() {
+        return 0.0;
+    }
+    nodes.iter().map(|&v| g.degree(v as usize) as f64).sum::<f64>() / nodes.len() as f64
+}
+
+/// Histogram of degrees (index = degree).
+pub fn degree_histogram(g: &Csr) -> Vec<usize> {
+    let max_deg = (0..g.num_nodes()).map(|v| g.degree(v)).max().unwrap_or(0);
+    let mut h = vec![0usize; max_deg + 1];
+    for v in 0..g.num_nodes() {
+        h[g.degree(v)] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn complete_graph_density_one() {
+        let g = GraphBuilder::new(4)
+            .edges(&[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)])
+            .build();
+        assert!((density(&g) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn path_density() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3)]).build();
+        assert!((density(&g) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn avg_degree_subset() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3)]).build();
+        assert_eq!(avg_degree(&g, &[0, 3]), 1.0);
+        assert_eq!(avg_degree(&g, &[1, 2]), 2.0);
+    }
+
+    #[test]
+    fn degree_histogram_counts() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3)]).build();
+        assert_eq!(degree_histogram(&g), vec![0, 2, 2]);
+    }
+}

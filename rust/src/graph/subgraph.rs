@@ -1,0 +1,98 @@
+//! Induced subgraphs with global<->local id maps.
+
+use super::Csr;
+use std::collections::HashMap;
+
+/// A node-induced subgraph of a parent graph. Local ids are dense
+/// `0..len()`; `global_ids[local]` maps back to the parent.
+#[derive(Clone, Debug)]
+pub struct Subgraph {
+    /// Parent-graph node id per local id (sorted ascending).
+    pub global_ids: Vec<u32>,
+    /// Local CSR over the induced edges.
+    pub csr: Csr,
+}
+
+impl Subgraph {
+    /// Induce the subgraph of `parent` on `nodes` (dedup + sorted).
+    pub fn induce(parent: &Csr, nodes: &[u32]) -> Subgraph {
+        let mut global_ids = nodes.to_vec();
+        global_ids.sort_unstable();
+        global_ids.dedup();
+        let local: HashMap<u32, u32> = global_ids
+            .iter()
+            .enumerate()
+            .map(|(l, &g)| (g, l as u32))
+            .collect();
+
+        let n = global_ids.len();
+        let mut offsets = vec![0usize; n + 1];
+        // first pass: degrees
+        for (l, &g) in global_ids.iter().enumerate() {
+            let d = parent
+                .neighbors(g as usize)
+                .iter()
+                .filter(|t| local.contains_key(t))
+                .count();
+            offsets[l + 1] = offsets[l] + d;
+        }
+        let mut targets = vec![0u32; offsets[n]];
+        let mut cursor = 0usize;
+        for &g in &global_ids {
+            for t in parent.neighbors(g as usize) {
+                if let Some(&lt) = local.get(t) {
+                    targets[cursor] = lt;
+                    cursor += 1;
+                }
+            }
+        }
+        // parent adjacency is sorted by global id and global_ids is
+        // sorted, so local targets are already sorted per node.
+        Subgraph { global_ids, csr: Csr::from_raw(offsets, targets) }
+    }
+
+    /// Node count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.global_ids.len()
+    }
+
+    /// True if empty.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.global_ids.is_empty()
+    }
+
+    /// Local id of a global node, if present (binary search).
+    pub fn local_of(&self, global: u32) -> Option<u32> {
+        self.global_ids.binary_search(&global).ok().map(|i| i as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn induce_keeps_internal_edges_only() {
+        // square 0-1-2-3-0 plus diagonal 0-2
+        let g = GraphBuilder::new(4)
+            .edges(&[(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)])
+            .build();
+        let s = Subgraph::induce(&g, &[0, 1, 2]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.csr.num_edges(), 3); // 0-1, 1-2, 0-2
+        assert!(s.csr.validate().is_ok());
+        assert_eq!(s.local_of(2), Some(2));
+        assert_eq!(s.local_of(3), None);
+    }
+
+    #[test]
+    fn induce_dedups_input() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
+        let s = Subgraph::induce(&g, &[1, 1, 0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.csr.num_edges(), 1);
+    }
+}

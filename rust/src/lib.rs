@@ -1,0 +1,72 @@
+//! # GAD — Graph-Augmentation-based Distributed GCN training
+//!
+//! Reproduction of *"Distributed Optimization of Graph Convolutional
+//! Network using Subgraph Variance"* (Zhao et al., 2021) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the distributed coordinator: graph store,
+//!   multilevel partitioner, Monte-Carlo subgraph augmentation,
+//!   variance-weighted global consensus, worker/leader training loop,
+//!   communication accounting, and the six baselines of the paper's
+//!   evaluation.
+//! * **L2** — the GCN forward/backward as a JAX program
+//!   (`python/compile/model.py`), AOT-lowered to HLO text once at build
+//!   time (`make artifacts`).
+//! * **L1** — the fused GCN-layer Pallas kernel
+//!   (`python/compile/kernels/`), called from L2 so it lowers into the
+//!   same HLO module.
+//!
+//! Python never runs on the training path: [`runtime`] loads the AOT
+//! artifacts through the PJRT C API (`xla` crate) and [`backend::XlaBackend`]
+//! executes them from the rust hot loop. [`backend::NativeBackend`] is a
+//! pure-rust oracle/fallback for shapes with no compiled bucket.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use gad::prelude::*;
+//!
+//! let dataset = SyntheticSpec::cora_like().generate(42);
+//! let cfg = TrainConfig {
+//!     partitions: 8,
+//!     workers: 4,
+//!     layers: 2,
+//!     hidden: 64,
+//!     epochs: 30,
+//!     ..TrainConfig::default()
+//! };
+//! let report = gad::coordinator::train_gad(&dataset, &cfg).unwrap();
+//! println!("test accuracy = {:.4}", report.test_accuracy);
+//! ```
+
+pub mod augment;
+pub mod backend;
+pub mod baselines;
+pub mod bench_util;
+pub mod cli;
+pub mod comm;
+pub mod coordinator;
+pub mod datasets;
+pub mod graph;
+pub mod metrics;
+pub mod model;
+pub mod partition;
+pub mod proptest_util;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod variance;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::augment::{AugmentConfig, AugmentedSubgraph};
+    pub use crate::backend::{Backend, BackendKind, NativeBackend};
+    pub use crate::baselines::Method;
+    pub use crate::coordinator::{ConsensusMode, TrainConfig, TrainReport};
+    pub use crate::datasets::{Dataset, SyntheticSpec};
+    pub use crate::graph::{Csr, Subgraph};
+    pub use crate::model::GcnParams;
+    pub use crate::partition::{PartitionConfig, Partitioning};
+    pub use crate::rng::Rng;
+    pub use crate::tensor::Matrix;
+}

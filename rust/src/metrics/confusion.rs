@@ -1,0 +1,158 @@
+//! Confusion matrix, per-class precision/recall and macro-F1 — the
+//! class-imbalanced datasets (reddit: 41 classes) need more than plain
+//! accuracy to see what a partition strategy loses.
+
+/// `C x C` confusion counts; rows = true class, cols = predicted.
+#[derive(Clone, Debug)]
+pub struct ConfusionMatrix {
+    pub classes: usize,
+    counts: Vec<u64>,
+}
+
+impl ConfusionMatrix {
+    pub fn new(classes: usize) -> Self {
+        ConfusionMatrix { classes, counts: vec![0; classes * classes] }
+    }
+
+    /// Accumulate masked predictions.
+    pub fn add(&mut self, preds: &[u32], labels: &[u32], mask: &[bool]) {
+        for i in 0..labels.len() {
+            if mask[i] {
+                let t = labels[i] as usize;
+                let p = preds[i] as usize;
+                if t < self.classes && p < self.classes {
+                    self.counts[t * self.classes + p] += 1;
+                }
+            }
+        }
+    }
+
+    /// Merge another matrix (distributed eval).
+    pub fn merge(&mut self, other: &ConfusionMatrix) {
+        assert_eq!(self.classes, other.classes);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    #[inline]
+    pub fn count(&self, true_class: usize, pred_class: usize) -> u64 {
+        self.counts[true_class * self.classes + pred_class]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Overall accuracy.
+    pub fn accuracy(&self) -> f64 {
+        let correct: u64 = (0..self.classes).map(|c| self.count(c, c)).sum();
+        let total = self.total();
+        if total == 0 {
+            0.0
+        } else {
+            correct as f64 / total as f64
+        }
+    }
+
+    /// Precision for one class (0 when the class was never predicted).
+    pub fn precision(&self, c: usize) -> f64 {
+        let tp = self.count(c, c) as f64;
+        let predicted: u64 = (0..self.classes).map(|t| self.count(t, c)).sum();
+        if predicted == 0 {
+            0.0
+        } else {
+            tp / predicted as f64
+        }
+    }
+
+    /// Recall for one class (0 when the class has no true members).
+    pub fn recall(&self, c: usize) -> f64 {
+        let tp = self.count(c, c) as f64;
+        let actual: u64 = (0..self.classes).map(|p| self.count(c, p)).sum();
+        if actual == 0 {
+            0.0
+        } else {
+            tp / actual as f64
+        }
+    }
+
+    /// Per-class F1.
+    pub fn f1(&self, c: usize) -> f64 {
+        let (p, r) = (self.precision(c), self.recall(c));
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    /// Macro-averaged F1 over classes that actually appear.
+    pub fn macro_f1(&self) -> f64 {
+        let present: Vec<usize> = (0..self.classes)
+            .filter(|&c| (0..self.classes).any(|p| self.count(c, p) > 0))
+            .collect();
+        if present.is_empty() {
+            return 0.0;
+        }
+        present.iter().map(|&c| self.f1(c)).sum::<f64>() / present.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn perfect() -> ConfusionMatrix {
+        let mut m = ConfusionMatrix::new(3);
+        m.add(&[0, 1, 2, 0], &[0, 1, 2, 0], &[true; 4]);
+        m
+    }
+
+    #[test]
+    fn perfect_scores() {
+        let m = perfect();
+        assert_eq!(m.accuracy(), 1.0);
+        assert_eq!(m.macro_f1(), 1.0);
+        for c in 0..3 {
+            assert_eq!(m.precision(c), 1.0);
+            assert_eq!(m.recall(c), 1.0);
+        }
+    }
+
+    #[test]
+    fn masked_rows_ignored() {
+        let mut m = ConfusionMatrix::new(2);
+        m.add(&[1, 1], &[0, 1], &[false, true]);
+        assert_eq!(m.total(), 1);
+        assert_eq!(m.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn known_confusion() {
+        // true 0 predicted as 1 twice; true 1 predicted correctly once
+        let mut m = ConfusionMatrix::new(2);
+        m.add(&[1, 1, 1], &[0, 0, 1], &[true; 3]);
+        assert_eq!(m.count(0, 1), 2);
+        assert!((m.accuracy() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.recall(0), 0.0);
+        assert!((m.precision(1) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.recall(1), 1.0);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = perfect();
+        let b = perfect();
+        a.merge(&b);
+        assert_eq!(a.total(), 8);
+        assert_eq!(a.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn absent_class_excluded_from_macro_f1() {
+        let mut m = ConfusionMatrix::new(3);
+        m.add(&[0, 1], &[0, 1], &[true; 2]); // class 2 never appears
+        assert_eq!(m.macro_f1(), 1.0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Run metrics: loss/accuracy curves, convergence detection, timers,
+//! memory accounting, and CSV/markdown emitters for the experiment
+//! harness.
+
+mod confusion;
+
+pub use confusion::ConfusionMatrix;
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// One point of a training curve.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub epoch: usize,
+    pub seconds: f64,
+    pub loss: f32,
+    pub accuracy: f32,
+}
+
+/// Records the loss/accuracy trajectory and detects convergence as the
+/// paper plots it: the epoch after which the smoothed loss improves by
+/// less than `tol` relative for `patience` consecutive epochs.
+#[derive(Clone, Debug)]
+pub struct CurveRecorder {
+    start: Instant,
+    pub points: Vec<CurvePoint>,
+    best_loss: f32,
+    stale: usize,
+    pub tol: f32,
+    pub patience: usize,
+    converged_at: Option<(usize, f64)>,
+}
+
+impl CurveRecorder {
+    pub fn new(tol: f32, patience: usize) -> Self {
+        CurveRecorder {
+            start: Instant::now(),
+            points: Vec::new(),
+            best_loss: f32::INFINITY,
+            stale: 0,
+            tol,
+            patience,
+            converged_at: None,
+        }
+    }
+
+    /// Record an epoch; returns true the first time convergence fires.
+    pub fn record(&mut self, epoch: usize, loss: f32, accuracy: f32) -> bool {
+        let seconds = self.start.elapsed().as_secs_f64();
+        self.points.push(CurvePoint { epoch, seconds, loss, accuracy });
+        if loss < self.best_loss * (1.0 - self.tol) {
+            self.best_loss = loss;
+            self.stale = 0;
+        } else {
+            self.best_loss = self.best_loss.min(loss);
+            self.stale += 1;
+            if self.stale >= self.patience && self.converged_at.is_none() {
+                self.converged_at = Some((epoch, seconds));
+                return true;
+            }
+        }
+        false
+    }
+
+    /// `(epoch, seconds)` at which convergence was declared.
+    pub fn converged(&self) -> Option<(usize, f64)> {
+        self.converged_at
+    }
+
+    /// Seconds to convergence, or total time if never converged.
+    pub fn time_to_converge(&self) -> f64 {
+        self.converged_at
+            .map(|(_, s)| s)
+            .or_else(|| self.points.last().map(|p| p.seconds))
+            .unwrap_or(0.0)
+    }
+
+    /// CSV dump: `epoch,seconds,loss,accuracy`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("epoch,seconds,loss,accuracy\n");
+        for p in &self.points {
+            let _ = writeln!(s, "{},{:.4},{:.6},{:.4}", p.epoch, p.seconds, p.loss, p.accuracy);
+        }
+        s
+    }
+}
+
+/// Accuracy = fraction of matching predictions among masked nodes.
+pub fn masked_accuracy(preds: &[u32], labels: &[u32], mask: &[bool]) -> f32 {
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for i in 0..labels.len() {
+        if mask[i] {
+            total += 1;
+            if preds[i] == labels[i] {
+                hit += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        hit as f32 / total as f32
+    }
+}
+
+/// Counter-based accuracy accumulation across distributed subgraphs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AccuracyMeter {
+    pub hits: usize,
+    pub total: usize,
+}
+
+impl AccuracyMeter {
+    pub fn add(&mut self, preds: &[u32], labels: &[u32], mask: &[bool]) {
+        for i in 0..labels.len() {
+            if mask[i] {
+                self.total += 1;
+                if preds[i] == labels[i] {
+                    self.hits += 1;
+                }
+            }
+        }
+    }
+
+    pub fn merge(&mut self, other: AccuracyMeter) {
+        self.hits += other.hits;
+        self.total += other.total;
+    }
+
+    pub fn value(&self) -> f32 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.hits as f32 / self.total as f32
+        }
+    }
+}
+
+/// Write a file, creating parent dirs; helper for the results/ tree.
+pub fn write_result_file(path: &str, content: &str) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)
+}
+
+/// Markdown table builder used by the CLI table commands.
+pub struct MarkdownTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MarkdownTable {
+    pub fn new(header: &[&str]) -> Self {
+        MarkdownTable { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "| {} |", self.header.join(" | "));
+        let _ = writeln!(s, "|{}|", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn convergence_fires_once_loss_plateaus() {
+        let mut rec = CurveRecorder::new(0.01, 3);
+        // fast descent then plateau
+        let losses = [1.0f32, 0.8, 0.6, 0.5, 0.499, 0.498, 0.4985, 0.498];
+        let mut fired_at = None;
+        for (e, &l) in losses.iter().enumerate() {
+            if rec.record(e, l, 0.5) && fired_at.is_none() {
+                fired_at = Some(e);
+            }
+        }
+        let fired = fired_at.expect("should converge");
+        assert!(fired >= 5, "fired too early at {fired}");
+        assert_eq!(rec.converged().unwrap().0, fired);
+    }
+
+    #[test]
+    fn no_convergence_while_improving() {
+        let mut rec = CurveRecorder::new(0.01, 3);
+        for e in 0..20 {
+            let loss = 1.0 / (e + 1) as f32;
+            assert!(!rec.record(e, loss, 0.0), "epoch {e}");
+        }
+        assert!(rec.converged().is_none());
+    }
+
+    #[test]
+    fn masked_accuracy_basic() {
+        let preds = [0u32, 1, 2, 0];
+        let labels = [0u32, 1, 0, 0];
+        let mask = [true, true, true, false];
+        assert!((masked_accuracy(&preds, &labels, &mask) - 2.0 / 3.0).abs() < 1e-6);
+        assert_eq!(masked_accuracy(&preds, &labels, &[false; 4]), 0.0);
+    }
+
+    #[test]
+    fn meter_merge() {
+        let mut a = AccuracyMeter::default();
+        a.add(&[1, 1], &[1, 0], &[true, true]);
+        let mut b = AccuracyMeter::default();
+        b.add(&[2], &[2], &[true]);
+        a.merge(b);
+        assert_eq!(a.hits, 2);
+        assert_eq!(a.total, 3);
+    }
+
+    #[test]
+    fn markdown_table_renders() {
+        let mut t = MarkdownTable::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.render();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut rec = CurveRecorder::new(0.01, 2);
+        rec.record(0, 1.0, 0.1);
+        let csv = rec.to_csv();
+        assert!(csv.starts_with("epoch,seconds,loss,accuracy\n"));
+        assert!(csv.lines().count() == 2);
+    }
+}

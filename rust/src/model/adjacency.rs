@@ -1,0 +1,151 @@
+//! Symmetric-normalized adjacency `Â = D^{-1/2} (A + I) D^{-1/2}`
+//! (Kipf & Welling preprocessing), stored sparse (CSR with values) for
+//! the native backend and densified on demand for the XLA path.
+
+use crate::graph::Csr;
+use crate::tensor::{spmm_csr, Matrix};
+
+/// Sparse normalized adjacency with self loops.
+#[derive(Clone, Debug)]
+pub struct NormAdj {
+    offsets: Vec<usize>,
+    targets: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl NormAdj {
+    /// Build from an unweighted symmetric CSR.
+    pub fn from_csr(g: &Csr) -> NormAdj {
+        let n = g.num_nodes();
+        // degree including the self loop
+        let inv_sqrt: Vec<f32> = (0..n)
+            .map(|v| 1.0 / ((g.degree(v) + 1) as f32).sqrt())
+            .collect();
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + g.degree(v) + 1; // + self loop
+        }
+        let mut targets = vec![0u32; offsets[n]];
+        let mut values = vec![0f32; offsets[n]];
+        for v in 0..n {
+            let mut c = offsets[v];
+            let mut self_written = false;
+            for &t in g.neighbors(v) {
+                // keep targets sorted: insert the self loop in order
+                if !self_written && t as usize > v {
+                    targets[c] = v as u32;
+                    values[c] = inv_sqrt[v] * inv_sqrt[v];
+                    self_written = true;
+                    c += 1;
+                }
+                targets[c] = t;
+                values[c] = inv_sqrt[v] * inv_sqrt[t as usize];
+                c += 1;
+            }
+            if !self_written {
+                targets[c] = v as u32;
+                values[c] = inv_sqrt[v] * inv_sqrt[v];
+            }
+        }
+        NormAdj { offsets, targets, values }
+    }
+
+    /// Node count.
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// `Â * dense` — the aggregation of one GCN layer.
+    pub fn spmm(&self, dense: &Matrix) -> Matrix {
+        spmm_csr(&self.offsets, &self.targets, &self.values, dense, self.num_nodes())
+    }
+
+    /// Densify into an `n x n` matrix (XLA path, pre-padding).
+    pub fn to_dense(&self, padded: usize) -> Matrix {
+        let n = self.num_nodes();
+        assert!(padded >= n);
+        let mut m = Matrix::zeros(padded, padded);
+        for v in 0..n {
+            for e in self.offsets[v]..self.offsets[v + 1] {
+                m[(v, self.targets[e] as usize)] = self.values[e];
+            }
+        }
+        m
+    }
+
+    /// Bytes resident.
+    pub fn nbytes(&self) -> usize {
+        self.offsets.len() * 8 + self.targets.len() * 4 + self.values.len() * 4
+    }
+
+    /// Row sums of `D^{1/2} Â D^{1/2}` are degrees+1 — cheap invariant:
+    /// every row of Â must sum to a positive value <= 1·√((d+1)) etc.
+    /// We expose raw parts for tests instead.
+    pub fn raw(&self) -> (&[usize], &[u32], &[f32]) {
+        (&self.offsets, &self.targets, &self.values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn rows_include_self_loop_and_are_sorted() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3)]).build();
+        let a = NormAdj::from_csr(&g);
+        let (off, tgt, _) = a.raw();
+        for v in 0..4 {
+            let row = &tgt[off[v]..off[v + 1]];
+            assert!(row.contains(&(v as u32)), "self loop missing at {v}");
+            assert!(row.windows(2).all(|w| w[0] < w[1]), "row {v} unsorted");
+        }
+    }
+
+    #[test]
+    fn symmetric_values() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
+        let a = NormAdj::from_csr(&g);
+        let d = a.to_dense(3);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((d[(i, j)] - d[(j, i)]).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_node_self_loop_is_one() {
+        let g = GraphBuilder::new(2).edges(&[]).build();
+        let a = NormAdj::from_csr(&g);
+        let d = a.to_dense(2);
+        assert!((d[(0, 0)] - 1.0).abs() < 1e-7);
+        assert_eq!(d[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn spmm_equals_dense_matmul() {
+        use crate::rng::Rng;
+        use crate::tensor::gemm;
+        let g = GraphBuilder::new(5)
+            .edges(&[(0, 1), (1, 2), (2, 3), (3, 4), (4, 0), (1, 3)])
+            .build();
+        let a = NormAdj::from_csr(&g);
+        let mut rng = Rng::seed_from_u64(1);
+        let x = Matrix::rand_uniform(5, 7, &mut rng);
+        let sparse = a.spmm(&x);
+        let dense = gemm(&a.to_dense(5), &x);
+        assert!(sparse.allclose(&dense, 1e-5));
+    }
+
+    #[test]
+    fn kipf_normalization_values() {
+        // edge 0-1 only: Â[0][1] = 1/sqrt(2)/sqrt(2) = 0.5, diag = 0.5
+        let g = GraphBuilder::new(2).edges(&[(0, 1)]).build();
+        let d = NormAdj::from_csr(&g).to_dense(2);
+        for (i, j, want) in [(0, 0, 0.5), (0, 1, 0.5), (1, 1, 0.5)] {
+            assert!((d[(i, j)] - want).abs() < 1e-6);
+        }
+    }
+}

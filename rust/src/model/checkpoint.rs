@@ -1,0 +1,133 @@
+//! Parameter checkpointing: save/restore a trained model so serving
+//! and resumed training don't retrain from scratch. Plain text format
+//! (offline image has no serde); exact f32 round-trip via bit patterns.
+
+use super::GcnParams;
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Serialise parameters. Format:
+/// ```text
+/// GADCKPT 1
+/// layers <L>
+/// w <rows> <cols> <hex bits...>
+/// ```
+pub fn to_text(params: &GcnParams) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "GADCKPT 1");
+    let _ = writeln!(s, "layers {}", params.layers());
+    for w in &params.ws {
+        let _ = write!(s, "w {} {}", w.rows, w.cols);
+        for v in w.data() {
+            let _ = write!(s, " {:08x}", v.to_bits());
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Parse a checkpoint produced by [`to_text`].
+pub fn from_text(text: &str) -> Result<GcnParams> {
+    let mut lines = text.lines();
+    let magic = lines.next().ok_or_else(|| anyhow!("empty checkpoint"))?;
+    if magic.trim() != "GADCKPT 1" {
+        return Err(anyhow!("bad magic '{magic}'"));
+    }
+    let layers: usize = lines
+        .next()
+        .and_then(|l| l.strip_prefix("layers "))
+        .ok_or_else(|| anyhow!("missing layers line"))?
+        .trim()
+        .parse()
+        .context("layer count")?;
+    let mut ws = Vec::with_capacity(layers);
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        if it.next() != Some("w") {
+            return Err(anyhow!("expected weight record, got '{line}'"));
+        }
+        let rows: usize = it.next().ok_or_else(|| anyhow!("rows"))?.parse()?;
+        let cols: usize = it.next().ok_or_else(|| anyhow!("cols"))?.parse()?;
+        let data: Result<Vec<f32>> = it
+            .map(|h| {
+                u32::from_str_radix(h, 16)
+                    .map(f32::from_bits)
+                    .map_err(|e| anyhow!("bad hex '{h}': {e}"))
+            })
+            .collect();
+        let data = data?;
+        if data.len() != rows * cols {
+            return Err(anyhow!("weight size mismatch: {}x{} vs {} values", rows, cols, data.len()));
+        }
+        ws.push(Matrix::from_vec(rows, cols, data));
+    }
+    if ws.len() != layers {
+        return Err(anyhow!("expected {layers} weight records, got {}", ws.len()));
+    }
+    Ok(GcnParams { ws })
+}
+
+/// Save to a file.
+pub fn save(params: &GcnParams, path: impl AsRef<Path>) -> Result<()> {
+    std::fs::write(path.as_ref(), to_text(params))
+        .with_context(|| format!("writing {}", path.as_ref().display()))
+}
+
+/// Load from a file.
+pub fn load(path: impl AsRef<Path>) -> Result<GcnParams> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    from_text(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let mut rng = Rng::seed_from_u64(1);
+        let p = GcnParams::init(13, 7, 3, 3, &mut rng);
+        let q = from_text(&to_text(&p)).unwrap();
+        assert_eq!(p.layers(), q.layers());
+        for (a, b) in p.ws.iter().zip(&q.ws) {
+            assert_eq!(a, b, "weights must round-trip exactly");
+        }
+    }
+
+    #[test]
+    fn special_values_survive() {
+        let p = GcnParams {
+            ws: vec![Matrix::from_vec(1, 4, vec![0.0, -0.0, f32::MIN_POSITIVE, 1e30])],
+        };
+        let q = from_text(&to_text(&p)).unwrap();
+        assert_eq!(p.ws[0].data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   q.ws[0].data().iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rejects_corrupt_checkpoints() {
+        assert!(from_text("").is_err());
+        assert!(from_text("GADCKPT 2\nlayers 0\n").is_err());
+        assert!(from_text("GADCKPT 1\nlayers 1\nw 2 2 00000000\n").is_err());
+        assert!(from_text("GADCKPT 1\nlayers 2\nw 1 1 3f800000\n").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut rng = Rng::seed_from_u64(2);
+        let p = GcnParams::init(4, 4, 2, 2, &mut rng);
+        let path = std::env::temp_dir().join("gad_ckpt_test.txt");
+        save(&p, &path).unwrap();
+        let q = load(&path).unwrap();
+        assert_eq!(p.ws, q.ws);
+        std::fs::remove_file(&path).ok();
+    }
+}

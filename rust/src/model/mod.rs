@@ -1,0 +1,109 @@
+//! GCN model state shared by both compute backends: parameters,
+//! optimizers, the normalized adjacency operator, and the batch type
+//! the trainer feeds to a [`Backend`](crate::backend::Backend).
+
+mod adjacency;
+pub mod checkpoint;
+mod optimizer;
+mod params;
+mod schedule;
+
+pub use adjacency::NormAdj;
+pub use optimizer::{Adam, Optimizer, Sgd};
+pub use params::GcnParams;
+pub use schedule::LrSchedule;
+
+use crate::tensor::Matrix;
+
+/// One training unit: an (augmented) subgraph with everything the
+/// forward/backward pass needs, in local ids.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Stable identity for executable-side caching (dense adjacency,
+    /// bucket choice). Unique per distinct subgraph within a run.
+    pub id: u64,
+    /// Symmetric-normalized adjacency with self loops.
+    pub adj: NormAdj,
+    /// `n x f` node features.
+    pub features: Matrix,
+    /// Label per node.
+    pub labels: Vec<u32>,
+    /// Nodes contributing to the loss (train split ∩ non-replica).
+    pub loss_mask: Vec<bool>,
+    /// Validation / test nodes (non-replica) for distributed eval.
+    pub val_mask: Vec<bool>,
+    pub test_mask: Vec<bool>,
+    pub num_classes: usize,
+}
+
+impl Batch {
+    /// Node count.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True if no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Count of loss-contributing nodes.
+    pub fn masked_count(&self) -> usize {
+        self.loss_mask.iter().filter(|&&m| m).count()
+    }
+
+    /// Bytes resident for this batch (memory accounting).
+    pub fn nbytes(&self) -> usize {
+        self.features.nbytes() + self.adj.nbytes() + self.labels.len() * 5
+    }
+
+    /// Structural invariants (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.len();
+        if self.features.rows != n {
+            return Err("features/labels mismatch".into());
+        }
+        if self.loss_mask.len() != n || self.val_mask.len() != n || self.test_mask.len() != n {
+            return Err("mask length mismatch".into());
+        }
+        if self.adj.num_nodes() != n {
+            return Err("adjacency size mismatch".into());
+        }
+        if self.labels.iter().any(|&l| l as usize >= self.num_classes) {
+            return Err("label out of range".into());
+        }
+        Ok(())
+    }
+}
+
+/// Gradients + loss returned by one backend step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    pub grads: Vec<Matrix>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn batch_validate_catches_mismatch() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
+        let b = Batch {
+            id: 0,
+            adj: NormAdj::from_csr(&g),
+            features: Matrix::zeros(3, 4),
+            labels: vec![0, 1, 0],
+            loss_mask: vec![true; 3],
+            val_mask: vec![false; 3],
+            test_mask: vec![false; 3],
+            num_classes: 2,
+        };
+        b.validate().unwrap();
+        let mut bad = b.clone();
+        bad.labels[0] = 9;
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Parameter-update rules. The paper's Eq. 12/16 is plain synchronous
+//! SGD on the consensus gradient; we default to Adam (the de-facto
+//! optimizer behind its PyTorch baselines at lr = 0.001) and keep SGD
+//! for ablations.
+
+use super::GcnParams;
+use crate::tensor::Matrix;
+
+/// A stateful optimizer applied by every worker to the *same* consensus
+/// gradient, keeping replicas in sync (updates are deterministic).
+pub trait Optimizer: Send {
+    /// Apply one update in place.
+    fn step(&mut self, params: &mut GcnParams, grads: &[Matrix]);
+    /// Clone into a boxed fresh instance with the same hyperparameters
+    /// (each worker holds its own state).
+    fn fresh(&self) -> Box<dyn Optimizer>;
+    /// Scale the effective learning rate relative to the base (LR
+    /// schedules; gradient scaling would be a no-op under Adam).
+    fn set_lr_factor(&mut self, _factor: f32) {}
+}
+
+/// Vanilla SGD: `W -= lr * g` (paper Eq. 12).
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub lr: f32,
+    factor: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Sgd { lr, factor: 1.0 }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut GcnParams, grads: &[Matrix]) {
+        let lr = self.lr * self.factor;
+        for (w, g) in params.ws.iter_mut().zip(grads) {
+            for (wv, gv) in w.data_mut().iter_mut().zip(g.data()) {
+                *wv -= lr * gv;
+            }
+        }
+    }
+    fn fresh(&self) -> Box<dyn Optimizer> {
+        Box::new(Sgd::new(self.lr))
+    }
+    fn set_lr_factor(&mut self, factor: f32) {
+        self.factor = factor;
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    factor: f32,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            factor: 1.0,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut GcnParams, grads: &[Matrix]) {
+        if self.m.is_empty() {
+            self.m = grads.iter().map(|g| vec![0.0; g.data().len()]).collect();
+            self.v = grads.iter().map(|g| vec![0.0; g.data().len()]).collect();
+        }
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for ((w, g), (m, v)) in params
+            .ws
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            for i in 0..g.data().len() {
+                let gv = g.data()[i];
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gv;
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gv * gv;
+                let mhat = m[i] / b1t;
+                let vhat = v[i] / b2t;
+                w.data_mut()[i] -= self.lr * self.factor * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+    fn fresh(&self) -> Box<dyn Optimizer> {
+        Box::new(Adam::new(self.lr))
+    }
+    fn set_lr_factor(&mut self, factor: f32) {
+        self.factor = factor;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn quadratic_grad(p: &GcnParams) -> Vec<Matrix> {
+        // grad of 0.5*||W||^2 is W: both optimizers must shrink weights
+        p.ws.clone()
+    }
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut p = GcnParams::init(4, 4, 2, 2, &mut rng);
+        let mut opt = Sgd::new(0.1);
+        let before: f32 = p.ws.iter().map(|w| w.frobenius()).sum();
+        for _ in 0..50 {
+            let g = quadratic_grad(&p);
+            opt.step(&mut p, &g);
+        }
+        let after: f32 = p.ws.iter().map(|w| w.frobenius()).sum();
+        assert!(after < 0.1 * before, "before {before} after {after}");
+    }
+
+    #[test]
+    fn adam_descends_quadratic() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut p = GcnParams::init(4, 4, 2, 2, &mut rng);
+        let mut opt = Adam::new(0.05);
+        let before: f32 = p.ws.iter().map(|w| w.frobenius()).sum();
+        for _ in 0..200 {
+            let g = quadratic_grad(&p);
+            opt.step(&mut p, &g);
+        }
+        let after: f32 = p.ws.iter().map(|w| w.frobenius()).sum();
+        assert!(after < 0.2 * before, "before {before} after {after}");
+    }
+
+    #[test]
+    fn identical_updates_keep_replicas_synced() {
+        let mut rng = Rng::seed_from_u64(3);
+        let p0 = GcnParams::init(4, 4, 2, 2, &mut rng);
+        let (mut a, mut b) = (p0.clone(), p0.clone());
+        let mut oa = Adam::new(0.01);
+        let mut ob = oa.fresh();
+        for _ in 0..10 {
+            let g = quadratic_grad(&a);
+            oa.step(&mut a, &g);
+            ob.step(&mut b, &g);
+        }
+        assert!(a.max_abs_diff(&b) == 0.0);
+    }
+}

@@ -1,0 +1,96 @@
+//! GCN trainable parameters.
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Weight matrices of an `L`-layer GCN:
+/// `f -> h -> ... -> h -> c` (no biases, per the paper's Eq. 7).
+#[derive(Clone, Debug)]
+pub struct GcnParams {
+    pub ws: Vec<Matrix>,
+}
+
+impl GcnParams {
+    /// Glorot-initialised parameters for the given shape.
+    pub fn init(feature_dim: usize, hidden: usize, classes: usize, layers: usize, rng: &mut Rng) -> Self {
+        assert!(layers >= 1);
+        let mut ws = Vec::with_capacity(layers);
+        if layers == 1 {
+            ws.push(Matrix::glorot(feature_dim, classes, rng));
+        } else {
+            ws.push(Matrix::glorot(feature_dim, hidden, rng));
+            for _ in 1..layers - 1 {
+                ws.push(Matrix::glorot(hidden, hidden, rng));
+            }
+            ws.push(Matrix::glorot(hidden, classes, rng));
+        }
+        GcnParams { ws }
+    }
+
+    /// Layer count.
+    pub fn layers(&self) -> usize {
+        self.ws.len()
+    }
+
+    /// Total scalar parameter count.
+    pub fn num_params(&self) -> usize {
+        self.ws.iter().map(|w| w.rows * w.cols).sum()
+    }
+
+    /// Bytes of one full gradient/parameter exchange (communication
+    /// accounting for consensus rounds).
+    pub fn nbytes(&self) -> usize {
+        self.num_params() * std::mem::size_of::<f32>()
+    }
+
+    /// Zeroed gradients of matching shapes.
+    pub fn zeros_like(&self) -> Vec<Matrix> {
+        self.ws.iter().map(|w| Matrix::zeros(w.rows, w.cols)).collect()
+    }
+
+    /// Flatten all weights into one vector (runtime marshalling).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_params());
+        for w in &self.ws {
+            out.extend_from_slice(w.data());
+        }
+        out
+    }
+
+    /// Max |Δ| against another parameter set (convergence checks).
+    pub fn max_abs_diff(&self, other: &GcnParams) -> f32 {
+        self.ws
+            .iter()
+            .zip(&other.ws)
+            .map(|(a, b)| a.max_abs_diff(b))
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_for_layer_counts() {
+        let mut rng = Rng::seed_from_u64(1);
+        for layers in 1..=4 {
+            let p = GcnParams::init(10, 8, 3, layers, &mut rng);
+            assert_eq!(p.layers(), layers);
+            assert_eq!(p.ws[0].rows, 10);
+            assert_eq!(p.ws.last().unwrap().cols, 3);
+            for i in 1..layers {
+                assert_eq!(p.ws[i - 1].cols, p.ws[i].rows, "chain broken at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn num_params_and_bytes() {
+        let mut rng = Rng::seed_from_u64(2);
+        let p = GcnParams::init(4, 3, 2, 2, &mut rng);
+        assert_eq!(p.num_params(), 4 * 3 + 3 * 2);
+        assert_eq!(p.nbytes(), (4 * 3 + 3 * 2) * 4);
+        assert_eq!(p.flatten().len(), p.num_params());
+    }
+}

@@ -1,0 +1,102 @@
+//! Learning-rate schedules. The paper trains at a fixed η = 0.001;
+//! production training wants warmup + decay, so the trainer accepts a
+//! schedule and the ablation harness compares them.
+
+/// η as a function of the epoch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// The paper's setting: η constant.
+    Constant,
+    /// Multiply by `gamma` every `every` epochs.
+    Step { every: usize, gamma: f32 },
+    /// Cosine decay from η to `floor * η` over `total` epochs.
+    Cosine { total: usize, floor: f32 },
+    /// Linear warmup over `epochs` then constant.
+    Warmup { epochs: usize },
+}
+
+impl LrSchedule {
+    /// The multiplier applied to the base learning rate at `epoch`.
+    pub fn factor(&self, epoch: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::Step { every, gamma } => {
+                gamma.powi((epoch / every.max(1)) as i32)
+            }
+            LrSchedule::Cosine { total, floor } => {
+                let t = (epoch as f32 / total.max(1) as f32).min(1.0);
+                floor + (1.0 - floor) * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+            LrSchedule::Warmup { epochs } => {
+                if epochs == 0 || epoch >= epochs {
+                    1.0
+                } else {
+                    (epoch + 1) as f32 / epochs as f32
+                }
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for LrSchedule {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "constant" => Ok(LrSchedule::Constant),
+            "step" => Ok(LrSchedule::Step { every: 30, gamma: 0.5 }),
+            "cosine" => Ok(LrSchedule::Cosine { total: 100, floor: 0.01 }),
+            "warmup" => Ok(LrSchedule::Warmup { epochs: 5 }),
+            other => Err(format!("unknown schedule '{other}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_one() {
+        for e in [0, 10, 1000] {
+            assert_eq!(LrSchedule::Constant.factor(e), 1.0);
+        }
+    }
+
+    #[test]
+    fn step_halves() {
+        let s = LrSchedule::Step { every: 10, gamma: 0.5 };
+        assert_eq!(s.factor(0), 1.0);
+        assert_eq!(s.factor(9), 1.0);
+        assert_eq!(s.factor(10), 0.5);
+        assert_eq!(s.factor(25), 0.25);
+    }
+
+    #[test]
+    fn cosine_monotone_decreasing_to_floor() {
+        let s = LrSchedule::Cosine { total: 50, floor: 0.1 };
+        let mut prev = s.factor(0);
+        assert!((prev - 1.0).abs() < 1e-6);
+        for e in 1..=50 {
+            let f = s.factor(e);
+            assert!(f <= prev + 1e-6, "not monotone at {e}");
+            prev = f;
+        }
+        assert!((s.factor(50) - 0.1).abs() < 1e-5);
+        assert!((s.factor(500) - 0.1).abs() < 1e-5); // clamps past total
+    }
+
+    #[test]
+    fn warmup_ramps_then_flat() {
+        let s = LrSchedule::Warmup { epochs: 4 };
+        assert_eq!(s.factor(0), 0.25);
+        assert_eq!(s.factor(1), 0.5);
+        assert_eq!(s.factor(3), 1.0);
+        assert_eq!(s.factor(10), 1.0);
+    }
+
+    #[test]
+    fn parse() {
+        assert_eq!("constant".parse::<LrSchedule>().unwrap(), LrSchedule::Constant);
+        assert!("nope".parse::<LrSchedule>().is_err());
+    }
+}

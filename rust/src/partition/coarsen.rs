@@ -1,0 +1,153 @@
+//! Coarsening phase: randomized heavy-edge matching (paper §3.2.1
+//! step 1). Visit nodes in random order; match each unmatched node with
+//! its unmatched neighbour of maximum edge weight (ties broken
+//! uniformly); merge matched pairs, summing node weights and collapsing
+//! parallel edges by summing their weights.
+
+use super::wgraph::WGraph;
+use crate::rng::Rng;
+
+/// One coarsening level: the fine graph, the coarse graph, and the
+/// fine-node -> coarse-node map.
+pub struct Level {
+    pub fine: WGraph,
+    pub coarse: WGraph,
+    pub map: Vec<u32>,
+}
+
+/// Perform one round of heavy-edge matching + contraction.
+pub fn coarsen_once(g: &WGraph, rng: &mut Rng) -> Level {
+    let n = g.num_nodes();
+    const UNMATCHED: u32 = u32::MAX;
+    let mut mate = vec![UNMATCHED; n];
+
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+
+    let mut tied: Vec<u32> = Vec::new();
+    for &v in &order {
+        let v = v as usize;
+        if mate[v] != UNMATCHED {
+            continue;
+        }
+        // heaviest unmatched neighbour; random tie-break
+        let (ts, ws) = g.neighbors(v);
+        let mut best_w = 0u64;
+        tied.clear();
+        for (&t, &w) in ts.iter().zip(ws) {
+            if mate[t as usize] != UNMATCHED || t as usize == v {
+                continue;
+            }
+            if w > best_w {
+                best_w = w;
+                tied.clear();
+                tied.push(t);
+            } else if w == best_w && best_w > 0 {
+                tied.push(t);
+            }
+        }
+        if let Some(&u) = (!tied.is_empty()).then(|| rng.choose(&tied)) {
+            mate[v] = u;
+            mate[u as usize] = v as u32;
+        } else {
+            mate[v] = v as u32; // matched with itself (stays single)
+        }
+    }
+
+    // assign coarse ids (pair -> one id)
+    let mut map = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for v in 0..n {
+        if map[v] != u32::MAX {
+            continue;
+        }
+        map[v] = next;
+        let m = mate[v] as usize;
+        if m != v && m < n {
+            map[m] = next;
+        }
+        next += 1;
+    }
+    let cn = next as usize;
+
+    // coarse node weights
+    let mut nweights = vec![0u64; cn];
+    for v in 0..n {
+        nweights[map[v] as usize] += g.nweights[v];
+    }
+
+    // coarse edges: collapse parallel edges by summing weights
+    use std::collections::HashMap;
+    let mut emap: HashMap<(u32, u32), u64> = HashMap::new();
+    for v in 0..n {
+        let cv = map[v];
+        let (ts, ws) = g.neighbors(v);
+        for (&t, &w) in ts.iter().zip(ws) {
+            let ct = map[t as usize];
+            if cv < ct {
+                *emap.entry((cv, ct)).or_insert(0) += w;
+            }
+        }
+    }
+    let mut edges: Vec<(u32, u32, u64)> = emap.into_iter().map(|((u, v), w)| (u, v, w)).collect();
+    // HashMap iteration order is seeded per-process: sort so the whole
+    // pipeline is deterministic for a given PartitionConfig::seed
+    edges.sort_unstable();
+    let coarse = WGraph::from_weighted_edges(cn, &edges, nweights);
+
+    Level { fine: g.clone(), coarse, map }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn coarsen_preserves_total_node_weight() {
+        let g = GraphBuilder::new(8)
+            .edges(&[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7), (7, 0)])
+            .build();
+        let w = WGraph::from_csr(&g);
+        let mut rng = Rng::seed_from_u64(1);
+        let lvl = coarsen_once(&w, &mut rng);
+        assert_eq!(lvl.coarse.total_nweight(), 8);
+        assert!(lvl.coarse.num_nodes() <= 8);
+        assert!(lvl.coarse.num_nodes() >= 4); // perfect matching halves
+    }
+
+    #[test]
+    fn map_is_total_and_in_range() {
+        let g = GraphBuilder::new(6)
+            .edges(&[(0, 1), (1, 2), (3, 4), (4, 5), (2, 3)])
+            .build();
+        let w = WGraph::from_csr(&g);
+        let mut rng = Rng::seed_from_u64(2);
+        let lvl = coarsen_once(&w, &mut rng);
+        let cn = lvl.coarse.num_nodes() as u32;
+        assert!(lvl.map.iter().all(|&c| c < cn));
+        // every coarse id hit
+        let mut seen = vec![false; cn as usize];
+        for &c in &lvl.map {
+            seen[c as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn cut_preserved_under_projection() {
+        // a cut measured on the coarse graph equals the fine cut of the
+        // projected assignment
+        let g = GraphBuilder::new(6)
+            .edges(&[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)])
+            .build();
+        let w = WGraph::from_csr(&g);
+        let mut rng = Rng::seed_from_u64(3);
+        let lvl = coarsen_once(&w, &mut rng);
+        let cn = lvl.coarse.num_nodes();
+        let coarse_assign: Vec<u32> = (0..cn).map(|c| (c % 2) as u32).collect();
+        let fine_assign: Vec<u32> =
+            lvl.map.iter().map(|&c| coarse_assign[c as usize]).collect();
+        assert_eq!(lvl.coarse.weighted_cut(&coarse_assign), lvl.fine.weighted_cut(&fine_assign));
+    }
+}

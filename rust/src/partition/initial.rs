@@ -1,0 +1,135 @@
+//! Initial partition phase: seeded region growing (paper §3.2.1
+//! step 2). Choose k random seeds; repeatedly expand the lightest part
+//! by absorbing the frontier node attached through the heaviest edge;
+//! sweep leftover nodes into the nearest part.
+
+use super::wgraph::WGraph;
+use crate::rng::Rng;
+use std::collections::BinaryHeap;
+
+/// Grow `k` regions on `g`; returns a part id per node. The balance
+/// constraint of Eq. 2 is enforced on node *weights* (which equal node
+/// counts of the original graph after projection).
+pub fn region_grow(g: &WGraph, k: usize, epsilon: f64, rng: &mut Rng) -> Vec<u32> {
+    let n = g.num_nodes();
+    const FREE: u32 = u32::MAX;
+    let mut assignment = vec![FREE; n];
+    let total_w = g.total_nweight();
+    let cap = ((1.0 + epsilon) * (total_w as f64 / k as f64).ceil()).ceil() as u64;
+
+    // distinct random seeds
+    let seeds = rng.sample_indices(n, k);
+    let mut part_weight = vec![0u64; k];
+    // per-part max-heap of (edge weight, node) frontier candidates
+    let mut frontiers: Vec<BinaryHeap<(u64, u32)>> = vec![BinaryHeap::new(); k];
+    for (p, &s) in seeds.iter().enumerate() {
+        assignment[s] = p as u32;
+        part_weight[p] += g.nweights[s];
+        let (ts, ws) = g.neighbors(s);
+        for (&t, &w) in ts.iter().zip(ws) {
+            frontiers[p].push((w, t));
+        }
+    }
+
+    // round-robin over parts, always trying the lightest unfinished part
+    let mut active: Vec<usize> = (0..k).collect();
+    while !active.is_empty() {
+        // pick the active part with the least weight (keeps balance)
+        let (ai, &p) = active
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &p)| part_weight[p])
+            .unwrap();
+        let mut grew = false;
+        while let Some((_, v)) = frontiers[p].pop() {
+            let v = v as usize;
+            if assignment[v] != FREE {
+                continue;
+            }
+            if part_weight[p] + g.nweights[v] > cap {
+                break;
+            }
+            assignment[v] = p as u32;
+            part_weight[p] += g.nweights[v];
+            let (ts, ws) = g.neighbors(v);
+            for (&t, &w) in ts.iter().zip(ws) {
+                if assignment[t as usize] == FREE {
+                    frontiers[p].push((w, t));
+                }
+            }
+            grew = true;
+            break;
+        }
+        if !grew || frontiers[p].is_empty() && part_weight[p] >= cap {
+            // frontier exhausted or at capacity
+            if !grew {
+                active.remove(ai);
+            }
+        }
+    }
+
+    // leftover sweep: BFS from assigned nodes, attach to the nearest
+    // part that still has capacity, else the lightest part (paper:
+    // "pick up each node and add it into the nearest partition")
+    let mut queue: std::collections::VecDeque<u32> = (0..n as u32)
+        .filter(|&v| assignment[v as usize] != FREE)
+        .collect();
+    while let Some(v) = queue.pop_front() {
+        let p = assignment[v as usize] as usize;
+        let (ts, _) = g.neighbors(v as usize);
+        for &t in ts {
+            if assignment[t as usize] == FREE {
+                let w = g.nweights[t as usize];
+                let dest = if part_weight[p] + w <= cap {
+                    p
+                } else {
+                    (0..k).min_by_key(|&q| part_weight[q]).unwrap()
+                };
+                assignment[t as usize] = dest as u32;
+                part_weight[dest] += w;
+                queue.push_back(t);
+            }
+        }
+    }
+    // disconnected leftovers -> lightest part
+    for v in 0..n {
+        if assignment[v] == FREE {
+            let p = (0..k).min_by_key(|&p| part_weight[p]).unwrap();
+            assignment[v] = p as u32;
+            part_weight[p] += g.nweights[v];
+        }
+    }
+    assignment
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn all_nodes_assigned() {
+        let g = GraphBuilder::new(20)
+            .edges(&(0..19).map(|i| (i as u32, i as u32 + 1)).collect::<Vec<_>>())
+            .build();
+        let w = WGraph::from_csr(&g);
+        let mut rng = Rng::seed_from_u64(4);
+        let a = region_grow(&w, 4, 0.1, &mut rng);
+        assert!(a.iter().all(|&p| p < 4));
+        let mut sizes = [0usize; 4];
+        for &p in &a {
+            sizes[p as usize] += 1;
+        }
+        assert!(sizes.iter().all(|&s| s > 0));
+    }
+
+    #[test]
+    fn handles_disconnected_components() {
+        let g = GraphBuilder::new(6).edges(&[(0, 1), (2, 3), (4, 5)]).build();
+        let w = WGraph::from_csr(&g);
+        let mut rng = Rng::seed_from_u64(5);
+        let a = region_grow(&w, 2, 0.2, &mut rng);
+        assert_eq!(a.len(), 6);
+        assert!(a.iter().all(|&p| p < 2));
+    }
+}

@@ -1,0 +1,118 @@
+//! Partition quality metrics beyond raw edge cut: conductance,
+//! modularity and the replication factor — what `gad partition` prints
+//! and the comparison yardstick between the multilevel and random
+//! partitioners.
+
+use super::Partitioning;
+use crate::graph::Csr;
+
+/// Conductance of one part: cut(S) / min(vol(S), vol(V\S)).
+pub fn conductance(g: &Csr, assignment: &[u32], part: u32) -> f64 {
+    let total_vol = g.num_arcs() as f64;
+    let mut vol = 0.0f64;
+    let mut cut = 0.0f64;
+    for v in 0..g.num_nodes() {
+        if assignment[v] != part {
+            continue;
+        }
+        vol += g.degree(v) as f64;
+        cut += g
+            .neighbors(v)
+            .iter()
+            .filter(|&&t| assignment[t as usize] != part)
+            .count() as f64;
+    }
+    let denom = vol.min(total_vol - vol);
+    if denom == 0.0 {
+        0.0
+    } else {
+        cut / denom
+    }
+}
+
+/// Mean conductance over parts (lower = better-separated parts).
+pub fn avg_conductance(g: &Csr, p: &Partitioning) -> f64 {
+    (0..p.k as u32).map(|i| conductance(g, &p.assignment, i)).sum::<f64>() / p.k as f64
+}
+
+/// Newman modularity of the partition (higher = more community-like).
+pub fn modularity(g: &Csr, assignment: &[u32]) -> f64 {
+    let m2 = g.num_arcs() as f64; // 2m
+    if m2 == 0.0 {
+        return 0.0;
+    }
+    let k = assignment.iter().copied().max().map(|x| x as usize + 1).unwrap_or(1);
+    // per part: internal arc count and total degree
+    let mut internal = vec![0.0f64; k];
+    let mut degree = vec![0.0f64; k];
+    for v in 0..g.num_nodes() {
+        let p = assignment[v] as usize;
+        degree[p] += g.degree(v) as f64;
+        internal[p] += g
+            .neighbors(v)
+            .iter()
+            .filter(|&&t| assignment[t as usize] as usize == p)
+            .count() as f64;
+    }
+    (0..k)
+        .map(|p| internal[p] / m2 - (degree[p] / m2) * (degree[p] / m2))
+        .sum()
+}
+
+/// Replication factor of an augmented partitioning: total stored nodes
+/// (base + replicas) over original nodes — 1.0 means no redundancy.
+pub fn replication_factor(num_nodes: usize, replicas_total: usize) -> f64 {
+    if num_nodes == 0 {
+        return 1.0;
+    }
+    (num_nodes + replicas_total) as f64 / num_nodes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::partition::{partition, random, PartitionConfig};
+    use crate::datasets::SyntheticSpec;
+
+    fn two_triangles() -> Csr {
+        GraphBuilder::new(6)
+            .edges(&[(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3), (2, 3)])
+            .build()
+    }
+
+    #[test]
+    fn conductance_of_clean_split_is_low() {
+        let g = two_triangles();
+        let a = vec![0, 0, 0, 1, 1, 1];
+        let c = conductance(&g, &a, 0);
+        // one cut edge over volume 7
+        assert!((c - 1.0 / 7.0).abs() < 1e-12, "c={c}");
+    }
+
+    #[test]
+    fn modularity_prefers_communities() {
+        let g = two_triangles();
+        let good = modularity(&g, &[0, 0, 0, 1, 1, 1]);
+        let bad = modularity(&g, &[0, 1, 0, 1, 0, 1]);
+        assert!(good > bad, "good {good} bad {bad}");
+        assert!(good > 0.3);
+    }
+
+    #[test]
+    fn multilevel_beats_random_on_modularity() {
+        let ds = SyntheticSpec::tiny().generate(6);
+        let p = partition(&ds.graph, &PartitionConfig { k: 4, seed: 6, ..Default::default() });
+        let r = random::random_partition(ds.graph.num_nodes(), 4, 6);
+        assert!(
+            modularity(&ds.graph, &p.assignment) > modularity(&ds.graph, &r),
+            "multilevel should find more modular parts"
+        );
+    }
+
+    #[test]
+    fn replication_factor_identity() {
+        assert_eq!(replication_factor(100, 0), 1.0);
+        assert!((replication_factor(100, 10) - 1.1).abs() < 1e-12);
+    }
+}

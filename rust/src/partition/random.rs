@@ -1,0 +1,40 @@
+//! Random (hash) partitioner — the DistDGL-style baseline and the
+//! control arm for partition-quality comparisons.
+
+use crate::rng::Rng;
+
+/// Uniform random balanced partition: a shuffled round-robin, so part
+/// sizes differ by at most one.
+pub fn random_partition(n: usize, k: usize, seed: u64) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let mut rng = Rng::seed_from_u64(seed);
+    rng.shuffle(&mut order);
+    let mut assignment = vec![0u32; n];
+    for (i, &v) in order.iter().enumerate() {
+        assignment[v as usize] = (i % k) as u32;
+    }
+    assignment
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_to_within_one() {
+        let a = random_partition(103, 4, 7);
+        let mut sizes = [0usize; 4];
+        for &p in &a {
+            sizes[p as usize] += 1;
+        }
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(random_partition(50, 3, 1), random_partition(50, 3, 1));
+        assert_ne!(random_partition(50, 3, 1), random_partition(50, 3, 2));
+    }
+}

@@ -1,0 +1,110 @@
+//! Weighted graph used inside the multilevel partitioner: node weights
+//! accumulate merged fine nodes, edge weights accumulate merged fine
+//! edges (paper §3.2.1 coarsening phase).
+
+use crate::graph::Csr;
+
+/// CSR graph with u64 node and edge weights.
+#[derive(Clone, Debug)]
+pub struct WGraph {
+    pub offsets: Vec<usize>,
+    pub targets: Vec<u32>,
+    pub eweights: Vec<u64>,
+    pub nweights: Vec<u64>,
+}
+
+impl WGraph {
+    /// Lift an unweighted [`Csr`] (all weights 1).
+    pub fn from_csr(g: &Csr) -> WGraph {
+        WGraph {
+            offsets: g.offsets().to_vec(),
+            targets: g.targets().to_vec(),
+            eweights: vec![1; g.targets().len()],
+            nweights: vec![1; g.num_nodes()],
+        }
+    }
+
+    /// Build from a weighted (undirected, canonical `u<v`) edge list.
+    pub fn from_weighted_edges(
+        n: usize,
+        edges: &[(u32, u32, u64)],
+        nweights: Vec<u64>,
+    ) -> WGraph {
+        assert_eq!(nweights.len(), n);
+        let mut deg = vec![0usize; n];
+        for &(u, v, _) in edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + deg[v];
+        }
+        let mut cursor = offsets.clone();
+        let mut targets = vec![0u32; edges.len() * 2];
+        let mut eweights = vec![0u64; edges.len() * 2];
+        for &(u, v, w) in edges {
+            targets[cursor[u as usize]] = v;
+            eweights[cursor[u as usize]] = w;
+            cursor[u as usize] += 1;
+            targets[cursor[v as usize]] = u;
+            eweights[cursor[v as usize]] = w;
+            cursor[v as usize] += 1;
+        }
+        WGraph { offsets, targets, eweights, nweights }
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.nweights.len()
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> (&[u32], &[u64]) {
+        let r = self.offsets[v]..self.offsets[v + 1];
+        (&self.targets[r.clone()], &self.eweights[r])
+    }
+
+    /// Total node weight.
+    pub fn total_nweight(&self) -> u64 {
+        self.nweights.iter().sum()
+    }
+
+    /// Sum of edge weights crossing parts (each undirected edge once).
+    pub fn weighted_cut(&self, assignment: &[u32]) -> u64 {
+        let mut cut = 0u64;
+        for v in 0..self.num_nodes() {
+            let (ts, ws) = self.neighbors(v);
+            for (&t, &w) in ts.iter().zip(ws) {
+                if (v as u32) < t && assignment[v] != assignment[t as usize] {
+                    cut += w;
+                }
+            }
+        }
+        cut
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn from_csr_unit_weights() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
+        let w = WGraph::from_csr(&g);
+        assert_eq!(w.total_nweight(), 3);
+        assert_eq!(w.weighted_cut(&[0, 0, 1]), 1);
+        assert_eq!(w.weighted_cut(&[0, 1, 0]), 2);
+    }
+
+    #[test]
+    fn weighted_edges_roundtrip() {
+        let w = WGraph::from_weighted_edges(3, &[(0, 1, 5), (1, 2, 2)], vec![1, 2, 1]);
+        let (ts, ws) = w.neighbors(1);
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ws.iter().sum::<u64>(), 7);
+        assert_eq!(w.weighted_cut(&[0, 1, 1]), 5);
+    }
+}

@@ -1,0 +1,80 @@
+//! Tiny property-testing helper (proptest is not in the offline
+//! registry): run a predicate over many seeded random cases and report
+//! the first failing seed so the case replays exactly.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries skip the crate's rpath flags and
+//! // cannot load libstdc++ from the xla extension bundle)
+//! use gad::proptest_util::forall;
+//! forall("addition commutes", 100, |rng| {
+//!     let (a, b) = (rng.gen_range(1000) as u64, rng.gen_range(1000) as u64);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Run `cases` random trials of `property`. Each trial gets an
+/// [`Rng`] derived from the trial index, so failures print a
+/// reproduction seed. Panics (test failure) on the first `Err`.
+pub fn forall(name: &str, cases: usize, property: impl Fn(&mut Rng) -> Result<(), String>) {
+    const SEED_BASE: u64 = 0x5eed_ba5e_0000_0000;
+    for case in 0..cases {
+        let seed = SEED_BASE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Draw a random undirected graph: `n` in [n_min, n_max], edge
+/// probability `p`; returns the edge list and node count.
+pub fn arb_graph(rng: &mut Rng, n_min: usize, n_max: usize, p: f64) -> (usize, Vec<(u32, u32)>) {
+    let n = n_min + rng.gen_range(n_max - n_min + 1);
+    let mut edges = Vec::new();
+    for u in 0..n as u32 {
+        for v in (u + 1)..n as u32 {
+            if rng.gen_bool(p) {
+                edges.push((u, v));
+            }
+        }
+    }
+    // ensure connectivity-ish: chain fallback so partitioners have work
+    for v in 1..n as u32 {
+        if rng.gen_bool(0.5) {
+            edges.push((v - 1, v));
+        }
+    }
+    (n, edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("true", 50, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failures() {
+        forall("always fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn arb_graph_bounds() {
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..20 {
+            let (n, edges) = arb_graph(&mut rng, 3, 10, 0.3);
+            assert!((3..=10).contains(&n));
+            for (u, v) in edges {
+                assert!((u as usize) < n && (v as usize) < n && u < v);
+            }
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Artifact manifest: a plain whitespace format (no serde offline).
+//!
+//! ```text
+//! # kind layers nodes fdim hidden classes file
+//! train   2 512 1433 128 7 train_l2_n512_f1433_h128_c7.hlo.txt
+//! predict 2 512 1433 128 7 predict_l2_n512_f1433_h128_c7.hlo.txt
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// What an artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `(adj, x, y_onehot, mask, w*) -> (loss, grad_w*)`
+    Train,
+    /// `(adj, x, w*) -> (logits,)`
+    Predict,
+}
+
+impl std::str::FromStr for ArtifactKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "train" => Ok(ArtifactKind::Train),
+            "predict" => Ok(ArtifactKind::Predict),
+            other => Err(anyhow!("unknown artifact kind '{other}'")),
+        }
+    }
+}
+
+/// One line of the manifest.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub kind: ArtifactKind,
+    pub layers: usize,
+    pub nodes: usize,
+    pub fdim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub file: String,
+}
+
+/// Parse `manifest.txt`.
+pub fn parse_manifest(path: &Path) -> Result<Vec<ManifestEntry>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_manifest_str(&text)
+}
+
+/// Parse manifest text (split out for tests).
+pub fn parse_manifest_str(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() != 7 {
+            return Err(anyhow!("manifest line {}: want 7 fields, got {}", lineno + 1, fields.len()));
+        }
+        out.push(ManifestEntry {
+            kind: fields[0].parse()?,
+            layers: fields[1].parse().context("layers")?,
+            nodes: fields[2].parse().context("nodes")?,
+            fdim: fields[3].parse().context("fdim")?,
+            hidden: fields[4].parse().context("hidden")?,
+            classes: fields[5].parse().context("classes")?,
+            file: fields[6].to_string(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_comments_and_entries() {
+        let text = "# comment\n\ntrain 2 512 1433 128 7 a.hlo.txt\npredict 2 512 1433 128 7 b.hlo.txt\n";
+        let es = parse_manifest_str(text).unwrap();
+        assert_eq!(es.len(), 2);
+        assert_eq!(es[0].kind, ArtifactKind::Train);
+        assert_eq!(es[1].kind, ArtifactKind::Predict);
+        assert_eq!(es[0].nodes, 512);
+        assert_eq!(es[0].file, "a.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_manifest_str("train 2 512\n").is_err());
+        assert!(parse_manifest_str("frobnicate 2 512 1433 128 7 a\n").is_err());
+        assert!(parse_manifest_str("train x 512 1433 128 7 a\n").is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! PJRT runtime: loads the HLO-text artifacts that `make artifacts`
+//! produced (L2 JAX model + L1 Pallas kernel, AOT-lowered) and executes
+//! them on the CPU PJRT client. Python is never on this path.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+mod manifest;
+
+pub use manifest::{parse_manifest_str, ArtifactKind, ManifestEntry};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape key an executable is compiled for.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BucketKey {
+    pub kind: ArtifactKind,
+    pub layers: usize,
+    /// Padded node count.
+    pub nodes: usize,
+    pub fdim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+/// PJRT client + lazily compiled executable cache over an artifact dir.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    entries: Vec<ManifestEntry>,
+    cache: HashMap<BucketKey, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open `dir` (must contain `manifest.txt`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let entries = manifest::parse_manifest(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, entries, cache: HashMap::new() })
+    }
+
+    /// All manifest entries.
+    pub fn entries(&self) -> &[ManifestEntry] {
+        &self.entries
+    }
+
+    /// Smallest bucket satisfying the request, if any.
+    pub fn find_bucket(
+        &self,
+        kind: ArtifactKind,
+        layers: usize,
+        fdim: usize,
+        hidden: usize,
+        classes: usize,
+        min_nodes: usize,
+    ) -> Option<BucketKey> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.kind == kind
+                    && e.layers == layers
+                    && e.fdim == fdim
+                    && e.hidden == hidden
+                    && e.classes == classes
+                    && e.nodes >= min_nodes
+            })
+            .min_by_key(|e| e.nodes)
+            .map(|e| BucketKey { kind, layers, nodes: e.nodes, fdim, hidden, classes })
+    }
+
+    fn entry_for(&self, key: &BucketKey) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == key.kind
+                && e.layers == key.layers
+                && e.nodes == key.nodes
+                && e.fdim == key.fdim
+                && e.hidden == key.hidden
+                && e.classes == key.classes
+        })
+    }
+
+    /// Compile (or fetch cached) and execute with the given inputs;
+    /// returns the decomposed output tuple as host literals.
+    pub fn execute(&mut self, key: &BucketKey, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if !self.cache.contains_key(key) {
+            let entry = self
+                .entry_for(key)
+                .ok_or_else(|| anyhow!("no artifact for {key:?}"))?;
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        let exe = self.cache.get(key).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {key:?}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    /// Number of compiled executables held.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Build an `[r, c]` f32 literal from a row-major slice.
+pub fn literal_2d(data: &[f32], r: usize, c: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), r * c);
+    xla::Literal::vec1(data)
+        .reshape(&[r as i64, c as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// Build a `[n]` f32 literal.
+pub fn literal_1d(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}

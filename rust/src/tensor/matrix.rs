@@ -1,0 +1,203 @@
+//! Row-major dense f32 matrix.
+
+use crate::rng::Rng;
+use std::ops::{Index, IndexMut};
+
+/// A dense, row-major `rows x cols` matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from an existing row-major buffer (length must be rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform entries in [-0.5, 0.5).
+    pub fn rand_uniform(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.gen_f32() - 0.5).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Glorot/Xavier-uniform init: U(-s, s) with s = sqrt(6/(fan_in+fan_out)).
+    pub fn glorot(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let s = (6.0 / (rows + cols) as f32).sqrt();
+        let data = (0..rows * cols).map(|_| (rng.gen_f32() * 2.0 - 1.0) * s).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity (square).
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the underlying row-major buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Out-of-place transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Copy `self` into the top-left corner of a larger zero matrix.
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols, "pad_to must grow");
+        let mut p = Matrix::zeros(rows, cols);
+        for i in 0..self.rows {
+            p.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        p
+    }
+
+    /// Take the top-left `rows x cols` block.
+    pub fn crop(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows <= self.rows && cols <= self.cols, "crop must shrink");
+        let mut c = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            c.row_mut(i).copy_from_slice(&self.row(i)[..cols]);
+        }
+        c
+    }
+
+    /// Max |a-b| across entries (shapes must match).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Elementwise closeness with combined abs/rel tolerance.
+    pub fn allclose(&self, other: &Matrix, tol: f32) -> bool {
+        if (self.rows, self.cols) != (other.rows, other.cols) {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= tol + tol * a.abs().max(b.abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Per-row argmax (ties -> first).
+    pub fn argmax_rows(&self) -> Vec<u32> {
+        (0..self.rows)
+            .map(|i| {
+                let row = self.row(i);
+                let mut best = 0usize;
+                for j in 1..row.len() {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                best as u32
+            })
+            .collect()
+    }
+
+    /// Bytes held by the value buffer (memory accounting).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_crop_roundtrip() {
+        let mut rng = Rng::seed_from_u64(1);
+        let m = Matrix::rand_uniform(5, 3, &mut rng);
+        let p = m.pad_to(8, 4);
+        assert_eq!(p.rows, 8);
+        assert_eq!(p[(7, 3)], 0.0);
+        assert_eq!(p.crop(5, 3), m);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seed_from_u64(2);
+        let m = Matrix::rand_uniform(4, 7, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn glorot_within_bound() {
+        let mut rng = Rng::seed_from_u64(3);
+        let m = Matrix::glorot(100, 50, &mut rng);
+        let s = (6.0f32 / 150.0).sqrt();
+        assert!(m.data().iter().all(|x| x.abs() <= s));
+    }
+
+    #[test]
+    fn argmax_rows_ties_first() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 3.0, 3.0, 0.0, -1.0, -2.0]);
+        assert_eq!(m.argmax_rows(), vec![1, 0]);
+    }
+}

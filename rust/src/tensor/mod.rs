@@ -1,0 +1,127 @@
+//! Minimal dense f32 tensor substrate for the native compute backend.
+//!
+//! The offline registry ships no ndarray/BLAS, so the [`NativeBackend`]
+//! (the pure-rust GCN oracle/fallback) runs on this module: a row-major
+//! [`Matrix`] with a blocked, multi-threaded GEMM and the elementwise /
+//! reduction ops a GCN needs. The XLA path does *not* use this — it is
+//! the second implementation the HLO numerics are cross-checked against.
+//!
+//! [`NativeBackend`]: crate::backend::NativeBackend
+
+mod matrix;
+mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{
+    add_assign, addmm, cross_entropy_masked, gemm, gemm_ta, gemm_tb, leaky_relu, relu,
+    relu_grad_inplace, scale, set_intra_threads, softmax_rows, spmm_csr,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_gemm(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for k in 0..a.cols {
+                let av = a[(i, k)];
+                for j in 0..b.cols {
+                    c[(i, j)] += av * b[(k, j)];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive_various_shapes() {
+        let mut rng = Rng::seed_from_u64(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 64, 64), (100, 7, 129)] {
+            let a = Matrix::rand_uniform(m, k, &mut rng);
+            let b = Matrix::rand_uniform(k, n, &mut rng);
+            let c = gemm(&a, &b);
+            let r = naive_gemm(&a, &b);
+            assert!(c.allclose(&r, 1e-4), "gemm mismatch at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_ta_is_at_b() {
+        let mut rng = Rng::seed_from_u64(2);
+        let a = Matrix::rand_uniform(13, 6, &mut rng); // a: k x m -> aT: m x k
+        let b = Matrix::rand_uniform(13, 9, &mut rng);
+        let c = gemm_ta(&a, &b);
+        let r = naive_gemm(&a.transpose(), &b);
+        assert!(c.allclose(&r, 1e-4));
+    }
+
+    #[test]
+    fn gemm_tb_is_a_bt() {
+        let mut rng = Rng::seed_from_u64(3);
+        let a = Matrix::rand_uniform(8, 11, &mut rng);
+        let b = Matrix::rand_uniform(5, 11, &mut rng);
+        let c = gemm_tb(&a, &b);
+        let r = naive_gemm(&a, &b.transpose());
+        assert!(c.allclose(&r, 1e-4));
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let mut rng = Rng::seed_from_u64(4);
+        let mut m = Matrix::rand_uniform(10, 7, &mut rng);
+        scale(&mut m, 5.0);
+        let s = softmax_rows(&m);
+        for i in 0..s.rows {
+            let sum: f32 = (0..s.cols).map(|j| s[(i, j)]).sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            for j in 0..s.cols {
+                assert!(s[(i, j)] >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_invariant_to_shift() {
+        let mut rng = Rng::seed_from_u64(5);
+        let m = Matrix::rand_uniform(4, 6, &mut rng);
+        let mut shifted = m.clone();
+        for v in shifted.data_mut() {
+            *v += 100.0;
+        }
+        assert!(softmax_rows(&m).allclose(&softmax_rows(&shifted), 1e-5));
+    }
+
+    #[test]
+    fn relu_zeroes_negatives() {
+        let mut m = Matrix::zeros(1, 4);
+        m.data_mut().copy_from_slice(&[-1.0, 0.0, 2.0, -0.5]);
+        relu(&mut m);
+        assert_eq!(m.data(), &[0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        // uniform predictions over C classes -> loss = ln C
+        let m = Matrix::zeros(3, 4);
+        let probs = softmax_rows(&m);
+        let labels = vec![0u32, 1, 2];
+        let mask = vec![true, true, true];
+        let (loss, _grad) = cross_entropy_masked(&probs, &labels, &mask);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cross_entropy_mask_excludes_rows() {
+        let mut probs = Matrix::zeros(2, 2);
+        probs.data_mut().copy_from_slice(&[0.9, 0.1, 0.1, 0.9]);
+        let labels = vec![0u32, 0]; // second row is wrong...
+        let mask = vec![true, false]; // ...but masked out
+        let (loss, grad) = cross_entropy_masked(&probs, &labels, &mask);
+        assert!((loss - (-(0.9f32).ln())).abs() < 1e-5);
+        // masked row contributes zero gradient
+        assert_eq!(grad[(1, 0)], 0.0);
+        assert_eq!(grad[(1, 1)], 0.0);
+    }
+}

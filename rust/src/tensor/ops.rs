@@ -1,0 +1,304 @@
+//! GEMM and GCN-specific ops over [`Matrix`].
+//!
+//! The GEMM is cache-blocked and (for large problems) parallelised with
+//! scoped `std::thread`s over row panels — the hot path of the native
+//! backend. See EXPERIMENTS.md §Perf for the blocking parameters'
+//! before/after.
+
+use super::Matrix;
+
+/// Row-panel block height for the threaded GEMM.
+const MC: usize = 64;
+/// K-blocking depth.
+const KC: usize = 256;
+/// Problems smaller than this many MACs stay single-threaded.
+const PAR_THRESHOLD: usize = 1 << 21;
+
+/// Intra-op thread budget. The coordinator divides the machine between
+/// workers (one "device" per worker, like the paper's one-GPU-per-
+/// processor testbed); 0 = use all cores (single-worker / bench mode).
+static INTRA_THREADS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Set the per-op thread budget (0 = all cores). Called by the trainer
+/// with `cores / workers` so wall-clock scaling with workers reflects
+/// a real multi-device deployment.
+pub fn set_intra_threads(n: usize) {
+    INTRA_THREADS.store(n, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Number of worker threads to use for a problem of `flops` MACs.
+fn thread_count(flops: usize) -> usize {
+    if flops < PAR_THRESHOLD {
+        return 1;
+    }
+    let cap = match INTRA_THREADS.load(std::sync::atomic::Ordering::Relaxed) {
+        0 => 8,
+        n => n,
+    };
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(cap)
+}
+
+/// `C = A * B`.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch: {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    gemm_into(a, b, &mut c);
+    c
+}
+
+/// `C += A * B` into an existing output (used by the trainer to reuse
+/// allocations across steps).
+pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let nthreads = thread_count(m * k * n);
+    if nthreads <= 1 {
+        gemm_panel(a.data(), b.data(), c.data_mut(), 0, m, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(nthreads);
+    let a_data = a.data();
+    let b_data = b.data();
+    // Split C into disjoint row panels; each thread owns one.
+    let mut panels: Vec<&mut [f32]> = c.data_mut().chunks_mut(rows_per * n).collect();
+    std::thread::scope(|s| {
+        for (t, panel) in panels.iter_mut().enumerate() {
+            let row0 = t * rows_per;
+            let rows = panel.len() / n;
+            let panel: &mut [f32] = panel;
+            s.spawn(move || {
+                gemm_panel(a_data, b_data, panel, row0, rows, k, n);
+            });
+        }
+    });
+}
+
+/// Single-threaded blocked kernel over a row panel `[row0, row0+rows)`.
+/// `c_panel` is the panel's slice of C (row-major, `rows * n`).
+fn gemm_panel(a: &[f32], b: &[f32], c_panel: &mut [f32], row0: usize, rows: usize, k: usize, n: usize) {
+    for ib in (0..rows).step_by(MC) {
+        let ie = (ib + MC).min(rows);
+        for kb in (0..k).step_by(KC) {
+            let ke = (kb + KC).min(k);
+            for i in ib..ie {
+                let arow = &a[(row0 + i) * k..(row0 + i) * k + k];
+                let crow = &mut c_panel[i * n..i * n + n];
+                for kk in kb..ke {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue; // feature matrices are sparse-ish
+                    }
+                    let brow = &b[kk * n..kk * n + n];
+                    // autovectorises: contiguous fused multiply-add
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C = A^T * B` (A is `k x m`, result `m x n`). Used for weight grads.
+pub fn gemm_ta(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "gemm_ta shape mismatch");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    // Accumulate row-by-row of A/B: C += a_row^T b_row. Sequential over k,
+    // contiguous over n — cache friendly without materialising A^T.
+    let cd = c.data_mut();
+    for kk in 0..k {
+        let arow = a.row(kk);
+        let brow = b.row(kk);
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..i * n + n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `C = A * B^T` (B is `n x k`). Used for input grads.
+pub fn gemm_tb(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "gemm_tb shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            let brow = &b.data()[j * k..j * k + k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            crow[j] = acc;
+        }
+    }
+    c
+}
+
+/// `C = alpha * A * B + beta * C0` convenience.
+pub fn addmm(a: &Matrix, b: &Matrix, c0: &Matrix, alpha: f32, beta: f32) -> Matrix {
+    let mut c = gemm(a, b);
+    assert_eq!((c.rows, c.cols), (c0.rows, c0.cols));
+    for (x, y) in c.data_mut().iter_mut().zip(c0.data()) {
+        *x = alpha * *x + beta * *y;
+    }
+    c
+}
+
+/// Sparse (CSR) times dense: `out = S * D` where S is given by
+/// `(offsets, targets, values)` with `offsets.len() == out.rows + 1`.
+/// This is the aggregation `Â·H` of the GCN layer on the native path.
+pub fn spmm_csr(
+    offsets: &[usize],
+    targets: &[u32],
+    values: &[f32],
+    dense: &Matrix,
+    out_rows: usize,
+) -> Matrix {
+    assert_eq!(offsets.len(), out_rows + 1);
+    let n = dense.cols;
+    let mut out = Matrix::zeros(out_rows, n);
+    let nthreads = thread_count(targets.len() * n * 4);
+    if nthreads <= 1 {
+        spmm_rows(offsets, targets, values, dense, out.data_mut(), 0, out_rows);
+        return out;
+    }
+    let rows_per = out_rows.div_ceil(nthreads);
+    let mut panels: Vec<&mut [f32]> = out.data_mut().chunks_mut(rows_per * n).collect();
+    std::thread::scope(|s| {
+        for (t, panel) in panels.iter_mut().enumerate() {
+            let row0 = t * rows_per;
+            let rows = panel.len() / n;
+            let panel: &mut [f32] = panel;
+            s.spawn(move || {
+                spmm_rows(offsets, targets, values, dense, panel, row0, rows);
+            });
+        }
+    });
+    out
+}
+
+fn spmm_rows(
+    offsets: &[usize],
+    targets: &[u32],
+    values: &[f32],
+    dense: &Matrix,
+    out_panel: &mut [f32],
+    row0: usize,
+    rows: usize,
+) {
+    let n = dense.cols;
+    for i in 0..rows {
+        let g = row0 + i;
+        let orow = &mut out_panel[i * n..i * n + n];
+        for e in offsets[g]..offsets[g + 1] {
+            let j = targets[e] as usize;
+            let w = values[e];
+            let drow = dense.row(j);
+            for c in 0..n {
+                orow[c] += w * drow[c];
+            }
+        }
+    }
+}
+
+/// In-place ReLU.
+pub fn relu(m: &mut Matrix) {
+    for v in m.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// In-place LeakyReLU with slope `alpha`.
+pub fn leaky_relu(m: &mut Matrix, alpha: f32) {
+    for v in m.data_mut() {
+        if *v < 0.0 {
+            *v *= alpha;
+        }
+    }
+}
+
+/// Zero entries of `grad` where the forward pre-activation was <= 0.
+pub fn relu_grad_inplace(grad: &mut Matrix, pre_activation: &Matrix) {
+    assert_eq!((grad.rows, grad.cols), (pre_activation.rows, pre_activation.cols));
+    for (g, z) in grad.data_mut().iter_mut().zip(pre_activation.data()) {
+        if *z <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// In-place scalar multiply.
+pub fn scale(m: &mut Matrix, alpha: f32) {
+    for v in m.data_mut() {
+        *v *= alpha;
+    }
+}
+
+/// `dst += src`.
+pub fn add_assign(dst: &mut Matrix, src: &Matrix) {
+    assert_eq!((dst.rows, dst.cols), (src.rows, src.cols));
+    for (d, s) in dst.data_mut().iter_mut().zip(src.data()) {
+        *d += s;
+    }
+}
+
+/// Numerically-stable row softmax.
+pub fn softmax_rows(m: &Matrix) -> Matrix {
+    let mut out = m.clone();
+    for i in 0..out.rows {
+        let row = out.row_mut(i);
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+/// Masked mean cross-entropy over softmax probabilities.
+///
+/// Returns `(loss, dL/dlogits)` where the gradient is the usual
+/// `(p - onehot(y)) / n_masked` for masked rows, zero elsewhere — i.e.
+/// the gradient w.r.t. the *logits* that produced `probs`.
+pub fn cross_entropy_masked(probs: &Matrix, labels: &[u32], mask: &[bool]) -> (f32, Matrix) {
+    assert_eq!(probs.rows, labels.len());
+    assert_eq!(probs.rows, mask.len());
+    let n_masked = mask.iter().filter(|&&m| m).count().max(1);
+    let scale = 1.0 / n_masked as f32;
+    let mut grad = Matrix::zeros(probs.rows, probs.cols);
+    let mut loss = 0.0f32;
+    for i in 0..probs.rows {
+        if !mask[i] {
+            continue;
+        }
+        let y = labels[i] as usize;
+        let p = probs[(i, y)].max(1e-12);
+        loss -= p.ln();
+        let grow = grad.row_mut(i);
+        grow.copy_from_slice(probs.row(i));
+        grow[y] -= 1.0;
+        for g in grow.iter_mut() {
+            *g *= scale;
+        }
+    }
+    (loss * scale, grad)
+}

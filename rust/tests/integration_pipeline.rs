@@ -1,0 +1,195 @@
+//! Integration: the full GAD pipeline (dataset → partition → augment →
+//! load → distributed train → eval) on the native backend, plus the
+//! paper's qualitative claims at miniature scale.
+
+use gad::coordinator::{train_gad, ConsensusMode, TrainConfig};
+use gad::datasets::SyntheticSpec;
+
+fn base_cfg() -> TrainConfig {
+    TrainConfig {
+        partitions: 6,
+        workers: 3,
+        layers: 2,
+        hidden: 32,
+        lr: 0.02,
+        epochs: 40,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn pipeline_reaches_reasonable_accuracy() {
+    let ds = SyntheticSpec::tiny().generate(21);
+    let r = train_gad(&ds, &base_cfg()).unwrap();
+    assert!(r.test_accuracy > 0.6, "accuracy {}", r.test_accuracy);
+    // loss decreased substantially
+    let first = r.curve.first().unwrap().loss;
+    let last = r.curve.last().unwrap().loss;
+    assert!(last < 0.7 * first, "loss {first} -> {last}");
+}
+
+#[test]
+fn table4_shape_augmentation_recovers_accuracy_and_cuts_comm() {
+    // the paper's Table 4 structure: distributed w/o augmentation loses
+    // accuracy vs augmented; augmentation halves feature traffic and
+    // costs a little memory
+    let ds = SyntheticSpec::tiny().generate(22);
+    let mut cfg = base_cfg();
+    cfg.epochs = 40;
+    cfg.alpha = 0.05;
+
+    cfg.augment = true;
+    let aug = train_gad(&ds, &cfg).unwrap();
+    cfg.augment = false;
+    let plain = train_gad(&ds, &cfg).unwrap();
+
+    assert!(
+        aug.comm.feature_bytes < plain.comm.feature_bytes,
+        "feature comm should drop: {} vs {}",
+        aug.comm.feature_bytes,
+        plain.comm.feature_bytes
+    );
+    let aug_mem: usize = aug.memory_per_worker.iter().sum();
+    let plain_mem: usize = plain.memory_per_worker.iter().sum();
+    assert!(aug_mem >= plain_mem, "replicas cost memory");
+    // accuracy with augmentation should not be (much) worse
+    assert!(
+        aug.test_accuracy >= plain.test_accuracy - 0.05,
+        "aug {} plain {}",
+        aug.test_accuracy,
+        plain.test_accuracy
+    );
+}
+
+#[test]
+fn table3_shape_accuracy_stable_across_workers() {
+    // paper Table 3: accuracy fluctuation < ~0.01-0.05 as workers vary
+    let ds = SyntheticSpec::tiny().generate(23);
+    let mut accs = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let cfg = TrainConfig { workers, partitions: 4.max(workers), ..base_cfg() };
+        let r = train_gad(&ds, &cfg).unwrap();
+        accs.push(r.test_accuracy);
+    }
+    let max = accs.iter().cloned().fold(f32::MIN, f32::max);
+    let min = accs.iter().cloned().fold(f32::MAX, f32::min);
+    assert!(max - min < 0.12, "accuracy spread too wide: {accs:?}");
+}
+
+#[test]
+fn fig9_shape_weighted_consensus_not_worse() {
+    // weighted consensus should converge at least as low as plain
+    let ds = SyntheticSpec::tiny().generate(24);
+    let mut cfg = base_cfg();
+    cfg.partitions = 8;
+    cfg.epochs = 30;
+
+    cfg.consensus = ConsensusMode::Weighted;
+    let weighted = train_gad(&ds, &cfg).unwrap();
+    cfg.consensus = ConsensusMode::Plain;
+    let plain = train_gad(&ds, &cfg).unwrap();
+
+    let wl = weighted.curve.last().unwrap().loss;
+    let pl = plain.curve.last().unwrap().loss;
+    assert!(wl <= pl * 1.15, "weighted {wl} vs plain {pl}");
+}
+
+#[test]
+fn gradient_comm_scales_with_workers() {
+    let ds = SyntheticSpec::tiny().generate(25);
+    let mut cfg = base_cfg();
+    cfg.epochs = 5;
+    cfg.workers = 1;
+    cfg.partitions = 4;
+    let one = train_gad(&ds, &cfg).unwrap();
+    cfg.workers = 4;
+    let four = train_gad(&ds, &cfg).unwrap();
+    // a single co-located worker syncs nothing; 4 workers pay the
+    // up+down gradient exchange every round
+    assert_eq!(one.comm.gradient_bytes, 0);
+    assert!(four.comm.gradient_bytes > 0);
+}
+
+#[test]
+fn training_survives_worker_crash() {
+    use gad::coordinator::{Fault, FaultPlan};
+    let ds = SyntheticSpec::tiny().generate(27);
+    let mut cfg = base_cfg();
+    cfg.workers = 3;
+    cfg.partitions = 6;
+    cfg.epochs = 20;
+    cfg.faults = FaultPlan { faults: vec![Fault::Crash { worker: 1, epoch: 5 }] };
+    let r = train_gad(&ds, &cfg).unwrap();
+    // run completes and still learns from the surviving workers
+    assert_eq!(r.epochs_run, 20);
+    assert!(r.test_accuracy > 0.4, "accuracy after crash {}", r.test_accuracy);
+    // healthy baseline sees strictly more test nodes than the degraded run
+    cfg.faults = FaultPlan::none();
+    let healthy = train_gad(&ds, &cfg).unwrap();
+    assert!(healthy.test_accuracy >= r.test_accuracy - 0.15);
+}
+
+#[test]
+fn straggler_slows_rounds_but_preserves_result() {
+    use gad::coordinator::{Fault, FaultPlan};
+    let ds = SyntheticSpec::tiny().generate(28);
+    let mut cfg = base_cfg();
+    cfg.epochs = 6;
+    let fast = train_gad(&ds, &cfg).unwrap();
+    cfg.faults = FaultPlan {
+        faults: vec![Fault::Straggle { worker: 0, epoch: 0, millis: 30 }],
+    };
+    let slow = train_gad(&ds, &cfg).unwrap();
+    assert!(
+        slow.wall_seconds > fast.wall_seconds,
+        "straggler should stretch synchronous rounds ({} vs {})",
+        slow.wall_seconds,
+        fast.wall_seconds
+    );
+    // determinism unaffected: same consensus sequence, same accuracy
+    assert_eq!(slow.test_accuracy, fast.test_accuracy);
+}
+
+#[test]
+fn lr_schedules_train() {
+    use gad::model::LrSchedule;
+    let ds = SyntheticSpec::tiny().generate(29);
+    for schedule in [
+        LrSchedule::Constant,
+        LrSchedule::Warmup { epochs: 3 },
+        LrSchedule::Cosine { total: 15, floor: 0.1 },
+    ] {
+        let mut cfg = base_cfg();
+        cfg.epochs = 15;
+        cfg.schedule = schedule;
+        let r = train_gad(&ds, &cfg).unwrap();
+        assert!(r.test_accuracy > 0.4, "{schedule:?}: {}", r.test_accuracy);
+    }
+}
+
+#[test]
+fn network_estimate_reflects_topology() {
+    use gad::comm::Topology;
+    let ds = SyntheticSpec::tiny().generate(30);
+    let mut cfg = base_cfg();
+    cfg.epochs = 5;
+    cfg.workers = 4;
+    cfg.topology = Topology::Star;
+    let star = train_gad(&ds, &cfg).unwrap();
+    cfg.topology = Topology::FullMesh;
+    let mesh = train_gad(&ds, &cfg).unwrap();
+    assert!(star.network_time_est_sec > mesh.network_time_est_sec);
+}
+
+#[test]
+fn curve_is_monotone_in_epochs_field() {
+    let ds = SyntheticSpec::tiny().generate(26);
+    let mut cfg = base_cfg();
+    cfg.epochs = 10;
+    let r = train_gad(&ds, &cfg).unwrap();
+    for (i, p) in r.curve.iter().enumerate() {
+        assert_eq!(p.epoch, i);
+    }
+    assert!(r.wall_seconds > 0.0);
+}

@@ -1,0 +1,115 @@
+//! Integration: the XLA backend (PJRT + AOT artifacts) against the
+//! native oracle. Requires `make artifacts`; every test skips cleanly
+//! when the artifact directory is absent (e.g. plain `cargo test`
+//! before the first `make artifacts`).
+
+use gad::backend::{Backend, NativeBackend, XlaBackend};
+use gad::coordinator::{batch_from_subgraph, train_gad, TrainConfig};
+use gad::datasets::SyntheticSpec;
+use gad::model::GcnParams;
+use gad::rng::Rng;
+
+const ARTIFACTS: &str = "artifacts";
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new(ARTIFACTS).join("manifest.txt").exists()
+}
+
+/// Build one whole-graph batch of the tiny dataset (fits the f=32/c=4
+/// default buckets).
+fn tiny_batch() -> (gad::model::Batch, GcnParams) {
+    let ds = SyntheticSpec::tiny().generate(77);
+    let assignment = vec![0u32; ds.num_nodes()];
+    let part = gad::augment::plain_part(&ds.graph, &assignment, 0);
+    let batch = batch_from_subgraph(&ds, &part, 0);
+    let mut rng = Rng::seed_from_u64(7);
+    let params = GcnParams::init(ds.feature_dim(), 32, ds.num_classes, 2, &mut rng);
+    (batch, params)
+}
+
+#[test]
+fn xla_loss_and_grads_match_native() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let (batch, params) = tiny_batch();
+    let mut native = NativeBackend::new();
+    let mut xla = XlaBackend::new(ARTIFACTS).unwrap();
+
+    let a = native.train_step(&batch, &params).unwrap();
+    let b = xla.train_step(&batch, &params).unwrap();
+
+    assert!(
+        (a.loss - b.loss).abs() < 1e-3 + 0.01 * a.loss.abs(),
+        "loss native {} vs xla {}",
+        a.loss,
+        b.loss
+    );
+    for (l, (ga, gb)) in a.grads.iter().zip(&b.grads).enumerate() {
+        assert!(
+            ga.allclose(gb, 1e-3),
+            "layer {l} grad mismatch, max diff {}",
+            ga.max_abs_diff(gb)
+        );
+    }
+}
+
+#[test]
+fn xla_predictions_match_native() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let (batch, params) = tiny_batch();
+    let mut native = NativeBackend::new();
+    let mut xla = XlaBackend::new(ARTIFACTS).unwrap();
+    let pa = native.predict(&batch, &params).unwrap();
+    let pb = xla.predict(&batch, &params).unwrap();
+    let agree = pa.iter().zip(&pb).filter(|(x, y)| x == y).count();
+    // argmax can flip on near-ties; demand near-total agreement
+    assert!(
+        agree as f64 / pa.len() as f64 > 0.99,
+        "only {agree}/{} predictions agree",
+        pa.len()
+    );
+}
+
+#[test]
+fn xla_backend_trains_end_to_end() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ds = SyntheticSpec::tiny().generate(78);
+    let cfg = TrainConfig {
+        partitions: 4,
+        workers: 2,
+        layers: 2,
+        hidden: 32,
+        lr: 0.02,
+        epochs: 10,
+        backend: gad::backend::BackendKind::Xla,
+        artifact_dir: ARTIFACTS.to_string(),
+        seed: 3,
+        ..Default::default()
+    };
+    let r = train_gad(&ds, &cfg).unwrap();
+    assert!(r.test_accuracy > 0.4, "xla e2e accuracy {}", r.test_accuracy);
+}
+
+#[test]
+fn missing_bucket_is_a_clean_error() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let (batch, _) = tiny_batch();
+    let mut rng = Rng::seed_from_u64(9);
+    // hidden=77 has no compiled bucket
+    let params = GcnParams::init(batch.features.cols, 77, batch.num_classes, 2, &mut rng);
+    let mut xla = XlaBackend::new(ARTIFACTS).unwrap();
+    let err = xla.train_step(&batch, &params).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("artifact"), "unexpected error: {msg}");
+}

@@ -1,0 +1,134 @@
+//! Property tests: augmentation invariants (Algorithm 1) over random
+//! graphs and partitions.
+
+use gad::augment::{augment_part, AugmentConfig};
+use gad::graph::{candidate_replication_nodes, GraphBuilder};
+use gad::partition::random::random_partition;
+use gad::proptest_util::{arb_graph, forall};
+
+fn random_setup(rng: &mut gad::rng::Rng) -> (gad::graph::Csr, Vec<u32>, usize) {
+    let (n, edges) = arb_graph(rng, 10, 60, 0.15);
+    let g = GraphBuilder::new(n).edges(&edges).build();
+    let k = 2 + rng.gen_range(3);
+    let a = random_partition(n, k, rng.next_u64());
+    (g, a, k)
+}
+
+#[test]
+fn prop_replicas_are_candidates() {
+    forall("replicas are candidates", 30, |rng| {
+        let (g, a, k) = random_setup(rng);
+        let part = rng.gen_range(k) as u32;
+        let cfg = AugmentConfig {
+            alpha: 0.2,
+            walk_length: 1 + rng.gen_range(3),
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let aug = augment_part(&g, &a, part, &cfg);
+        let cands = candidate_replication_nodes(&g, &a, part, cfg.walk_length);
+        for r in &aug.replicas {
+            if !cands.contains(r) {
+                return Err(format!("replica {r} not a candidate"));
+            }
+            if a[*r as usize] == part {
+                return Err(format!("replica {r} is local"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_base_nodes_preserved() {
+    forall("base nodes preserved", 30, |rng| {
+        let (g, a, k) = random_setup(rng);
+        let part = rng.gen_range(k) as u32;
+        let cfg = AugmentConfig { seed: rng.next_u64(), ..Default::default() };
+        let aug = augment_part(&g, &a, part, &cfg);
+        let expected: Vec<u32> = (0..g.num_nodes() as u32)
+            .filter(|&v| a[v as usize] == part)
+            .collect();
+        let got: Vec<u32> = aug
+            .sub
+            .global_ids
+            .iter()
+            .zip(&aug.is_replica)
+            .filter(|(_, &r)| !r)
+            .map(|(&gid, _)| gid)
+            .collect();
+        if got != expected {
+            return Err(format!("base {got:?} != expected {expected:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_dangling_replicas() {
+    forall("no dangling replicas", 30, |rng| {
+        let (g, a, k) = random_setup(rng);
+        let part = rng.gen_range(k) as u32;
+        let cfg = AugmentConfig {
+            alpha: 0.3,
+            walk_length: 2,
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let aug = augment_part(&g, &a, part, &cfg);
+        // BFS inside the augmented subgraph from base nodes
+        let n = aug.sub.len();
+        let mut seen: Vec<bool> = aug.is_replica.iter().map(|&r| !r).collect();
+        let mut queue: std::collections::VecDeque<usize> = (0..n).filter(|&i| seen[i]).collect();
+        while let Some(v) = queue.pop_front() {
+            for &t in aug.sub.csr.neighbors(v) {
+                if !seen[t as usize] {
+                    seen[t as usize] = true;
+                    queue.push_back(t as usize);
+                }
+            }
+        }
+        if let Some(i) = (0..n).find(|&i| aug.is_replica[i] && !seen[i]) {
+            return Err(format!(
+                "dangling replica local={i} global={}",
+                aug.sub.global_ids[i]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_importance_in_unit_interval() {
+    forall("importance in [0,1]", 30, |rng| {
+        let (g, a, k) = random_setup(rng);
+        let part = rng.gen_range(k) as u32;
+        let cfg = AugmentConfig { seed: rng.next_u64(), ..Default::default() };
+        let aug = augment_part(&g, &a, part, &cfg);
+        for &(v, i) in &aug.candidate_importance {
+            if !(0.0..=1.0).contains(&i) {
+                return Err(format!("I({v}) = {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replica_count_monotone_in_alpha() {
+    forall("replicas monotone in alpha", 15, |rng| {
+        let (g, a, k) = random_setup(rng);
+        let part = rng.gen_range(k) as u32;
+        let seed = rng.next_u64();
+        let lo = augment_part(&g, &a, part, &AugmentConfig { alpha: 0.02, seed, ..Default::default() });
+        let hi = augment_part(&g, &a, part, &AugmentConfig { alpha: 0.4, seed, ..Default::default() });
+        if lo.replicas.len() > hi.replicas.len() {
+            return Err(format!(
+                "alpha 0.02 -> {}, alpha 0.4 -> {}",
+                lo.replicas.len(),
+                hi.replicas.len()
+            ));
+        }
+        Ok(())
+    });
+}

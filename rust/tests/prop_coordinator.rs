@@ -1,0 +1,120 @@
+//! Property tests: coordinator invariants — consensus arithmetic,
+//! subgraph loading, ζ weighting.
+
+use gad::coordinator::{aggregate_gradients, allocate_subgraphs};
+use gad::proptest_util::forall;
+use gad::rng::Rng;
+use gad::tensor::Matrix;
+use gad::variance::zeta_weights;
+
+fn rand_grads(rng: &mut Rng, workers: usize, shape: (usize, usize)) -> Vec<Vec<Matrix>> {
+    (0..workers)
+        .map(|_| vec![Matrix::rand_uniform(shape.0, shape.1, rng)])
+        .collect()
+}
+
+#[test]
+fn prop_consensus_bounded_by_extremes() {
+    // every entry of the aggregate lies within [min, max] over workers
+    forall("consensus convexity", 30, |rng| {
+        let w = 2 + rng.gen_range(4);
+        let shape = (1 + rng.gen_range(4), 1 + rng.gen_range(4));
+        let grads = rand_grads(rng, w, shape);
+        let weights: Vec<f64> = (0..w).map(|_| 0.1 + rng.gen_f64()).collect();
+        let agg = aggregate_gradients(&grads, &weights);
+        for idx in 0..shape.0 * shape.1 {
+            let vals: Vec<f32> = grads.iter().map(|g| g[0].data()[idx]).collect();
+            let (mn, mx) = vals
+                .iter()
+                .fold((f32::INFINITY, f32::NEG_INFINITY), |(a, b), &v| (a.min(v), b.max(v)));
+            let got = agg[0].data()[idx];
+            if got < mn - 1e-5 || got > mx + 1e-5 {
+                return Err(format!("agg {got} outside [{mn}, {mx}]"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_consensus_with_equal_weights_is_mean() {
+    forall("equal weights == mean", 30, |rng| {
+        let w = 2 + rng.gen_range(4);
+        let grads = rand_grads(rng, w, (3, 2));
+        let agg = aggregate_gradients(&grads, &vec![7.0; w]);
+        for idx in 0..6 {
+            let mean: f32 =
+                grads.iter().map(|g| g[0].data()[idx]).sum::<f32>() / w as f32;
+            if (agg[0].data()[idx] - mean).abs() > 1e-5 {
+                return Err("not the mean".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allocation_partitions_the_index_set() {
+    forall("allocation is a partition", 40, |rng| {
+        let n = 1 + rng.gen_range(40);
+        let workers = 1 + rng.gen_range(8);
+        let sizes: Vec<usize> = (0..n).map(|_| 1 + rng.gen_range(500)).collect();
+        let alloc = allocate_subgraphs(&sizes, workers);
+        if alloc.len() != workers {
+            return Err("wrong worker count".into());
+        }
+        let mut all: Vec<usize> = alloc.iter().flatten().copied().collect();
+        all.sort_unstable();
+        let expect: Vec<usize> = (0..n).collect();
+        if all != expect {
+            return Err(format!("not a partition: {all:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allocation_near_balanced() {
+    // LPT guarantee: makespan <= (4/3 - 1/3m) * OPT; with OPT >= total/m
+    // we check load_max <= 4/3 * total/m + max_item
+    forall("allocation balance", 30, |rng| {
+        let n = 2 + rng.gen_range(40);
+        let workers = 1 + rng.gen_range(6);
+        let sizes: Vec<usize> = (0..n).map(|_| 1 + rng.gen_range(300)).collect();
+        let alloc = allocate_subgraphs(&sizes, workers);
+        let total: usize = sizes.iter().sum();
+        let max_item = *sizes.iter().max().unwrap();
+        let max_load = alloc
+            .iter()
+            .map(|w| w.iter().map(|&i| sizes[i]).sum::<usize>())
+            .max()
+            .unwrap();
+        let bound = (4 * total).div_ceil(3 * workers) + max_item;
+        if max_load > bound {
+            return Err(format!("load {max_load} > bound {bound}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zeta_weights_mean_one() {
+    forall("zeta weights normalised", 30, |rng| {
+        let n = 1 + rng.gen_range(12);
+        let zs: Vec<f64> = (0..n).map(|_| rng.gen_f64() * 5.0).collect();
+        let w = zeta_weights(&zs);
+        let sum: f64 = w.iter().sum();
+        if (sum - n as f64).abs() > 1e-9 {
+            return Err(format!("sum {sum} != {n}"));
+        }
+        // order preserved
+        for i in 0..n {
+            for j in 0..n {
+                if zs[i] > zs[j] && w[i] < w[j] - 1e-12 {
+                    return Err("ordering broken".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,105 @@
+//! Property tests: partitioner invariants over random graphs.
+
+use gad::graph::GraphBuilder;
+use gad::partition::{balance_ratio, edge_cut, partition, random, PartitionConfig};
+use gad::proptest_util::{arb_graph, forall};
+
+#[test]
+fn prop_assignment_total_and_in_range() {
+    forall("assignment total & in range", 40, |rng| {
+        let (n, edges) = arb_graph(rng, 8, 60, 0.15);
+        let g = GraphBuilder::new(n).edges(&edges).build();
+        let k = 2 + rng.gen_range(4);
+        let cfg = PartitionConfig { k, seed: rng.next_u64(), ..Default::default() };
+        let p = partition(&g, &cfg);
+        if p.assignment.len() != n {
+            return Err(format!("len {} != {n}", p.assignment.len()));
+        }
+        if !p.assignment.iter().all(|&a| (a as usize) < k) {
+            return Err("part id out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_empty_parts_when_k_le_n() {
+    forall("no empty parts", 30, |rng| {
+        let (n, edges) = arb_graph(rng, 12, 50, 0.2);
+        let g = GraphBuilder::new(n).edges(&edges).build();
+        let k = 2 + rng.gen_range(3);
+        let p = partition(&g, &PartitionConfig { k, seed: rng.next_u64(), ..Default::default() });
+        let sizes = p.part_sizes();
+        if sizes.iter().any(|&s| s == 0) {
+            return Err(format!("empty part: {sizes:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reported_cut_matches_recount() {
+    forall("edge cut consistency", 30, |rng| {
+        let (n, edges) = arb_graph(rng, 8, 40, 0.25);
+        let g = GraphBuilder::new(n).edges(&edges).build();
+        let k = 2 + rng.gen_range(3);
+        let p = partition(&g, &PartitionConfig { k, seed: rng.next_u64(), ..Default::default() });
+        let recount = edge_cut(&g, &p.assignment);
+        if recount != p.edge_cut {
+            return Err(format!("reported {} recount {recount}", p.edge_cut));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_balance_within_tolerance() {
+    forall("balance", 30, |rng| {
+        let (n, edges) = arb_graph(rng, 20, 80, 0.1);
+        let g = GraphBuilder::new(n).edges(&edges).build();
+        let k = 2 + rng.gen_range(3);
+        let cfg = PartitionConfig { k, epsilon: 0.15, seed: rng.next_u64(), ..Default::default() };
+        let p = partition(&g, &cfg);
+        // leftover-sweep slack documented in partition::tests
+        let limit = 1.0 + cfg.epsilon + 0.35;
+        if p.balance > limit {
+            return Err(format!("balance {} > {limit}", p.balance));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_deterministic_per_seed() {
+    forall("determinism", 20, |rng| {
+        let (n, edges) = arb_graph(rng, 8, 40, 0.2);
+        let g = GraphBuilder::new(n).edges(&edges).build();
+        let seed = rng.next_u64();
+        let cfg = PartitionConfig { k: 3, seed, ..Default::default() };
+        let a = partition(&g, &cfg);
+        let b = partition(&g, &cfg);
+        if a.assignment != b.assignment {
+            return Err("same seed, different assignment".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_partition_balanced() {
+    forall("random partition balance", 30, |rng| {
+        let n = 10 + rng.gen_range(200);
+        let k = 2 + rng.gen_range(6);
+        let a = random::random_partition(n, k, rng.next_u64());
+        let _ = balance_ratio(&a, k);
+        let mut sizes = vec![0usize; k];
+        for &p in &a {
+            sizes[p as usize] += 1;
+        }
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        if mx - mn > 1 {
+            return Err(format!("sizes {sizes:?}"));
+        }
+        Ok(())
+    });
+}

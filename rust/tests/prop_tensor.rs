@@ -1,0 +1,136 @@
+//! Property tests: tensor-op algebra over random shapes/values.
+
+use gad::proptest_util::forall;
+use gad::rng::Rng;
+use gad::tensor::{
+    add_assign, cross_entropy_masked, gemm, gemm_ta, gemm_tb, relu, scale, softmax_rows, Matrix,
+};
+
+fn rand_m(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+    Matrix::rand_uniform(r, c, rng)
+}
+
+#[test]
+fn prop_gemm_associates_with_identity() {
+    forall("A*I == A", 25, |rng| {
+        let (m, n) = (1 + rng.gen_range(20), 1 + rng.gen_range(20));
+        let a = rand_m(rng, m, n);
+        let prod = gemm(&a, &Matrix::eye(n));
+        if !prod.allclose(&a, 1e-5) {
+            return Err("A*I != A".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_distributes_over_addition() {
+    forall("A(B+C) == AB + AC", 25, |rng| {
+        let (m, k, n) = (1 + rng.gen_range(12), 1 + rng.gen_range(12), 1 + rng.gen_range(12));
+        let a = rand_m(rng, m, k);
+        let b = rand_m(rng, k, n);
+        let c = rand_m(rng, k, n);
+        let mut bc = b.clone();
+        add_assign(&mut bc, &c);
+        let left = gemm(&a, &bc);
+        let mut right = gemm(&a, &b);
+        add_assign(&mut right, &gemm(&a, &c));
+        if !left.allclose(&right, 1e-4) {
+            return Err(format!("max diff {}", left.max_abs_diff(&right)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transpose_variants_consistent() {
+    forall("gemm_ta/tb == explicit transpose", 25, |rng| {
+        let (m, k, n) = (1 + rng.gen_range(10), 1 + rng.gen_range(10), 1 + rng.gen_range(10));
+        let a = rand_m(rng, k, m);
+        let b = rand_m(rng, k, n);
+        if !gemm_ta(&a, &b).allclose(&gemm(&a.transpose(), &b), 1e-4) {
+            return Err("gemm_ta mismatch".into());
+        }
+        let c = rand_m(rng, m, k);
+        let d = rand_m(rng, n, k);
+        if !gemm_tb(&c, &d).allclose(&gemm(&c, &d.transpose()), 1e-4) {
+            return Err("gemm_tb mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_softmax_rows_are_distributions() {
+    forall("softmax rows sum to 1", 25, |rng| {
+        let (m, n) = (1 + rng.gen_range(15), 2 + rng.gen_range(10));
+        let mut a = rand_m(rng, m, n);
+        scale(&mut a, 10.0);
+        let s = softmax_rows(&a);
+        for i in 0..m {
+            let sum: f32 = s.row(i).iter().sum();
+            if (sum - 1.0).abs() > 1e-4 {
+                return Err(format!("row {i} sums to {sum}"));
+            }
+            if s.row(i).iter().any(|&p| !(0.0..=1.0).contains(&p)) {
+                return Err(format!("row {i} out of range"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ce_gradient_rows_sum_to_zero() {
+    // softmax-CE gradient (p - y) has zero row-sum on masked rows
+    forall("CE grad row-sums", 25, |rng| {
+        let (m, c) = (1 + rng.gen_range(12), 2 + rng.gen_range(6));
+        let logits = rand_m(rng, m, c);
+        let probs = softmax_rows(&logits);
+        let labels: Vec<u32> = (0..m).map(|_| rng.gen_range(c) as u32).collect();
+        let mask: Vec<bool> = (0..m).map(|_| rng.gen_bool(0.7)).collect();
+        let (_, grad) = cross_entropy_masked(&probs, &labels, &mask);
+        for i in 0..m {
+            let sum: f32 = grad.row(i).iter().sum();
+            if mask[i] && sum.abs() > 1e-5 {
+                return Err(format!("masked row {i} sums {sum}"));
+            }
+            if !mask[i] && grad.row(i).iter().any(|&g| g != 0.0) {
+                return Err(format!("unmasked row {i} nonzero"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_relu_idempotent_and_nonneg() {
+    forall("relu", 25, |rng| {
+        let (r, c) = (1 + rng.gen_range(10), 1 + rng.gen_range(10));
+        let mut a = rand_m(rng, r, c);
+        scale(&mut a, 4.0);
+        relu(&mut a);
+        if a.data().iter().any(|&v| v < 0.0) {
+            return Err("negative after relu".into());
+        }
+        let mut b = a.clone();
+        relu(&mut b);
+        if b != a {
+            return Err("relu not idempotent".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pad_crop_roundtrip() {
+    forall("pad->crop identity", 25, |rng| {
+        let (m, n) = (1 + rng.gen_range(10), 1 + rng.gen_range(10));
+        let a = rand_m(rng, m, n);
+        let padded = a.pad_to(m + rng.gen_range(8), n + rng.gen_range(8));
+        if padded.crop(m, n) != a {
+            return Err("roundtrip broke values".into());
+        }
+        Ok(())
+    });
+}
