@@ -41,6 +41,14 @@ fn config(args: &Args, opts: &RunOpts, dataset: &str) -> Result<TrainConfig> {
     cfg.alpha = args.get_f64("alpha", 0.01)?;
     cfg.augment = !args.has("no-augment");
     cfg.consensus = args.get("consensus", "weighted").parse().map_err(|e: String| anyhow!(e))?;
+    if let crate::coordinator::ConsensusMode::Async(ref mut a) = cfg.consensus {
+        a.staleness = args.get_usize("staleness", a.staleness)?;
+        a.quorum = args.get_usize("quorum", a.quorum)?;
+        a.lambda = args.get_f64("lambda", a.lambda)?;
+        // ζ-weighting on by default; --plain-weights reverts the base
+        // weight to the uniform Eq. 11 rule
+        a.zeta_weighted = !args.has("plain-weights");
+    }
     cfg.backend = opts.backend;
     cfg.artifact_dir = opts.artifact_dir.clone();
     cfg.seed = opts.seed;

@@ -169,9 +169,18 @@ common flags
   --method  <gcn|sage|clustergcn|saint-node|saint-edge|saint-rw|gad>
   --workers N --partitions N --layers N --hidden N --epochs N
   --lr F --alpha F --seed N --backend <native|xla> --artifacts DIR
-  --consensus <plain|weighted> --no-augment
+  --consensus <plain|weighted|async> --no-augment
   --fast         8x-smaller datasets, 5x fewer epochs
   --out-dir DIR  where results/*.md and *.csv land (default results)
+
+async consensus flags (with --consensus async)
+  --staleness N  hard staleness bound s: older gradients are dropped
+                 and the laggard re-synced (default 2)
+  --quorum N     contributions per consensus update; 0 = all alive
+                 workers (default 0)
+  --lambda F     staleness decay: weight = zeta * lambda^staleness
+                 (default 0.5)
+  --plain-weights  base weight 1 instead of zeta (Eq. 11 rule)
 ";
 
 #[cfg(test)]

@@ -26,6 +26,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub struct CommLedger {
     feature_bytes: AtomicU64,
     gradient_bytes: AtomicU64,
+    /// Replica re-synchronisation traffic (async engine: a laggard
+    /// whose gradient exceeded the staleness bound, or a recovered
+    /// worker rejoining, pulls a fresh parameter snapshot from the
+    /// leader). Accounted separately from gradient traffic so the
+    /// async mode's recovery overhead is visible in reports.
+    resync_bytes: AtomicU64,
 }
 
 impl CommLedger {
@@ -41,6 +47,10 @@ impl CommLedger {
         self.gradient_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    pub fn record_resync(&self, bytes: u64) {
+        self.resync_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     pub fn feature_bytes(&self) -> u64 {
         self.feature_bytes.load(Ordering::Relaxed)
     }
@@ -49,8 +59,12 @@ impl CommLedger {
         self.gradient_bytes.load(Ordering::Relaxed)
     }
 
+    pub fn resync_bytes(&self) -> u64 {
+        self.resync_bytes.load(Ordering::Relaxed)
+    }
+
     pub fn total_bytes(&self) -> u64 {
-        self.feature_bytes() + self.gradient_bytes()
+        self.feature_bytes() + self.gradient_bytes() + self.resync_bytes()
     }
 }
 
@@ -59,19 +73,28 @@ impl CommLedger {
 pub struct CommStats {
     pub feature_bytes: u64,
     pub gradient_bytes: u64,
+    pub resync_bytes: u64,
 }
 
 impl CommStats {
     pub fn from_ledger(l: &CommLedger) -> Self {
-        CommStats { feature_bytes: l.feature_bytes(), gradient_bytes: l.gradient_bytes() }
+        CommStats {
+            feature_bytes: l.feature_bytes(),
+            gradient_bytes: l.gradient_bytes(),
+            resync_bytes: l.resync_bytes(),
+        }
     }
 
     pub fn total_mb(&self) -> f64 {
-        (self.feature_bytes + self.gradient_bytes) as f64 / 1e6
+        (self.feature_bytes + self.gradient_bytes + self.resync_bytes) as f64 / 1e6
     }
 
     pub fn feature_mb(&self) -> f64 {
         self.feature_bytes as f64 / 1e6
+    }
+
+    pub fn resync_mb(&self) -> f64 {
+        self.resync_bytes as f64 / 1e6
     }
 }
 
@@ -180,12 +203,14 @@ mod tests {
                     for _ in 0..100 {
                         ledger.record_feature(3);
                         ledger.record_gradient(5);
+                        ledger.record_resync(2);
                     }
                 });
             }
         });
         assert_eq!(ledger.feature_bytes(), 1200);
         assert_eq!(ledger.gradient_bytes(), 2000);
-        assert_eq!(CommStats::from_ledger(&ledger).total_mb(), 3200.0 / 1e6);
+        assert_eq!(ledger.resync_bytes(), 800);
+        assert_eq!(CommStats::from_ledger(&ledger).total_mb(), 4000.0 / 1e6);
     }
 }

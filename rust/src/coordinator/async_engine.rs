@@ -1,0 +1,356 @@
+//! Bounded-staleness asynchronous round engine.
+//!
+//! The synchronous loop (Algorithm 2) stalls every processor on the
+//! slowest one — exactly the failure mode [`FaultPlan`]'s straggler
+//! injection demonstrates. This engine decouples per-worker progress
+//! from global synchronization:
+//!
+//! * workers push gradient contributions as soon as a step finishes;
+//! * the leader applies a consensus update whenever a **quorum** of
+//!   contributions has arrived, discounting each one by its subgraph
+//!   quality *and* its age: `weight_i = ζ_i · λ^staleness_i`, where
+//!   staleness is the number of consensus versions applied since the
+//!   contribution's replica snapshot (`param_version` rides with every
+//!   step result);
+//! * a contribution older than the hard staleness bound `s` is dropped
+//!   and the laggard **re-synced** — it pulls a fresh replica
+//!   (parameters + optimizer state + version) from the leader's shadow
+//!   copy, so its future updates stay bit-identical to every other
+//!   replica's. Re-sync traffic is accounted separately from gradient
+//!   traffic in the [`CommLedger`];
+//! * membership is **elastic**: a worker crashed by [`FaultPlan`]
+//!   leaves the quorum, and one recovered via [`Fault::Recover`]
+//!   rejoins with a fresh replica pull instead of killing the run.
+//!
+//! **Equivalence guarantee** (enforced by `tests/integration_async.rs`):
+//! with `staleness: 0, quorum: 0 (= all alive), lambda: 1.0` the engine
+//! degenerates to lock-step rounds and reproduces the synchronous
+//! trainer bit-for-bit given the same seed — contributions are applied
+//! in worker-id order, with the same weights, the same loss summation
+//! order and the same communication accounting. That equivalence is
+//! what makes switching engines safe.
+//!
+//! [`FaultPlan`]: super::FaultPlan
+//! [`Fault::Recover`]: super::Fault::Recover
+//! [`CommLedger`]: crate::comm::CommLedger
+
+use super::config::AsyncConfig;
+use super::consensus::{aggregate_gradients, grads_finite};
+use super::trainer::{collect, LoopState, Wiring};
+use super::worker::{WorkerCommand, WorkerResult};
+use crate::metrics::AccuracyMeter;
+use crate::model::{GcnParams, Optimizer};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
+
+/// One buffered worker contribution awaiting consensus.
+struct Contribution {
+    worker: usize,
+    /// Replica version the gradient was computed at.
+    version: u64,
+    /// `None` when the worker idled that step.
+    grads: Option<Vec<Matrix>>,
+    loss: f32,
+    zeta: f64,
+}
+
+/// Ship the leader's shadow replica (params + optimizer state +
+/// version) to `worker` and account the transfer.
+fn resync_worker(
+    w: &Wiring<'_>,
+    st: &mut LoopState,
+    worker: usize,
+    shadow: &GcnParams,
+    shadow_opt: &dyn Optimizer,
+    version: u64,
+) -> Result<()> {
+    w.send(
+        worker,
+        WorkerCommand::LoadParams {
+            params: shadow.clone(),
+            optimizer: shadow_opt.clone_box(),
+            version,
+        },
+    )?;
+    if w.workers() > 1 {
+        // the payload is the parameters plus the optimizer's moments
+        w.ledger.record_resync((shadow.nbytes() + shadow_opt.state_nbytes()) as u64);
+    }
+    st.resyncs += 1;
+    Ok(())
+}
+
+/// Shared admission path for a step result, used by the round loop and
+/// the epoch-edge drain. Either buffers the contribution or — when the
+/// gradient is non-finite (poisoned replica) or past the staleness
+/// bound — drops it and re-syncs the worker. Returns `true` when the
+/// worker was re-synced (its contribution was consumed without
+/// buffering, so the caller may owe it a fresh step).
+#[allow(clippy::too_many_arguments)]
+fn admit_contribution(
+    w: &Wiring<'_>,
+    st: &mut LoopState,
+    pending: &mut Vec<Contribution>,
+    shadow: &GcnParams,
+    shadow_opt: &dyn Optimizer,
+    version: u64,
+    bound: u64,
+    worker: usize,
+    grads: Option<Vec<Matrix>>,
+    loss: f32,
+    zeta: f64,
+    param_version: u64,
+) -> Result<bool> {
+    // divergence guard: a non-finite gradient means the replica itself
+    // may already be poisoned (NaN params stay NaN through every later
+    // update), so don't just reject the gradient — restore the replica
+    let poisoned = matches!(&grads, Some(g) if !grads_finite(g));
+    let staleness = version.saturating_sub(param_version);
+    if poisoned || staleness > bound {
+        resync_worker(w, st, worker, shadow, shadow_opt, version)?;
+        return Ok(true);
+    }
+    pending.push(Contribution { worker, version: param_version, grads, loss, zeta });
+    Ok(false)
+}
+
+/// Batch cursor: in the strict sync-equivalent regime workers walk
+/// their shard exactly like the synchronous loop (idling past its
+/// end); otherwise they cycle so a straggler always has useful work.
+fn round_for(strict: bool, worker_rounds: &[usize], worker: usize, step_idx: usize) -> usize {
+    let n = worker_rounds[worker];
+    if strict || n == 0 {
+        step_idx
+    } else {
+        step_idx % n
+    }
+}
+
+pub(super) fn run_async_epochs(
+    w: &Wiring<'_>,
+    st: &mut LoopState,
+    acfg: AsyncConfig,
+) -> Result<()> {
+    let cfg = w.cfg;
+    let workers = w.workers();
+    let bound = acfg.staleness as u64;
+
+    // Leader shadow replica: initialized and updated exactly like every
+    // worker replica (same params, same optimizer via the shared
+    // `make_optimizer` constructor, same consensus stream), so a
+    // re-synced laggard rejoins in perfect step, moments included.
+    let mut shadow = w.params0.clone();
+    let mut shadow_opt: Box<dyn Optimizer> = (w.make_optimizer)();
+    let mut version: u64 = 0;
+    let mut prev_active: Vec<bool> = vec![true; workers];
+    // contributions carried between applies (and across epoch edges)
+    let mut pending: Vec<Contribution> = Vec::new();
+
+    for epoch in 0..cfg.epochs {
+        st.epochs_run = epoch + 1;
+
+        // elastic membership for this epoch
+        let active: Vec<bool> = (0..workers).map(|i| cfg.faults.active(i, epoch)).collect();
+        let n_active = active.iter().filter(|&&a| a).count();
+        if n_active == 0 {
+            return Err(anyhow!("all workers inactive at epoch {epoch}"));
+        }
+        // buffered work from workers that just left the quorum is void
+        pending.retain(|p| active[p.worker]);
+        // rejoining workers pull a fresh replica before stepping again
+        for i in 0..workers {
+            if active[i] && !prev_active[i] {
+                resync_worker(w, st, i, &shadow, shadow_opt.as_ref(), version)?;
+            }
+        }
+        prev_active.copy_from_slice(&active);
+
+        let quorum = if acfg.quorum == 0 { n_active } else { acfg.quorum.min(n_active) };
+        // the degenerate config that must reproduce the sync engine
+        let strict = acfg.staleness == 0 && quorum == n_active;
+
+        let lr_factor = cfg.schedule.factor(epoch);
+        shadow_opt.set_lr_factor(lr_factor);
+        for i in 0..workers {
+            if active[i] {
+                w.send(i, WorkerCommand::SetLr { factor: lr_factor })?;
+            }
+        }
+
+        let mut loss_sum = 0.0f64;
+        let mut loss_count = 0usize;
+        let mut steps_sent = vec![0usize; workers];
+        let mut outstanding = vec![false; workers];
+        let mut rounds_done = 0usize;
+
+        let send_step = |i: usize,
+                         steps_sent: &mut Vec<usize>,
+                         outstanding: &mut Vec<bool>|
+         -> Result<()> {
+            let round = round_for(strict, w.worker_rounds, i, steps_sent[i]);
+            let delay_ms = cfg.faults.straggle_ms(i, epoch).unwrap_or(0);
+            w.send(i, WorkerCommand::Step { epoch, round, delay_ms })?;
+            steps_sent[i] += 1;
+            outstanding[i] = true;
+            Ok(())
+        };
+
+        // kick off one step per active worker
+        for i in 0..workers {
+            if active[i] {
+                send_step(i, &mut steps_sent, &mut outstanding)?;
+            }
+        }
+
+        while rounds_done < w.rounds_per_epoch {
+            match w.result_rx.recv() {
+                Err(_) => return Err(anyhow!("worker channel closed early")),
+                Ok(WorkerResult::Error { worker, message }) => {
+                    return Err(anyhow!("worker {worker}: {message}"));
+                }
+                // no Eval is in flight during the round loop
+                Ok(WorkerResult::Eval { .. }) => {}
+                Ok(WorkerResult::Step { worker, grads, loss, zeta, param_version, .. }) => {
+                    outstanding[worker] = false;
+                    if active[worker]
+                        && admit_contribution(
+                            w,
+                            st,
+                            &mut pending,
+                            &shadow,
+                            shadow_opt.as_ref(),
+                            version,
+                            bound,
+                            worker,
+                            grads,
+                            loss,
+                            zeta,
+                            param_version,
+                        )?
+                    {
+                        // dropped + re-synced: hand the laggard new work
+                        send_step(worker, &mut steps_sent, &mut outstanding)?;
+                    }
+                }
+            }
+
+            // apply a consensus update once a quorum is buffered (or, as
+            // a liveness backstop, when nothing is left in flight)
+            let any_outstanding = (0..workers).any(|i| active[i] && outstanding[i]);
+            if pending.len() < quorum && (any_outstanding || pending.is_empty()) {
+                continue;
+            }
+
+            // deterministic float order: worker id, then version
+            pending.sort_by_key(|p| (p.worker, p.version));
+            let contributors = std::mem::take(&mut pending);
+            let mut grads_vec: Vec<Vec<Matrix>> = Vec::with_capacity(contributors.len());
+            let mut weights: Vec<f64> = Vec::with_capacity(contributors.len());
+            for p in contributors {
+                if let Some(g) = p.grads {
+                    let staleness = version.saturating_sub(p.version) as usize;
+                    st.max_staleness_applied = st.max_staleness_applied.max(staleness);
+                    let base = if acfg.zeta_weighted && p.zeta > 0.0 { p.zeta } else { 1.0 };
+                    weights.push(base * acfg.lambda.powi(staleness as i32));
+                    loss_sum += p.loss as f64;
+                    loss_count += 1;
+                    grads_vec.push(g);
+                }
+            }
+            if !grads_vec.is_empty() {
+                let consensus = aggregate_gradients(&grads_vec, &weights);
+                // same accounting rule as the sync engine: every
+                // contributor uploads, every contributor downloads
+                if workers > 1 {
+                    w.ledger.record_gradient(grads_vec.len() as u64 * w.grad_bytes_per_sync);
+                }
+                shadow_opt.step(&mut shadow, &consensus);
+                version += 1;
+                for i in 0..workers {
+                    if active[i] {
+                        w.send(i, WorkerCommand::Update { grads: consensus.clone() })?;
+                    }
+                }
+            }
+            rounds_done += 1;
+            if rounds_done < w.rounds_per_epoch {
+                for i in 0..workers {
+                    if active[i] && !outstanding[i] {
+                        send_step(i, &mut steps_sent, &mut outstanding)?;
+                    }
+                }
+            }
+        }
+
+        // drain in-flight steps so Eval observes a quiescent replica
+        // set; late arrivals are buffered for the next epoch (where
+        // they are applied discounted, or evicted by the bound)
+        while (0..workers).any(|i| active[i] && outstanding[i]) {
+            match w.result_rx.recv() {
+                Err(_) => return Err(anyhow!("worker channel closed early")),
+                Ok(WorkerResult::Error { worker, message }) => {
+                    return Err(anyhow!("worker {worker}: {message}"));
+                }
+                Ok(WorkerResult::Eval { .. }) => {}
+                Ok(WorkerResult::Step { worker, grads, loss, zeta, param_version, .. }) => {
+                    outstanding[worker] = false;
+                    if active[worker] {
+                        // buffered contributions carry into the next
+                        // epoch (applied discounted there); re-synced
+                        // workers get no new step — the epoch is over
+                        admit_contribution(
+                            w,
+                            st,
+                            &mut pending,
+                            &shadow,
+                            shadow_opt.as_ref(),
+                            version,
+                            bound,
+                            worker,
+                            grads,
+                            loss,
+                            zeta,
+                            param_version,
+                        )?;
+                    }
+                }
+            }
+        }
+
+        w.ledger.record_feature(w.feature_traffic_per_epoch_bytes);
+
+        // distributed eval, identical to the sync engine
+        for i in 0..workers {
+            if active[i] {
+                w.send(i, WorkerCommand::Eval)?;
+            }
+        }
+        let mut test_meter = AccuracyMeter::default();
+        let mut val_meter = AccuracyMeter::default();
+        let mut train_meter = AccuracyMeter::default();
+        for r in collect(w.result_rx, n_active)? {
+            if let WorkerResult::Eval { train, val, test, .. } = r {
+                train_meter.merge(train);
+                val_meter.merge(val);
+                test_meter.merge(test);
+            }
+        }
+        st.final_train = train_meter;
+        st.final_val = val_meter;
+        st.final_test = test_meter;
+
+        let mean_loss = if loss_count > 0 { (loss_sum / loss_count as f64) as f32 } else { 0.0 };
+        let converged = st.recorder.record(epoch, mean_loss, test_meter.value());
+        if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+            eprintln!(
+                "epoch {epoch:4}  loss {mean_loss:.4}  test_acc {:.4}  v{version}  resyncs {}",
+                test_meter.value(),
+                st.resyncs
+            );
+        }
+        if converged && cfg.stop_on_converge {
+            break;
+        }
+    }
+    Ok(())
+}

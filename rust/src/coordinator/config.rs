@@ -2,11 +2,52 @@
 
 use crate::backend::BackendKind;
 
-/// Plain (Eq. 11) vs ζ-weighted (Eq. 15) gradient aggregation.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// How the engine paces rounds and weights gradient aggregation.
+///
+/// * [`Plain`] — synchronous rounds, uniform average (Eq. 11).
+/// * [`Weighted`] — synchronous rounds, ζ-weighted consensus (Eq. 15).
+/// * [`Async`] — bounded-staleness asynchronous rounds: workers push
+///   gradients as soon as a step finishes; the leader applies a
+///   consensus update whenever a quorum has arrived, discounting each
+///   contribution by `ζ_i · λ^staleness_i`. See [`AsyncConfig`].
+///
+/// [`Plain`]: ConsensusMode::Plain
+/// [`Weighted`]: ConsensusMode::Weighted
+/// [`Async`]: ConsensusMode::Async
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ConsensusMode {
     Plain,
     Weighted,
+    Async(AsyncConfig),
+}
+
+/// Knobs of the bounded-staleness asynchronous engine.
+///
+/// The degenerate setting `staleness: 0, quorum: 0 (= all alive),
+/// lambda: 1.0` is guaranteed (and tested) to reproduce the
+/// synchronous loop bit-for-bit given the same seed — that equivalence
+/// is what makes switching engines safe.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AsyncConfig {
+    /// Hard staleness bound `s`: a gradient computed `k` consensus
+    /// versions ago is still applied (discounted) while `k <= s`;
+    /// beyond that it is dropped and the laggard's replica re-synced
+    /// from the leader.
+    pub staleness: usize,
+    /// Contributions required before the leader applies an update;
+    /// `0` means "every alive worker" (fully synchronous pacing).
+    pub quorum: usize,
+    /// Staleness decay: contribution weight is `base · λ^staleness`.
+    pub lambda: f64,
+    /// Base weight: ζ(g') as in Eq. 15 when true (the `Weighted`
+    /// rule), a constant 1 when false (the `Plain` rule).
+    pub zeta_weighted: bool,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        AsyncConfig { staleness: 2, quorum: 0, lambda: 0.5, zeta_weighted: true }
+    }
 }
 
 impl std::str::FromStr for ConsensusMode {
@@ -15,7 +56,8 @@ impl std::str::FromStr for ConsensusMode {
         match s {
             "plain" => Ok(ConsensusMode::Plain),
             "weighted" => Ok(ConsensusMode::Weighted),
-            other => Err(format!("unknown consensus '{other}' (plain|weighted)")),
+            "async" => Ok(ConsensusMode::Async(AsyncConfig::default())),
+            other => Err(format!("unknown consensus '{other}' (plain|weighted|async)")),
         }
     }
 }
@@ -109,6 +151,10 @@ mod tests {
     fn consensus_parse() {
         assert_eq!("plain".parse::<ConsensusMode>().unwrap(), ConsensusMode::Plain);
         assert_eq!("weighted".parse::<ConsensusMode>().unwrap(), ConsensusMode::Weighted);
+        assert_eq!(
+            "async".parse::<ConsensusMode>().unwrap(),
+            ConsensusMode::Async(AsyncConfig::default())
+        );
         assert!("x".parse::<ConsensusMode>().is_err());
     }
 

@@ -6,6 +6,14 @@
 
 use crate::tensor::Matrix;
 
+/// True if every gradient entry is finite. The async engine rejects a
+/// contribution that fails this (a diverged replica, or a corrupted
+/// message in a real deployment) by zeroing its weight instead of
+/// poisoning the consensus.
+pub fn grads_finite(grads: &[Matrix]) -> bool {
+    grads.iter().all(|m| m.data().iter().all(|v| v.is_finite()))
+}
+
 /// Aggregate per-worker gradients with the given weights (pass all-1s
 /// for plain consensus). Workers that contributed nothing this round
 /// are passed with weight 0. Panics on shape mismatch; returns zeros if
@@ -70,6 +78,44 @@ mod tests {
         let gs = vec![grad(1.0)];
         let agg = aggregate_gradients(&gs, &[0.0]);
         assert_eq!(agg[0].data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn ragged_participation_across_rounds() {
+        // the async path feeds rounds where whole workers are absent
+        // (weight 0): the present subset must renormalise among itself,
+        // round by round, independent of who was absent before
+        let gs = vec![grad(1.0), grad(3.0), grad(5.0)];
+        let round1 = aggregate_gradients(&gs, &[1.0, 1.0, 0.0]); // worker 2 absent
+        assert_eq!(round1[0].data(), &[2.0, 4.0]);
+        let round2 = aggregate_gradients(&gs, &[0.0, 1.0, 1.0]); // worker 0 absent
+        assert_eq!(round2[0].data(), &[4.0, 8.0]);
+        let round3 = aggregate_gradients(&gs, &[0.0, 0.0, 2.0]); // only worker 2
+        assert_eq!(round3[0].data(), &[5.0, 10.0]);
+    }
+
+    #[test]
+    fn single_survivor_quorum_is_identity() {
+        // quorum of one: the sole contribution passes through unscaled
+        // whatever its weight magnitude
+        let gs = vec![grad(7.0)];
+        let agg = aggregate_gradients(&gs, &[0.3]);
+        assert_eq!(agg[0].data(), &[7.0, 14.0]);
+    }
+
+    #[test]
+    fn non_finite_grads_detected_and_excludable() {
+        let nan = vec![Matrix::from_vec(1, 2, vec![f32::NAN, 1.0])];
+        let inf = vec![Matrix::from_vec(1, 2, vec![1.0, f32::INFINITY])];
+        let ok = grad(2.0);
+        assert!(!grads_finite(&nan));
+        assert!(!grads_finite(&inf));
+        assert!(grads_finite(&ok));
+        // rejection via zero weight keeps the aggregate finite
+        let gs = vec![nan, ok];
+        let agg = aggregate_gradients(&gs, &[0.0, 1.0]);
+        assert!(grads_finite(&agg));
+        assert_eq!(agg[0].data(), &[2.0, 4.0]);
     }
 
     #[test]

@@ -24,6 +24,12 @@ pub enum Fault {
     Crash { worker: usize, epoch: usize },
     /// Worker sleeps `millis` before every step from `epoch` on.
     Straggle { worker: usize, epoch: usize, millis: u64 },
+    /// Worker rejoins at the start of `epoch` after an earlier crash.
+    /// Honoured by the async engine's elastic membership (the replica
+    /// is re-pulled from the leader before the worker steps again);
+    /// the synchronous loop has no re-sync channel, so there a crash
+    /// stays permanent and `Recover` is ignored.
+    Recover { worker: usize, epoch: usize },
 }
 
 /// The set of faults a run injects.
@@ -69,6 +75,31 @@ impl FaultPlan {
     pub fn alive_workers(&self, workers: usize, epoch: usize) -> usize {
         (0..workers).filter(|&w| !self.crashed(w, epoch)).count()
     }
+
+    /// Elastic-membership view used by the async engine: is `worker`
+    /// active at `epoch`, honouring [`Fault::Recover`]? The latest
+    /// crash/recover event at or before `epoch` wins; a tie at the same
+    /// epoch counts as crashed. Workers with no events are active.
+    pub fn active(&self, worker: usize, epoch: usize) -> bool {
+        // (event_epoch, is_crash) of the latest applicable event
+        let mut last: Option<(usize, bool)> = None;
+        for f in &self.faults {
+            match *f {
+                Fault::Crash { worker: w, epoch: e } if w == worker && e <= epoch => {
+                    if last.map_or(true, |(le, _)| e >= le) {
+                        last = Some((e, true));
+                    }
+                }
+                Fault::Recover { worker: w, epoch: e } if w == worker && e <= epoch => {
+                    if last.map_or(true, |(le, _)| e > le) {
+                        last = Some((e, false));
+                    }
+                }
+                _ => {}
+            }
+        }
+        !last.map_or(false, |(_, crashed)| crashed)
+    }
 }
 
 #[cfg(test)]
@@ -105,6 +136,38 @@ mod tests {
         assert_eq!(p.alive_workers(4, 0), 4);
         assert_eq!(p.alive_workers(4, 2), 3);
         assert_eq!(p.alive_workers(4, 7), 2);
+    }
+
+    #[test]
+    fn recover_restores_active_membership() {
+        let p = FaultPlan {
+            faults: vec![
+                Fault::Crash { worker: 1, epoch: 3 },
+                Fault::Recover { worker: 1, epoch: 6 },
+            ],
+        };
+        assert!(p.active(1, 2));
+        assert!(!p.active(1, 3));
+        assert!(!p.active(1, 5));
+        assert!(p.active(1, 6));
+        assert!(p.active(1, 100));
+        // the synchronous view stays permanent
+        assert!(p.crashed(1, 100));
+        // untouched workers are unaffected
+        assert!(p.active(0, 100));
+    }
+
+    #[test]
+    fn crash_wins_ties_and_later_crash_overrides_recover() {
+        let p = FaultPlan {
+            faults: vec![
+                Fault::Crash { worker: 0, epoch: 2 },
+                Fault::Recover { worker: 0, epoch: 2 },
+                Fault::Crash { worker: 0, epoch: 8 },
+            ],
+        };
+        assert!(!p.active(0, 2), "same-epoch tie counts as crashed");
+        assert!(!p.active(0, 9));
     }
 
     #[test]

@@ -1,21 +1,33 @@
 //! L3 coordinator: the distributed training loop (paper §3.3–3.4,
-//! Algorithm 2).
+//! Algorithm 2) and its bounded-staleness asynchronous extension.
 //!
 //! Topology: one **leader** (the calling thread) plus `workers` worker
 //! threads. Each worker owns a private model replica, its own compute
 //! backend (constructed in-thread — PJRT handles are not `Send`) and a
-//! set of subgraph batches. Training proceeds in synchronous rounds:
+//! set of subgraph batches. Two round engines share that scaffolding:
 //!
-//! 1. every worker runs forward/backward on its next batch,
-//! 2. the leader aggregates gradients — plain average (Eq. 11) or
-//!    ζ-weighted consensus (Eq. 15),
-//! 3. the consensus gradient is broadcast and every replica applies the
-//!    identical optimizer update (Eq. 12/16), keeping replicas in
-//!    lock-step without parameter exchange beyond the gradient.
+//! * **Synchronous** ([`ConsensusMode::Plain`] / [`Weighted`]):
+//!   1. every worker runs forward/backward on its next batch,
+//!   2. the leader aggregates gradients — plain average (Eq. 11) or
+//!      ζ-weighted consensus (Eq. 15),
+//!   3. the consensus gradient is broadcast and every replica applies
+//!      the identical optimizer update (Eq. 12/16), keeping replicas in
+//!      lock-step without parameter exchange beyond the gradient.
+//! * **Asynchronous** ([`ConsensusMode::Async`], [`async_engine`]):
+//!   workers push gradients as soon as a step finishes; the leader
+//!   applies a consensus update per quorum, weighting contributions by
+//!   `ζ_i · λ^staleness_i`, with a hard staleness bound past which a
+//!   laggard is dropped and re-synced. Membership is elastic under
+//!   [`FaultPlan`] crashes/recoveries.
 //!
 //! Communication is accounted in a [`CommLedger`]: gradient bytes per
-//! round, feature bytes per epoch for non-replicated remote candidates.
+//! round, feature bytes per epoch for non-replicated remote candidates,
+//! and replica re-sync bytes for the async engine's recovery path.
+//!
+//! [`Weighted`]: ConsensusMode::Weighted
+//! [`CommLedger`]: crate::comm::CommLedger
 
+mod async_engine;
 mod config;
 mod consensus;
 mod fault;
@@ -23,8 +35,8 @@ mod loading;
 mod trainer;
 mod worker;
 
-pub use config::{ConsensusMode, TrainConfig};
-pub use consensus::aggregate_gradients;
+pub use config::{AsyncConfig, ConsensusMode, TrainConfig};
+pub use consensus::{aggregate_gradients, grads_finite};
 pub use fault::{Fault, FaultPlan};
 pub use loading::allocate_subgraphs;
 pub use trainer::{batch_from_subgraph, batch_zeta, train_gad, train_with_plans, TrainReport};

@@ -1,6 +1,9 @@
-//! The synchronous distributed training loop (Algorithm 2) and the
-//! full GAD pipeline driver.
+//! The distributed training loop driver: the full GAD pipeline, the
+//! synchronous round engine (Algorithm 2), and the shared scaffolding
+//! (worker spawn/teardown, reporting) that the bounded-staleness
+//! [`async_engine`](super::async_engine) plugs into.
 
+use super::async_engine;
 use super::config::{ConsensusMode, TrainConfig};
 use super::consensus::aggregate_gradients;
 use super::loading::allocate_subgraphs;
@@ -11,7 +14,7 @@ use crate::comm::{weighted_feature_traffic_per_epoch, CommLedger, CommStats};
 use crate::graph::boundary_nodes;
 use crate::datasets::Dataset;
 use crate::metrics::{AccuracyMeter, CurveRecorder};
-use crate::model::{Adam, Batch, GcnParams, NormAdj};
+use crate::model::{Adam, Batch, GcnParams, NormAdj, Optimizer};
 use crate::partition::{partition, PartitionConfig};
 use crate::rng::Rng;
 use crate::tensor::Matrix;
@@ -45,6 +48,13 @@ pub struct TrainReport {
     pub edge_cut: usize,
     pub replicas_total: usize,
     pub workers: usize,
+    /// Largest staleness (in consensus versions) of any gradient the
+    /// run actually applied. Always 0 for the synchronous engine; the
+    /// async engine guarantees it never exceeds the configured bound.
+    pub max_staleness_applied: usize,
+    /// Replica re-syncs performed (async engine: staleness-bound
+    /// evictions plus elastic rejoins).
+    pub resyncs: u64,
 }
 
 impl TrainReport {
@@ -180,8 +190,69 @@ pub fn train_gad(dataset: &Dataset, cfg: &TrainConfig) -> Result<TrainReport> {
     train_with_plans(dataset, sources, feature_traffic, part.edge_cut, replicas_total, cfg)
 }
 
-/// The generic synchronous loop over arbitrary batch sources (used by
-/// `train_gad` and every baseline).
+/// Immutable wiring shared by both round engines: channels, counters,
+/// and static run facts established at spawn time.
+pub(super) struct Wiring<'a> {
+    pub cfg: &'a TrainConfig,
+    pub cmd_txs: &'a [mpsc::Sender<WorkerCommand>],
+    pub result_rx: &'a mpsc::Receiver<WorkerResult>,
+    /// Global rounds (= consensus updates) per epoch: the max over
+    /// workers of their per-epoch batch counts.
+    pub rounds_per_epoch: usize,
+    /// Per-worker batches per epoch (for the async engine's cyclic
+    /// batch cursors).
+    pub worker_rounds: &'a [usize],
+    pub ledger: &'a CommLedger,
+    pub grad_bytes_per_sync: u64,
+    pub feature_traffic_per_epoch_bytes: u64,
+    pub params0: &'a GcnParams,
+    /// Constructor for the run's optimizer — the single source of truth
+    /// shared by the worker-spawn site and the async engine's leader
+    /// shadow, so re-synced replicas can never receive a different
+    /// optimizer than their peers started with.
+    pub make_optimizer: &'a (dyn Fn() -> Box<dyn Optimizer> + Sync),
+}
+
+impl Wiring<'_> {
+    pub fn workers(&self) -> usize {
+        self.cmd_txs.len()
+    }
+
+    pub fn send(&self, worker: usize, cmd: WorkerCommand) -> Result<()> {
+        self.cmd_txs[worker].send(cmd).map_err(|_| anyhow!("worker {worker} died"))
+    }
+}
+
+/// Mutable per-run state both engines fill in while looping.
+pub(super) struct LoopState {
+    pub recorder: CurveRecorder,
+    pub epochs_run: usize,
+    pub final_train: AccuracyMeter,
+    pub final_val: AccuracyMeter,
+    pub final_test: AccuracyMeter,
+    pub max_staleness_applied: usize,
+    pub resyncs: u64,
+}
+
+/// Receive exactly `n` results, failing fast on worker errors.
+pub(super) fn collect(rx: &mpsc::Receiver<WorkerResult>, n: usize) -> Result<Vec<WorkerResult>> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        match rx.recv() {
+            Ok(WorkerResult::Error { worker, message }) => {
+                return Err(anyhow!("worker {worker}: {message}"));
+            }
+            Ok(r) => out.push(r),
+            Err(_) => return Err(anyhow!("worker channel closed early")),
+        }
+    }
+    Ok(out)
+}
+
+/// The generic training loop over arbitrary batch sources (used by
+/// `train_gad` and every baseline): spawn one replica per source, run
+/// the configured round engine — synchronous lock-step or bounded-
+/// staleness async, per [`ConsensusMode`] — and assemble the report.
 pub fn train_with_plans(
     dataset: &Dataset,
     sources: Vec<Box<dyn BatchSource>>,
@@ -196,15 +267,18 @@ pub fn train_with_plans(
 
     // one "device" per worker: divide the cores so wall-clock scaling
     // with worker count reflects a multi-device deployment rather than
-    // intra-op threading saturating the whole machine
+    // intra-op threading saturating the whole machine. The budget is
+    // thread-local to each worker (set inside `worker_main`), so
+    // concurrent runs in one process don't race on it.
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    crate::tensor::set_intra_threads((cores / workers).max(1));
+    let intra_threads = (cores / workers).max(1);
 
     let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x6AD);
     let params0 = GcnParams::init(dataset.feature_dim(), cfg.hidden, dataset.num_classes, cfg.layers, &mut rng);
     let grad_bytes_per_sync = 2 * params0.nbytes() as u64; // up + down
 
-    let rounds_per_epoch = sources.iter().map(|s| s.batches_per_epoch()).max().unwrap_or(0);
+    let worker_rounds: Vec<usize> = sources.iter().map(|s| s.batches_per_epoch()).collect();
+    let rounds_per_epoch = worker_rounds.iter().copied().max().unwrap_or(0);
     if rounds_per_epoch == 0 {
         return Err(anyhow!("no batches to train on"));
     }
@@ -213,6 +287,11 @@ pub fn train_with_plans(
 
     let ledger = CommLedger::new();
     let factory = backend_factory(cfg.backend, &cfg.artifact_dir);
+    // every replica — worker or leader shadow — is built by this one
+    // closure, so they can never disagree on optimizer type or
+    // hyperparameters
+    let lr = cfg.lr;
+    let make_optimizer = move || -> Box<dyn Optimizer> { Box::new(Adam::new(lr)) };
 
     // spawn workers
     let (result_tx, result_rx) = mpsc::channel::<WorkerResult>();
@@ -226,145 +305,40 @@ pub fn train_with_plans(
             source,
             factory: factory.clone(),
             init_params: params0.clone(),
-            optimizer: Box::new(Adam::new(cfg.lr)),
+            optimizer: make_optimizer(),
+            intra_threads,
         };
         let tx = result_tx.clone();
         handles.push(std::thread::spawn(move || worker_main(plan, cmd_rx, tx)));
     }
     drop(result_tx);
 
-    let collect = |rx: &mpsc::Receiver<WorkerResult>, n: usize| -> Result<Vec<WorkerResult>> {
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            match rx.recv() {
-                Ok(WorkerResult::Error { worker, message }) => {
-                    return Err(anyhow!("worker {worker}: {message}"));
-                }
-                Ok(r) => out.push(r),
-                Err(_) => return Err(anyhow!("worker channel closed early")),
-            }
-        }
-        Ok(out)
+    let wiring = Wiring {
+        cfg,
+        cmd_txs: &cmd_txs,
+        result_rx: &result_rx,
+        rounds_per_epoch,
+        worker_rounds: &worker_rounds,
+        ledger: &ledger,
+        grad_bytes_per_sync,
+        feature_traffic_per_epoch_bytes,
+        params0: &params0,
+        make_optimizer: &make_optimizer,
+    };
+    let mut state = LoopState {
+        recorder: CurveRecorder::new(cfg.conv_tol, cfg.conv_patience),
+        epochs_run: 0,
+        final_train: AccuracyMeter::default(),
+        final_val: AccuracyMeter::default(),
+        final_test: AccuracyMeter::default(),
+        max_staleness_applied: 0,
+        resyncs: 0,
     };
 
-    let mut recorder = CurveRecorder::new(cfg.conv_tol, cfg.conv_patience);
-    let mut epochs_run = 0usize;
-    let mut final_train = AccuracyMeter::default();
-    let mut final_val = AccuracyMeter::default();
-    let mut final_test = AccuracyMeter::default();
-
-    let run = (|| -> Result<()> {
-        for epoch in 0..cfg.epochs {
-            epochs_run = epoch + 1;
-            let mut loss_sum = 0.0f64;
-            let mut loss_count = 0usize;
-
-            // fault injection: crashed workers stop receiving commands
-            let alive: Vec<bool> = (0..workers).map(|w| !cfg.faults.crashed(w, epoch)).collect();
-            let n_alive = alive.iter().filter(|&&a| a).count();
-            if n_alive == 0 {
-                return Err(anyhow!("all workers crashed at epoch {epoch}"));
-            }
-
-            // LR schedule: identical factor on every replica
-            let lr_factor = cfg.schedule.factor(epoch);
-            for (w, tx) in cmd_txs.iter().enumerate() {
-                if alive[w] {
-                    tx.send(WorkerCommand::SetLr { factor: lr_factor })
-                        .map_err(|_| anyhow!("worker died"))?;
-                }
-            }
-
-            for round in 0..rounds_per_epoch {
-                for (w, tx) in cmd_txs.iter().enumerate() {
-                    if !alive[w] {
-                        continue;
-                    }
-                    let delay_ms = cfg.faults.straggle_ms(w, epoch).unwrap_or(0);
-                    tx.send(WorkerCommand::Step { epoch, round, delay_ms })
-                        .map_err(|_| anyhow!("worker died"))?;
-                }
-                let mut results = collect(&result_rx, n_alive)?;
-                // results arrive in thread-completion order; sort by
-                // worker id so float aggregation order (and thus the
-                // whole run) is deterministic
-                results.sort_by_key(|r| match r {
-                    WorkerResult::Step { worker, .. } | WorkerResult::Eval { worker, .. } => *worker,
-                    WorkerResult::Error { worker, .. } => *worker,
-                });
-
-                let mut grads: Vec<Vec<Matrix>> = Vec::with_capacity(workers);
-                let mut weights: Vec<f64> = Vec::with_capacity(workers);
-                let mut active = 0u64;
-                for r in results {
-                    if let WorkerResult::Step { grads: Some(g), loss, zeta, .. } = r {
-                        weights.push(match cfg.consensus {
-                            ConsensusMode::Plain => 1.0,
-                            // guard: non-positive ζ falls back to plain weight
-                            ConsensusMode::Weighted => if zeta > 0.0 { zeta } else { 1.0 },
-                        });
-                        grads.push(g);
-                        loss_sum += loss as f64;
-                        loss_count += 1;
-                        active += 1;
-                    }
-                }
-                if grads.is_empty() {
-                    continue;
-                }
-                let consensus = aggregate_gradients(&grads, &weights);
-                // a single co-located worker exchanges nothing over the
-                // interconnect; otherwise every active worker uploads its
-                // gradient and downloads the consensus
-                if workers > 1 {
-                    ledger.record_gradient(active * grad_bytes_per_sync);
-                }
-                for (w, tx) in cmd_txs.iter().enumerate() {
-                    if !alive[w] {
-                        continue;
-                    }
-                    tx.send(WorkerCommand::Update { grads: consensus.clone() })
-                        .map_err(|_| anyhow!("worker died"))?;
-                }
-            }
-            ledger.record_feature(feature_traffic_per_epoch_bytes);
-
-            // distributed eval (crashed workers' shards go unreported,
-            // like a real partial outage)
-            for (w, tx) in cmd_txs.iter().enumerate() {
-                if !alive[w] {
-                    continue;
-                }
-                tx.send(WorkerCommand::Eval).map_err(|_| anyhow!("worker died"))?;
-            }
-            let mut test_meter = AccuracyMeter::default();
-            let mut val_meter = AccuracyMeter::default();
-            let mut train_meter = AccuracyMeter::default();
-            for r in collect(&result_rx, n_alive)? {
-                if let WorkerResult::Eval { train, val, test, .. } = r {
-                    train_meter.merge(train);
-                    val_meter.merge(val);
-                    test_meter.merge(test);
-                }
-            }
-            final_train = train_meter;
-            final_val = val_meter;
-            final_test = test_meter;
-
-            let mean_loss = if loss_count > 0 { (loss_sum / loss_count as f64) as f32 } else { 0.0 };
-            let converged = recorder.record(epoch, mean_loss, test_meter.value());
-            if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
-                eprintln!(
-                    "epoch {epoch:4}  loss {mean_loss:.4}  test_acc {:.4}",
-                    test_meter.value()
-                );
-            }
-            if converged && cfg.stop_on_converge {
-                break;
-            }
-        }
-        Ok(())
-    })();
+    let run = match cfg.consensus {
+        ConsensusMode::Async(acfg) => async_engine::run_async_epochs(&wiring, &mut state, acfg),
+        _ => run_sync_epochs(&wiring, &mut state),
+    };
 
     for tx in &cmd_txs {
         let _ = tx.send(WorkerCommand::Stop);
@@ -379,26 +353,148 @@ pub fn train_with_plans(
         crate::comm::LinkSpec::default(),
         workers,
         params0.nbytes() as u64,
-        epochs_run * rounds_per_epoch,
+        state.epochs_run * rounds_per_epoch,
         ledger.feature_bytes(),
     );
 
     Ok(TrainReport {
-        test_accuracy: final_test.value(),
-        val_accuracy: final_val.value(),
-        train_accuracy: final_train.value(),
-        epochs_run,
+        test_accuracy: state.final_test.value(),
+        val_accuracy: state.final_val.value(),
+        train_accuracy: state.final_train.value(),
+        epochs_run: state.epochs_run,
         wall_seconds: started.elapsed().as_secs_f64(),
-        time_to_converge: recorder.time_to_converge(),
-        converged_epoch: recorder.converged().map(|(e, _)| e),
-        curve: recorder.points.clone(),
+        time_to_converge: state.recorder.time_to_converge(),
+        converged_epoch: state.recorder.converged().map(|(e, _)| e),
+        curve: state.recorder.points.clone(),
         comm: CommStats::from_ledger(&ledger),
         network_time_est_sec,
         memory_per_worker,
         edge_cut,
         replicas_total,
         workers,
+        max_staleness_applied: state.max_staleness_applied,
+        resyncs: state.resyncs,
     })
+}
+
+/// The synchronous round engine (Algorithm 2): every alive worker
+/// steps, the leader aggregates, every replica applies the identical
+/// consensus update.
+fn run_sync_epochs(w: &Wiring<'_>, st: &mut LoopState) -> Result<()> {
+    let cfg = w.cfg;
+    let workers = w.workers();
+    for epoch in 0..cfg.epochs {
+        st.epochs_run = epoch + 1;
+        let mut loss_sum = 0.0f64;
+        let mut loss_count = 0usize;
+
+        // fault injection: crashed workers stop receiving commands
+        let alive: Vec<bool> = (0..workers).map(|i| !cfg.faults.crashed(i, epoch)).collect();
+        let n_alive = alive.iter().filter(|&&a| a).count();
+        if n_alive == 0 {
+            return Err(anyhow!("all workers crashed at epoch {epoch}"));
+        }
+
+        // LR schedule: identical factor on every replica
+        let lr_factor = cfg.schedule.factor(epoch);
+        for i in 0..workers {
+            if alive[i] {
+                w.send(i, WorkerCommand::SetLr { factor: lr_factor })?;
+            }
+        }
+
+        for round in 0..w.rounds_per_epoch {
+            for i in 0..workers {
+                if !alive[i] {
+                    continue;
+                }
+                let delay_ms = cfg.faults.straggle_ms(i, epoch).unwrap_or(0);
+                w.send(i, WorkerCommand::Step { epoch, round, delay_ms })?;
+            }
+            let mut results = collect(w.result_rx, n_alive)?;
+            // results arrive in thread-completion order; sort by
+            // worker id so float aggregation order (and thus the
+            // whole run) is deterministic
+            results.sort_by_key(|r| match r {
+                WorkerResult::Step { worker, .. } | WorkerResult::Eval { worker, .. } => *worker,
+                WorkerResult::Error { worker, .. } => *worker,
+            });
+
+            let mut grads: Vec<Vec<Matrix>> = Vec::with_capacity(workers);
+            let mut weights: Vec<f64> = Vec::with_capacity(workers);
+            let mut active = 0u64;
+            for r in results {
+                if let WorkerResult::Step { grads: Some(g), loss, zeta, .. } = r {
+                    weights.push(match cfg.consensus {
+                        ConsensusMode::Plain => 1.0,
+                        // guard: non-positive ζ falls back to plain weight
+                        ConsensusMode::Weighted => if zeta > 0.0 { zeta } else { 1.0 },
+                        // unreachable via train_with_plans (async runs its
+                        // own engine); behave like its base weighting
+                        ConsensusMode::Async(a) => {
+                            if a.zeta_weighted && zeta > 0.0 { zeta } else { 1.0 }
+                        }
+                    });
+                    grads.push(g);
+                    loss_sum += loss as f64;
+                    loss_count += 1;
+                    active += 1;
+                }
+            }
+            if grads.is_empty() {
+                continue;
+            }
+            let consensus = aggregate_gradients(&grads, &weights);
+            // a single co-located worker exchanges nothing over the
+            // interconnect; otherwise every active worker uploads its
+            // gradient and downloads the consensus
+            if workers > 1 {
+                w.ledger.record_gradient(active * w.grad_bytes_per_sync);
+            }
+            for i in 0..workers {
+                if !alive[i] {
+                    continue;
+                }
+                w.send(i, WorkerCommand::Update { grads: consensus.clone() })?;
+            }
+        }
+        w.ledger.record_feature(w.feature_traffic_per_epoch_bytes);
+
+        // distributed eval (crashed workers' shards go unreported,
+        // like a real partial outage)
+        for i in 0..workers {
+            if !alive[i] {
+                continue;
+            }
+            w.send(i, WorkerCommand::Eval)?;
+        }
+        let mut test_meter = AccuracyMeter::default();
+        let mut val_meter = AccuracyMeter::default();
+        let mut train_meter = AccuracyMeter::default();
+        for r in collect(w.result_rx, n_alive)? {
+            if let WorkerResult::Eval { train, val, test, .. } = r {
+                train_meter.merge(train);
+                val_meter.merge(val);
+                test_meter.merge(test);
+            }
+        }
+        st.final_train = train_meter;
+        st.final_val = val_meter;
+        st.final_test = test_meter;
+
+        let mean_loss = if loss_count > 0 { (loss_sum / loss_count as f64) as f32 } else { 0.0 };
+        let converged = st.recorder.record(epoch, mean_loss, test_meter.value());
+        if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+            eprintln!(
+                "epoch {epoch:4}  loss {mean_loss:.4}  test_acc {:.4}",
+                test_meter.value()
+            );
+        }
+        if converged && cfg.stop_on_converge {
+            break;
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -482,5 +578,15 @@ mod tests {
         let b = train_gad(&ds, &cfg).unwrap();
         assert_eq!(a.test_accuracy, b.test_accuracy);
         assert_eq!(a.comm.feature_bytes, b.comm.feature_bytes);
+    }
+
+    #[test]
+    fn sync_engine_reports_zero_staleness() {
+        let ds = SyntheticSpec::tiny().generate(6);
+        let cfg = TrainConfig { epochs: 3, ..quick_cfg() };
+        let r = train_gad(&ds, &cfg).unwrap();
+        assert_eq!(r.max_staleness_applied, 0);
+        assert_eq!(r.resyncs, 0);
+        assert_eq!(r.comm.resync_bytes, 0);
     }
 }

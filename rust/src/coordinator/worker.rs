@@ -1,5 +1,11 @@
 //! Worker threads: each owns a model replica, a compute backend and a
 //! batch source, and executes leader commands over mpsc channels.
+//!
+//! Every replica tracks a **parameter version** — the number of
+//! consensus updates it has applied. The version rides along with every
+//! step result so the leader (sync or async) can measure how stale a
+//! gradient is; the async engine drops contributions past its bound and
+//! re-syncs the laggard with [`WorkerCommand::LoadParams`].
 
 use crate::backend::BackendFactory;
 use crate::metrics::AccuracyMeter;
@@ -51,8 +57,14 @@ pub enum WorkerCommand {
     /// Train on the batch for `(epoch, round)` and report gradients.
     /// `delay_ms` injects straggler latency (fault testing).
     Step { epoch: usize, round: usize, delay_ms: u64 },
-    /// Apply the consensus gradient to the local replica.
+    /// Apply the consensus gradient to the local replica (bumps the
+    /// replica's parameter version).
     Update { grads: Vec<Matrix> },
+    /// Replace the replica wholesale: parameters, optimizer state and
+    /// version from the leader's shadow copy. Sent by the async engine
+    /// when a laggard exceeded the staleness bound or a crashed worker
+    /// rejoins — the "fresh replica pull".
+    LoadParams { params: GcnParams, optimizer: Box<dyn Optimizer>, version: u64 },
     /// Set the schedule's learning-rate factor for this epoch.
     SetLr { factor: f32 },
     /// Evaluate the replica on all local batches.
@@ -69,6 +81,10 @@ pub enum WorkerResult {
         loss: f32,
         zeta: f64,
         batch_nodes: usize,
+        /// Replica parameter version the gradient was computed at
+        /// (consensus updates applied so far) — the leader derives
+        /// staleness from this.
+        param_version: u64,
     },
     Eval {
         worker: usize,
@@ -87,12 +103,18 @@ pub struct WorkerPlan {
     pub factory: BackendFactory,
     pub init_params: GcnParams,
     pub optimizer: Box<dyn Optimizer>,
+    /// Intra-op thread budget for this worker's compute (0 = all
+    /// cores). Set per worker thread, not globally, so concurrent
+    /// training runs in one process cannot clobber each other.
+    pub intra_threads: usize,
 }
 
 /// Worker thread body: construct the backend locally (PJRT handles are
 /// not `Send`), then serve commands until `Stop`.
 pub fn worker_main(plan: WorkerPlan, rx: Receiver<WorkerCommand>, tx: Sender<WorkerResult>) {
-    let WorkerPlan { worker, mut source, factory, init_params, mut optimizer } = plan;
+    let WorkerPlan { worker, mut source, factory, init_params, mut optimizer, intra_threads } =
+        plan;
+    crate::tensor::set_intra_threads(intra_threads);
     let mut backend = match factory() {
         Ok(b) => b,
         Err(e) => {
@@ -101,6 +123,7 @@ pub fn worker_main(plan: WorkerPlan, rx: Receiver<WorkerCommand>, tx: Sender<Wor
         }
     };
     let mut params = init_params;
+    let mut version: u64 = 0;
 
     while let Ok(cmd) = rx.recv() {
         match cmd {
@@ -116,10 +139,18 @@ pub fn worker_main(plan: WorkerPlan, rx: Receiver<WorkerCommand>, tx: Sender<Wor
                             loss: out.loss,
                             zeta,
                             batch_nodes: batch.len(),
+                            param_version: version,
                         },
                         Err(e) => WorkerResult::Error { worker, message: format!("train: {e:#}") },
                     },
-                    None => WorkerResult::Step { worker, grads: None, loss: 0.0, zeta: 0.0, batch_nodes: 0 },
+                    None => WorkerResult::Step {
+                        worker,
+                        grads: None,
+                        loss: 0.0,
+                        zeta: 0.0,
+                        batch_nodes: 0,
+                        param_version: version,
+                    },
                 };
                 if tx.send(msg).is_err() {
                     return;
@@ -127,6 +158,12 @@ pub fn worker_main(plan: WorkerPlan, rx: Receiver<WorkerCommand>, tx: Sender<Wor
             }
             WorkerCommand::Update { grads } => {
                 optimizer.step(&mut params, &grads);
+                version += 1;
+            }
+            WorkerCommand::LoadParams { params: fresh, optimizer: opt, version: v } => {
+                params = fresh;
+                optimizer = opt;
+                version = v;
             }
             WorkerCommand::SetLr { factor } => {
                 optimizer.set_lr_factor(factor);
@@ -220,5 +257,59 @@ mod tests {
     fn resident_bytes_positive() {
         let src = FixedSource::new(vec![mini_batch(1)], vec![1.0]);
         assert!(src.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn worker_reports_param_version_and_resyncs() {
+        use crate::backend::backend_factory;
+        use crate::model::Adam;
+        use crate::rng::Rng;
+        use std::sync::mpsc;
+
+        let mut rng = Rng::seed_from_u64(5);
+        let params = GcnParams::init(4, 8, 2, 2, &mut rng);
+        let plan = WorkerPlan {
+            worker: 0,
+            source: Box::new(FixedSource::new(vec![mini_batch(1)], vec![1.0])),
+            factory: backend_factory(crate::backend::BackendKind::Native, "artifacts"),
+            init_params: params.clone(),
+            optimizer: Box::new(Adam::new(0.01)),
+            intra_threads: 1,
+        };
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let (res_tx, res_rx) = mpsc::channel();
+        let h = std::thread::spawn(move || worker_main(plan, cmd_rx, res_tx));
+
+        let step = |tx: &mpsc::Sender<WorkerCommand>| {
+            tx.send(WorkerCommand::Step { epoch: 0, round: 0, delay_ms: 0 }).unwrap()
+        };
+        let version_of = |rx: &mpsc::Receiver<WorkerResult>| match rx.recv().unwrap() {
+            WorkerResult::Step { param_version, grads, .. } => {
+                assert!(grads.is_some());
+                param_version
+            }
+            _ => panic!("expected step result"),
+        };
+
+        step(&cmd_tx);
+        assert_eq!(version_of(&res_rx), 0);
+        // one consensus update bumps the version
+        let zero_grads: Vec<Matrix> = params.zeros_like();
+        cmd_tx.send(WorkerCommand::Update { grads: zero_grads }).unwrap();
+        step(&cmd_tx);
+        assert_eq!(version_of(&res_rx), 1);
+        // a re-sync overwrites it wholesale
+        cmd_tx
+            .send(WorkerCommand::LoadParams {
+                params: params.clone(),
+                optimizer: Box::new(Adam::new(0.01)),
+                version: 9,
+            })
+            .unwrap();
+        step(&cmd_tx);
+        assert_eq!(version_of(&res_rx), 9);
+
+        cmd_tx.send(WorkerCommand::Stop).unwrap();
+        h.join().unwrap();
     }
 }

@@ -62,7 +62,7 @@ pub mod prelude {
     pub use crate::augment::{AugmentConfig, AugmentedSubgraph};
     pub use crate::backend::{Backend, BackendKind, NativeBackend};
     pub use crate::baselines::Method;
-    pub use crate::coordinator::{ConsensusMode, TrainConfig, TrainReport};
+    pub use crate::coordinator::{AsyncConfig, ConsensusMode, TrainConfig, TrainReport};
     pub use crate::datasets::{Dataset, SyntheticSpec};
     pub use crate::graph::{Csr, Subgraph};
     pub use crate::model::GcnParams;

@@ -14,6 +14,17 @@ pub trait Optimizer: Send {
     /// Clone into a boxed fresh instance with the same hyperparameters
     /// (each worker holds its own state).
     fn fresh(&self) -> Box<dyn Optimizer>;
+    /// Clone *including accumulated state* (moments, step count). The
+    /// async engine ships this alongside a parameter snapshot when it
+    /// re-syncs a laggard, so the recovered replica's future updates
+    /// stay bit-identical to every other replica's.
+    fn clone_box(&self) -> Box<dyn Optimizer>;
+    /// Bytes of accumulated optimizer state (zero for stateless rules).
+    /// Re-sync traffic accounting adds this to the parameter bytes so
+    /// the reported payload matches what a real transfer would ship.
+    fn state_nbytes(&self) -> usize {
+        0
+    }
     /// Scale the effective learning rate relative to the base (LR
     /// schedules; gradient scaling would be a no-op under Adam).
     fn set_lr_factor(&mut self, _factor: f32) {}
@@ -43,6 +54,9 @@ impl Optimizer for Sgd {
     }
     fn fresh(&self) -> Box<dyn Optimizer> {
         Box::new(Sgd::new(self.lr))
+    }
+    fn clone_box(&self) -> Box<dyn Optimizer> {
+        Box::new(self.clone())
     }
     fn set_lr_factor(&mut self, factor: f32) {
         self.factor = factor;
@@ -105,6 +119,16 @@ impl Optimizer for Adam {
     fn fresh(&self) -> Box<dyn Optimizer> {
         Box::new(Adam::new(self.lr))
     }
+    fn clone_box(&self) -> Box<dyn Optimizer> {
+        Box::new(self.clone())
+    }
+    fn state_nbytes(&self) -> usize {
+        self.m
+            .iter()
+            .chain(self.v.iter())
+            .map(|s| s.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
     fn set_lr_factor(&mut self, factor: f32) {
         self.factor = factor;
     }
@@ -146,6 +170,26 @@ mod tests {
         }
         let after: f32 = p.ws.iter().map(|w| w.frobenius()).sum();
         assert!(after < 0.2 * before, "before {before} after {after}");
+    }
+
+    #[test]
+    fn clone_box_carries_adam_state() {
+        let mut rng = Rng::seed_from_u64(4);
+        let mut p = GcnParams::init(4, 4, 2, 2, &mut rng);
+        let mut opt = Adam::new(0.01);
+        // accumulate some moments, then fork
+        for _ in 0..5 {
+            let g = quadratic_grad(&p);
+            opt.step(&mut p, &g);
+        }
+        let mut forked = opt.clone_box();
+        let (mut a, mut b) = (p.clone(), p.clone());
+        for _ in 0..5 {
+            let g = quadratic_grad(&a);
+            opt.step(&mut a, &g);
+            forked.step(&mut b, &g);
+        }
+        assert_eq!(a.max_abs_diff(&b), 0.0, "cloned state must track exactly");
     }
 
     #[test]

@@ -14,16 +14,27 @@ const KC: usize = 256;
 /// Problems smaller than this many MACs stay single-threaded.
 const PAR_THRESHOLD: usize = 1 << 21;
 
-/// Intra-op thread budget. The coordinator divides the machine between
-/// workers (one "device" per worker, like the paper's one-GPU-per-
-/// processor testbed); 0 = use all cores (single-worker / bench mode).
-static INTRA_THREADS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+thread_local! {
+    /// Intra-op thread budget of the *calling* thread. The coordinator
+    /// divides the machine between workers (one "device" per worker,
+    /// like the paper's one-GPU-per-processor testbed); 0 = use all
+    /// cores (single-worker / bench mode).
+    ///
+    /// Thread-local on purpose: this used to be a process-global
+    /// atomic, and concurrent `train_gad` runs (cargo's parallel test
+    /// threads) overwrote each other's per-worker budget, making
+    /// wall-clock-sensitive assertions flaky. Each worker thread now
+    /// sets its own budget at spawn (see `WorkerPlan::intra_threads`),
+    /// so concurrent runs cannot interfere.
+    static INTRA_THREADS: std::cell::Cell<usize> = std::cell::Cell::new(0);
+}
 
-/// Set the per-op thread budget (0 = all cores). Called by the trainer
-/// with `cores / workers` so wall-clock scaling with workers reflects
-/// a real multi-device deployment.
+/// Set the per-op thread budget for ops issued from the current thread
+/// (0 = all cores). Worker threads call this with `cores / workers` so
+/// wall-clock scaling with workers reflects a real multi-device
+/// deployment.
 pub fn set_intra_threads(n: usize) {
-    INTRA_THREADS.store(n, std::sync::atomic::Ordering::Relaxed);
+    INTRA_THREADS.with(|c| c.set(n));
 }
 
 /// Number of worker threads to use for a problem of `flops` MACs.
@@ -31,7 +42,7 @@ fn thread_count(flops: usize) -> usize {
     if flops < PAR_THRESHOLD {
         return 1;
     }
-    let cap = match INTRA_THREADS.load(std::sync::atomic::Ordering::Relaxed) {
+    let cap = match INTRA_THREADS.with(|c| c.get()) {
         0 => 8,
         n => n,
     };

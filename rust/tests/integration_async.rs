@@ -1,0 +1,197 @@
+//! Integration: the bounded-staleness async engine against the
+//! synchronous oracle.
+//!
+//! The load-bearing test is the bit-equivalence one: with
+//! `staleness: 0, quorum: 0 (= all alive), lambda: 1.0` the async
+//! engine must reproduce the synchronous trainer exactly — same
+//! accuracies to the bit, same communication bytes. That equivalence is
+//! the safety argument for the engine refactor.
+
+use gad::coordinator::{
+    train_gad, AsyncConfig, ConsensusMode, Fault, FaultPlan, TrainConfig,
+};
+use gad::datasets::SyntheticSpec;
+use gad::proptest_util::forall;
+
+fn base_cfg() -> TrainConfig {
+    TrainConfig {
+        partitions: 4,
+        workers: 2,
+        layers: 2,
+        hidden: 24,
+        lr: 0.02,
+        epochs: 6,
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+/// The degenerate async config that must equal the sync engine.
+fn sync_equivalent(zeta_weighted: bool) -> AsyncConfig {
+    AsyncConfig { staleness: 0, quorum: 0, lambda: 1.0, zeta_weighted }
+}
+
+fn assert_bitwise_equal(sync: &gad::coordinator::TrainReport, asy: &gad::coordinator::TrainReport) {
+    assert_eq!(
+        sync.test_accuracy.to_bits(),
+        asy.test_accuracy.to_bits(),
+        "test accuracy diverged: sync {} vs async {}",
+        sync.test_accuracy,
+        asy.test_accuracy
+    );
+    assert_eq!(sync.val_accuracy.to_bits(), asy.val_accuracy.to_bits());
+    assert_eq!(sync.train_accuracy.to_bits(), asy.train_accuracy.to_bits());
+    assert_eq!(sync.epochs_run, asy.epochs_run);
+    assert_eq!(sync.comm.gradient_bytes, asy.comm.gradient_bytes, "gradient traffic diverged");
+    assert_eq!(sync.comm.feature_bytes, asy.comm.feature_bytes, "feature traffic diverged");
+    assert_eq!(asy.comm.resync_bytes, 0, "degenerate async must never re-sync");
+    assert_eq!(asy.max_staleness_applied, 0);
+    assert_eq!(asy.resyncs, 0);
+    // per-epoch loss curves must agree bit-for-bit too (same summation order)
+    assert_eq!(sync.curve.len(), asy.curve.len());
+    for (a, b) in sync.curve.iter().zip(&asy.curve) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverged at epoch {}", a.epoch);
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    }
+}
+
+#[test]
+fn degenerate_async_is_bitwise_equal_to_weighted_sync() {
+    let ds = SyntheticSpec::tiny().generate(31);
+    let mut s = base_cfg();
+    s.consensus = ConsensusMode::Weighted;
+    let sync = train_gad(&ds, &s).unwrap();
+
+    let mut a = base_cfg();
+    a.consensus = ConsensusMode::Async(sync_equivalent(true));
+    let asy = train_gad(&ds, &a).unwrap();
+
+    assert_bitwise_equal(&sync, &asy);
+}
+
+#[test]
+fn degenerate_async_is_bitwise_equal_to_plain_sync() {
+    let ds = SyntheticSpec::tiny().generate(32);
+    let mut s = base_cfg();
+    s.consensus = ConsensusMode::Plain;
+    let sync = train_gad(&ds, &s).unwrap();
+
+    let mut a = base_cfg();
+    a.consensus = ConsensusMode::Async(sync_equivalent(false));
+    let asy = train_gad(&ds, &a).unwrap();
+
+    assert_bitwise_equal(&sync, &asy);
+}
+
+#[test]
+fn prop_applied_staleness_never_exceeds_bound() {
+    // random staleness bounds / quorums / decay, with an injected
+    // straggler so real staleness occurs; the engine's own report is
+    // the observable: no applied gradient may exceed the bound
+    forall("staleness bound holds", 5, |rng| {
+        let staleness = rng.gen_range(4); // 0..=3
+        let quorum = 1 + rng.gen_range(2); // 1 or 2
+        let lambda = 0.25 + 0.5 * rng.gen_f64();
+        let seed = 100 + rng.gen_range(1000) as u64;
+        let ds = SyntheticSpec::tiny().generate(seed);
+        let mut cfg = base_cfg();
+        cfg.epochs = 3;
+        cfg.hidden = 16;
+        cfg.seed = seed;
+        cfg.consensus = ConsensusMode::Async(AsyncConfig {
+            staleness,
+            quorum,
+            lambda,
+            zeta_weighted: true,
+        });
+        cfg.faults = FaultPlan {
+            faults: vec![Fault::Straggle { worker: 0, epoch: 0, millis: 30 }],
+        };
+        let r = train_gad(&ds, &cfg).map_err(|e| format!("train failed: {e:#}"))?;
+        if r.max_staleness_applied > staleness {
+            return Err(format!(
+                "applied staleness {} exceeds bound {staleness} (quorum {quorum})",
+                r.max_staleness_applied
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn async_beats_sync_wall_clock_under_straggler() {
+    // a 250ms straggler stretches every synchronous round; the async
+    // engine routes around it via quorum-1 updates and only waits for
+    // the laggard's single in-flight step at each epoch edge
+    let ds = SyntheticSpec::tiny().generate(33);
+    let straggler = FaultPlan {
+        faults: vec![Fault::Straggle { worker: 0, epoch: 0, millis: 250 }],
+    };
+
+    let mut s = base_cfg();
+    s.epochs = 4;
+    s.consensus = ConsensusMode::Weighted;
+    s.faults = straggler.clone();
+    let sync = train_gad(&ds, &s).unwrap();
+
+    let mut a = base_cfg();
+    a.epochs = 4;
+    a.consensus = ConsensusMode::Async(AsyncConfig {
+        staleness: 3,
+        quorum: 1,
+        lambda: 0.5,
+        zeta_weighted: true,
+    });
+    a.faults = straggler;
+    let asy = train_gad(&ds, &a).unwrap();
+
+    assert!(
+        asy.wall_seconds < sync.wall_seconds,
+        "async {:.2}s should beat sync {:.2}s under a 250ms straggler",
+        asy.wall_seconds,
+        sync.wall_seconds
+    );
+    // and it still learns: the model is driven by the healthy worker
+    // with discounted straggler contributions folded in
+    assert!(asy.test_accuracy > 0.25, "async accuracy {}", asy.test_accuracy);
+}
+
+#[test]
+fn elastic_membership_crash_and_rejoin() {
+    // a crash mid-run removes the worker from the quorum; a recovery
+    // rejoins it through a fresh replica pull (re-sync traffic), and
+    // the run survives end to end
+    let ds = SyntheticSpec::tiny().generate(34);
+    let mut cfg = base_cfg();
+    cfg.epochs = 6;
+    cfg.consensus = ConsensusMode::Async(AsyncConfig {
+        staleness: 2,
+        quorum: 1,
+        lambda: 0.5,
+        zeta_weighted: true,
+    });
+    cfg.faults = FaultPlan {
+        faults: vec![
+            Fault::Crash { worker: 1, epoch: 2 },
+            Fault::Recover { worker: 1, epoch: 4 },
+        ],
+    };
+    let r = train_gad(&ds, &cfg).unwrap();
+    assert_eq!(r.epochs_run, 6, "run must survive the crash/rejoin cycle");
+    assert!(r.resyncs >= 1, "rejoin must pull a fresh replica");
+    assert!(r.comm.resync_bytes > 0, "re-sync traffic must be accounted");
+    assert!(r.test_accuracy > 0.25, "accuracy {}", r.test_accuracy);
+}
+
+#[test]
+fn async_mode_parses_from_cli_string() {
+    let mode: ConsensusMode = "async".parse().unwrap();
+    match mode {
+        ConsensusMode::Async(a) => {
+            assert_eq!(a.staleness, 2);
+            assert_eq!(a.quorum, 0);
+            assert!(a.zeta_weighted);
+        }
+        other => panic!("expected async, got {other:?}"),
+    }
+}

@@ -1,0 +1,177 @@
+//! Offline stub of the `xla` (PJRT) crate.
+//!
+//! The build container has no crates.io registry and no PJRT plugin, so
+//! this path dependency mirrors the API slice `gad::runtime` and
+//! `gad::backend::XlaBackend` consume. Host-side [`Literal`] packing is
+//! real (so marshalling code is exercised by tests); every device entry
+//! point — client construction, compilation, execution — returns an
+//! "XLA unavailable" error. `BackendKind::Native` is unaffected.
+//!
+//! Replacing this stub with the real `xla` crate in `rust/Cargo.toml`
+//! re-enables the AOT/PJRT path with no source changes.
+
+use std::fmt;
+
+/// Error type; the callers format it with `{:?}`.
+#[derive(Clone)]
+pub struct XlaError(String);
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type XResult<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> XResult<T> {
+    Err(XlaError(format!(
+        "{what}: XLA/PJRT is unavailable in this offline build (the `xla` \
+         dependency is the in-repo stub; link the real crate to enable it)"
+    )))
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// Host-side tensor value. Packing works; device transfer does not.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+    shape: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D f32 literal.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), shape: vec![data.len() as i64] }
+    }
+
+    /// Reshape without changing element count.
+    pub fn reshape(&self, dims: &[i64]) -> XResult<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(XlaError(format!(
+                "reshape: cannot view {} elements as {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), shape: dims.to_vec() })
+    }
+
+    /// Dimensions of this literal.
+    pub fn shape(&self) -> &[i64] {
+        &self.shape
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> XResult<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Decompose a tuple literal (device results only — stubbed).
+    pub fn to_tuple(self) -> XResult<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the real runtime).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> XResult<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation handle built from an [`HloModuleProto`].
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle (stub: construction always fails cleanly).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> XResult<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> XResult<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host inputs; result is per-device, per-output
+    /// buffers in the real crate.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> XResult<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XResult<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_pack_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.shape(), &[2, 3]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 4]).is_err());
+    }
+
+    #[test]
+    fn device_paths_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        let msg = format!("{:?}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("unavailable"), "{msg}");
+    }
+}
