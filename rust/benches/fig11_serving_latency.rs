@@ -1,0 +1,41 @@
+//! Bench: Fig 11 (ours) — inference serving latency. Trains a small
+//! model, checkpoints it, reloads it, and measures p50/p99 request
+//! latency plus QPS for three deployments answering the same random
+//! query stream: the naive unsharded per-node forward, cold sharded
+//! micro-batched serving, and the full cached subsystem.
+//!
+//! Output: CSV `mode,batch,p50_us,p99_us,mean_us,qps,cache_hits,rows_recomputed`.
+
+use gad::coordinator::{train_gad, TrainConfig};
+use gad::datasets::SyntheticSpec;
+use gad::model::checkpoint;
+use gad::serve::{run_serving_bench, ServingBenchConfig};
+
+fn main() {
+    let ds = SyntheticSpec::tiny().generate(42);
+    let cfg = TrainConfig {
+        partitions: 8,
+        workers: 4,
+        layers: 2,
+        hidden: 48,
+        lr: 0.02,
+        epochs: 15,
+        seed: 42,
+        ..Default::default()
+    };
+    let report = train_gad(&ds, &cfg).expect("training run");
+    let params = report.final_params.expect("trained parameters");
+    eprintln!(
+        "trained: acc {:.4} ({} params); checkpoint round-trip...",
+        report.test_accuracy,
+        params.num_params()
+    );
+    let params = checkpoint::from_text(&checkpoint::to_text(&params)).expect("checkpoint");
+
+    let bcfg = ServingBenchConfig { shards: 4, queries: 1500, batch: 32, ..Default::default() };
+    let rep = run_serving_bench(&ds, &params, &bcfg).expect("serving bench");
+    print!("{}", rep.to_csv());
+    if let Some(x) = rep.cached_speedup_vs_baseline() {
+        eprintln!("cached-sharded vs unsharded-pernode: {x:.1}x QPS");
+    }
+}

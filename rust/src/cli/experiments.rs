@@ -525,6 +525,65 @@ pub fn ablation(args: &Args, opts: &RunOpts) -> Result<()> {
     Ok(())
 }
 
+// --------------------------------------------------------------------
+// Fig 11 (ours): serving latency
+// --------------------------------------------------------------------
+
+/// The full serving pipeline as one command: train briefly, checkpoint,
+/// reload with dimension validation, then benchmark the three serving
+/// modes (naive unsharded per-node, cold sharded, cached sharded) on a
+/// shared random query stream.
+pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
+    use crate::model::checkpoint;
+    use crate::serve::{run_serving_bench, HaloPolicy, ServingBenchConfig};
+
+    let name = args.get("dataset", "cora");
+    let ds = load(name, opts)?;
+
+    // 1. train (short by default — serving latency does not depend on
+    //    model quality) and harvest the trained parameters
+    let mut cfg = config(args, opts, name)?;
+    cfg.epochs = opts.epochs(args.get_usize("epochs", 20)?);
+    eprintln!("training {name} for {} epochs...", cfg.epochs);
+    let report = train_gad(&ds, &cfg)?;
+    let params = report
+        .final_params
+        .ok_or_else(|| anyhow!("training returned no parameters"))?;
+
+    // 2. checkpoint round-trip, exercising the corrupt-input guards
+    let ckpt = format!("{}/serve_model.ckpt", opts.out_dir);
+    crate::metrics::write_result_file(&ckpt, &checkpoint::to_text(&params))?;
+    let params = checkpoint::load_validated(&ckpt, ds.feature_dim(), ds.num_classes)?;
+    eprintln!("checkpoint {ckpt} reloaded ({} params)", params.num_params());
+
+    // 3. latency benchmark (--halo-alpha is deliberately distinct from
+    //    the training augmentation coefficient --alpha)
+    let halo_alpha = args.get_f64("halo-alpha", 0.0)?;
+    let bcfg = ServingBenchConfig {
+        shards: args.get_usize("shards", 4)?,
+        queries: args.get_usize("queries", if opts.fast { 400 } else { 2000 })?,
+        batch: args.get_usize("batch", 32)?,
+        halo: if halo_alpha > 0.0 {
+            HaloPolicy::Budgeted { alpha: halo_alpha }
+        } else {
+            HaloPolicy::Exact
+        },
+        seed: opts.seed,
+    };
+    let rep = run_serving_bench(&ds, &params, &bcfg)?;
+    let md = format!(
+        "## Fig 11 — serving latency ({name}, k={}, {} queries, batch {})\n\n{}",
+        bcfg.shards,
+        bcfg.queries,
+        bcfg.batch,
+        rep.to_markdown()
+    );
+    println!("{md}");
+    write_result_file(&format!("{}/fig11_serving_latency.md", opts.out_dir), &md)?;
+    write_result_file(&format!("{}/fig11_serving_latency.csv", opts.out_dir), &rep.to_csv())?;
+    Ok(())
+}
+
 /// Everything, in order. Table 2 / Fig 5 / Fig 6 share one sweep and
 /// Table 3 / Fig 7 share another (the paper derives them from the same
 /// runs too).
@@ -589,5 +648,6 @@ pub fn run_all(args: &Args, opts: &RunOpts) -> Result<()> {
     table4_augmentation(args, opts)?;
     fig8_partitions(args, opts)?;
     fig9_consensus(args, opts)?;
+    serve_bench(args, opts)?;
     Ok(())
 }

@@ -133,6 +133,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "fig7" => experiments::fig7_scaling(&args, &opts),
         "fig8" => experiments::fig8_partitions(&args, &opts),
         "fig9" => experiments::fig9_consensus(&args, &opts),
+        "serve-bench" => experiments::serve_bench(&args, &opts),
         "ablate" => experiments::ablation(&args, &opts),
         "all" => experiments::run_all(&args, &opts),
         "" | "help" => {
@@ -161,6 +162,8 @@ commands
   fig7        training time vs workers x layers
   fig8        loss convergence vs partition count, aug on/off
   fig9        weighted vs plain consensus loss curves
+  serve-bench train -> checkpoint -> serve: p50/p99 latency + QPS for
+              cached / cold / unsharded serving (Fig 11, ours)
   ablate      design-choice ablations (+ crash-fault run)
   all         everything above into --out-dir
 
@@ -181,6 +184,14 @@ async consensus flags (with --consensus async)
   --lambda F     staleness decay: weight = zeta * lambda^staleness
                  (default 0.5)
   --plain-weights  base weight 1 instead of zeta (Eq. 11 rule)
+
+serve-bench flags
+  --shards N     serving shards (default 4)
+  --queries N    queries per mode (default 2000; 400 with --fast)
+  --batch N      micro-batch size for the sharded modes (default 32)
+  --halo-alpha F > 0 switches the halo to Algorithm 1's budgeted
+                 replicas; 0 = exact L-hop halo (default). Distinct
+                 from --alpha, the training augmentation coefficient
 ";
 
 #[cfg(test)]

@@ -12,6 +12,13 @@
 //! * **gradient traffic** — the (weighted) global consensus exchange:
 //!   every round each worker uploads its gradient and downloads the
 //!   consensus parameters.
+//!
+//! Two more classes extend the same story beyond lock-step training:
+//! **resync traffic** (async engine replica pulls) and **serving
+//! traffic** (the inference subsystem's halo replication and
+//! [`GraphDelta`](crate::serve::GraphDelta) propagation — the bytes a
+//! sharded serving tier moves so that queries themselves need zero
+//! cross-shard feature fetches).
 
 pub mod topology;
 
@@ -32,6 +39,12 @@ pub struct CommLedger {
     /// leader). Accounted separately from gradient traffic so the
     /// async mode's recovery overhead is visible in reports.
     resync_bytes: AtomicU64,
+    /// Inference-serving traffic: halo feature replication at shard
+    /// build time and graph-delta propagation to the shards that hold
+    /// the touched region. Queries themselves are shard-local (that is
+    /// the augmented-subgraph win applied to serving), so this class is
+    /// the *entire* cross-shard cost of the serving tier.
+    serving_bytes: AtomicU64,
 }
 
 impl CommLedger {
@@ -51,6 +64,10 @@ impl CommLedger {
         self.resync_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    pub fn record_serving(&self, bytes: u64) {
+        self.serving_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     pub fn feature_bytes(&self) -> u64 {
         self.feature_bytes.load(Ordering::Relaxed)
     }
@@ -63,8 +80,12 @@ impl CommLedger {
         self.resync_bytes.load(Ordering::Relaxed)
     }
 
+    pub fn serving_bytes(&self) -> u64 {
+        self.serving_bytes.load(Ordering::Relaxed)
+    }
+
     pub fn total_bytes(&self) -> u64 {
-        self.feature_bytes() + self.gradient_bytes() + self.resync_bytes()
+        self.feature_bytes() + self.gradient_bytes() + self.resync_bytes() + self.serving_bytes()
     }
 }
 
@@ -74,6 +95,7 @@ pub struct CommStats {
     pub feature_bytes: u64,
     pub gradient_bytes: u64,
     pub resync_bytes: u64,
+    pub serving_bytes: u64,
 }
 
 impl CommStats {
@@ -82,11 +104,14 @@ impl CommStats {
             feature_bytes: l.feature_bytes(),
             gradient_bytes: l.gradient_bytes(),
             resync_bytes: l.resync_bytes(),
+            serving_bytes: l.serving_bytes(),
         }
     }
 
     pub fn total_mb(&self) -> f64 {
-        (self.feature_bytes + self.gradient_bytes + self.resync_bytes) as f64 / 1e6
+        (self.feature_bytes + self.gradient_bytes + self.resync_bytes + self.serving_bytes)
+            as f64
+            / 1e6
     }
 
     pub fn feature_mb(&self) -> f64 {
@@ -95,6 +120,10 @@ impl CommStats {
 
     pub fn resync_mb(&self) -> f64 {
         self.resync_bytes as f64 / 1e6
+    }
+
+    pub fn serving_mb(&self) -> f64 {
+        self.serving_bytes as f64 / 1e6
     }
 }
 
@@ -204,6 +233,7 @@ mod tests {
                         ledger.record_feature(3);
                         ledger.record_gradient(5);
                         ledger.record_resync(2);
+                        ledger.record_serving(7);
                     }
                 });
             }
@@ -211,6 +241,7 @@ mod tests {
         assert_eq!(ledger.feature_bytes(), 1200);
         assert_eq!(ledger.gradient_bytes(), 2000);
         assert_eq!(ledger.resync_bytes(), 800);
-        assert_eq!(CommStats::from_ledger(&ledger).total_mb(), 4000.0 / 1e6);
+        assert_eq!(ledger.serving_bytes(), 2800);
+        assert_eq!(CommStats::from_ledger(&ledger).total_mb(), 6800.0 / 1e6);
     }
 }

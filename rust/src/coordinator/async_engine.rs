@@ -208,8 +208,8 @@ pub(super) fn run_async_epochs(
                 Ok(WorkerResult::Error { worker, message }) => {
                     return Err(anyhow!("worker {worker}: {message}"));
                 }
-                // no Eval is in flight during the round loop
-                Ok(WorkerResult::Eval { .. }) => {}
+                // no Eval/FetchParams is in flight during the round loop
+                Ok(WorkerResult::Eval { .. }) | Ok(WorkerResult::Params { .. }) => {}
                 Ok(WorkerResult::Step { worker, grads, loss, zeta, param_version, .. }) => {
                     outstanding[worker] = false;
                     if active[worker]
@@ -291,7 +291,7 @@ pub(super) fn run_async_epochs(
                 Ok(WorkerResult::Error { worker, message }) => {
                     return Err(anyhow!("worker {worker}: {message}"));
                 }
-                Ok(WorkerResult::Eval { .. }) => {}
+                Ok(WorkerResult::Eval { .. }) | Ok(WorkerResult::Params { .. }) => {}
                 Ok(WorkerResult::Step { worker, grads, loss, zeta, param_version, .. }) => {
                     outstanding[worker] = false;
                     if active[worker] {

@@ -55,6 +55,12 @@ pub struct TrainReport {
     /// Replica re-syncs performed (async engine: staleness-bound
     /// evictions plus elastic rejoins).
     pub resyncs: u64,
+    /// The trained parameters, harvested from the freshest replica
+    /// (highest consensus version) after the last epoch — what
+    /// [`model::checkpoint`](crate::model::checkpoint) saves and the
+    /// serving tier ([`crate::serve`]) loads. `None` only if every
+    /// worker died before the harvest.
+    pub final_params: Option<GcnParams>,
 }
 
 impl TrainReport {
@@ -340,6 +346,35 @@ pub fn train_with_plans(
         _ => run_sync_epochs(&wiring, &mut state),
     };
 
+    // harvest the freshest replica (both engines leave workers quiescent
+    // here) so the run's parameters survive worker teardown — sync-mode
+    // crash faults leave stale replicas behind, hence max-version wins
+    let final_params = if run.is_ok() {
+        let mut asked = 0usize;
+        for tx in &cmd_txs {
+            if tx.send(WorkerCommand::FetchParams).is_ok() {
+                asked += 1;
+            }
+        }
+        let mut best: Option<(u64, GcnParams)> = None;
+        let mut got = 0usize;
+        while got < asked {
+            match result_rx.recv() {
+                Ok(WorkerResult::Params { params, version, .. }) => {
+                    got += 1;
+                    if best.as_ref().map(|(v, _)| version >= *v).unwrap_or(true) {
+                        best = Some((version, params));
+                    }
+                }
+                Ok(_) => continue, // drain any stray result
+                Err(_) => break,
+            }
+        }
+        best.map(|(_, p)| p)
+    } else {
+        None
+    };
+
     for tx in &cmd_txs {
         let _ = tx.send(WorkerCommand::Stop);
     }
@@ -374,6 +409,7 @@ pub fn train_with_plans(
         workers,
         max_staleness_applied: state.max_staleness_applied,
         resyncs: state.resyncs,
+        final_params,
     })
 }
 
@@ -416,7 +452,9 @@ fn run_sync_epochs(w: &Wiring<'_>, st: &mut LoopState) -> Result<()> {
             // worker id so float aggregation order (and thus the
             // whole run) is deterministic
             results.sort_by_key(|r| match r {
-                WorkerResult::Step { worker, .. } | WorkerResult::Eval { worker, .. } => *worker,
+                WorkerResult::Step { worker, .. }
+                | WorkerResult::Eval { worker, .. }
+                | WorkerResult::Params { worker, .. } => *worker,
                 WorkerResult::Error { worker, .. } => *worker,
             });
 
@@ -578,6 +616,20 @@ mod tests {
         let b = train_gad(&ds, &cfg).unwrap();
         assert_eq!(a.test_accuracy, b.test_accuracy);
         assert_eq!(a.comm.feature_bytes, b.comm.feature_bytes);
+    }
+
+    #[test]
+    fn final_params_are_harvested_and_deterministic() {
+        let ds = SyntheticSpec::tiny().generate(7);
+        let cfg = TrainConfig { epochs: 4, ..quick_cfg() };
+        let a = train_gad(&ds, &cfg).unwrap();
+        let b = train_gad(&ds, &cfg).unwrap();
+        let pa = a.final_params.expect("params harvested");
+        let pb = b.final_params.expect("params harvested");
+        assert_eq!(pa.layers(), cfg.layers);
+        assert_eq!(pa.ws[0].rows, ds.feature_dim());
+        assert_eq!(pa.ws.last().unwrap().cols, ds.num_classes);
+        assert_eq!(pa.max_abs_diff(&pb), 0.0, "same seed must yield identical params");
     }
 
     #[test]

@@ -69,6 +69,10 @@ pub enum WorkerCommand {
     SetLr { factor: f32 },
     /// Evaluate the replica on all local batches.
     Eval,
+    /// Report the replica's current parameters + version (the leader
+    /// harvests the freshest replica at end of run for checkpointing
+    /// and serving).
+    FetchParams,
     Stop,
 }
 
@@ -92,6 +96,8 @@ pub enum WorkerResult {
         val: AccuracyMeter,
         test: AccuracyMeter,
     },
+    /// Response to [`WorkerCommand::FetchParams`].
+    Params { worker: usize, params: GcnParams, version: u64 },
     /// Backend construction or execution failed.
     Error { worker: usize, message: String },
 }
@@ -170,6 +176,12 @@ pub fn worker_main(plan: WorkerPlan, rx: Receiver<WorkerCommand>, tx: Sender<Wor
             }
             WorkerCommand::Eval => {
                 let msg = eval_all(worker, source.as_mut(), backend.as_mut(), &params);
+                if tx.send(msg).is_err() {
+                    return;
+                }
+            }
+            WorkerCommand::FetchParams => {
+                let msg = WorkerResult::Params { worker, params: params.clone(), version };
                 if tx.send(msg).is_err() {
                     return;
                 }
@@ -308,6 +320,17 @@ mod tests {
             .unwrap();
         step(&cmd_tx);
         assert_eq!(version_of(&res_rx), 9);
+
+        // the replica hands back its current params + version on demand
+        cmd_tx.send(WorkerCommand::FetchParams).unwrap();
+        match res_rx.recv().unwrap() {
+            WorkerResult::Params { worker, params: p, version } => {
+                assert_eq!(worker, 0);
+                assert_eq!(version, 9);
+                assert_eq!(p.layers(), params.layers());
+            }
+            _ => panic!("expected params result"),
+        }
 
         cmd_tx.send(WorkerCommand::Stop).unwrap();
         h.join().unwrap();

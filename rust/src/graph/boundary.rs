@@ -27,6 +27,37 @@ pub fn boundary_nodes(graph: &Csr, assignment: &[u32], part: u32) -> Vec<u32> {
     out
 }
 
+/// Bounded multi-source BFS: hop distance (≤ `max_hops`) from the
+/// nearest seed, `u32::MAX` beyond. Shared by candidate-replication
+/// discovery and the serving tier's delta-invalidation footprint.
+pub fn bounded_bfs_distances(graph: &Csr, seeds: &[u32], max_hops: usize) -> Vec<u32> {
+    let n = graph.num_nodes();
+    let mut dist = vec![u32::MAX; n];
+    let mut frontier: Vec<u32> = Vec::new();
+    for &s in seeds {
+        if dist[s as usize] == u32::MAX {
+            dist[s as usize] = 0;
+            frontier.push(s);
+        }
+    }
+    for d in 1..=max_hops as u32 {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for &t in graph.neighbors(v as usize) {
+                if dist[t as usize] == u32::MAX {
+                    dist[t as usize] = d;
+                    next.push(t);
+                }
+            }
+        }
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    dist
+}
+
 /// `C(g_part)`: all nodes outside `part` reachable within `hops` edges
 /// from the part's boundary nodes (paths may pass through any node).
 /// Returned sorted.
@@ -36,34 +67,11 @@ pub fn candidate_replication_nodes(
     part: u32,
     hops: usize,
 ) -> Vec<u32> {
-    let n = graph.num_nodes();
-    // BFS frontier from all boundary nodes simultaneously.
-    let mut dist = vec![u32::MAX; n];
-    let mut frontier: Vec<u32> = boundary_nodes(graph, assignment, part);
-    for &v in &frontier {
-        dist[v as usize] = 0;
-    }
-    let mut out = Vec::new();
-    for d in 1..=hops as u32 {
-        let mut next = Vec::new();
-        for &v in &frontier {
-            for &t in graph.neighbors(v as usize) {
-                if dist[t as usize] == u32::MAX {
-                    dist[t as usize] = d;
-                    next.push(t);
-                    if assignment[t as usize] != part {
-                        out.push(t);
-                    }
-                }
-            }
-        }
-        frontier = next;
-        if frontier.is_empty() {
-            break;
-        }
-    }
-    out.sort_unstable();
-    out
+    let seeds = boundary_nodes(graph, assignment, part);
+    let dist = bounded_bfs_distances(graph, &seeds, hops);
+    (0..graph.num_nodes() as u32)
+        .filter(|&v| dist[v as usize] != u32::MAX && assignment[v as usize] != part)
+        .collect()
 }
 
 #[cfg(test)]
@@ -100,5 +108,15 @@ mod tests {
         let a = vec![0, 0, 1, 1];
         assert!(boundary_nodes(&g, &a, 0).is_empty());
         assert!(candidate_replication_nodes(&g, &a, 0, 3).is_empty());
+    }
+
+    #[test]
+    fn bounded_bfs_distances_respect_bound() {
+        let (g, _) = path6();
+        let dist = bounded_bfs_distances(&g, &[0], 2);
+        assert_eq!(&dist[..4], &[0, 1, 2, u32::MAX]);
+        // duplicate seeds are harmless; multi-source takes the min
+        let dist = bounded_bfs_distances(&g, &[0, 0, 3], 1);
+        assert_eq!(dist, vec![0, 1, 1, 0, 1, u32::MAX]);
     }
 }

@@ -8,7 +8,7 @@ mod csr;
 mod stats;
 mod subgraph;
 
-pub use boundary::{boundary_nodes, candidate_replication_nodes};
+pub use boundary::{bounded_bfs_distances, boundary_nodes, candidate_replication_nodes};
 pub use builder::GraphBuilder;
 pub use csr::Csr;
 pub use stats::{avg_degree, degree_histogram, density};

@@ -21,6 +21,11 @@
 //! executes them from the rust hot loop. [`backend::NativeBackend`] is a
 //! pure-rust oracle/fallback for shapes with no compiled bucket.
 //!
+//! Beyond training, [`serve`] turns a checkpoint into a partition-aware
+//! inference tier: halo-complete shards answer node-classification
+//! queries shard-locally through a versioned embedding cache with
+//! L-hop delta invalidation and per-shard micro-batching.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -54,6 +59,7 @@ pub mod partition;
 pub mod proptest_util;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod variance;
 
@@ -68,5 +74,6 @@ pub mod prelude {
     pub use crate::model::GcnParams;
     pub use crate::partition::{PartitionConfig, Partitioning};
     pub use crate::rng::Rng;
+    pub use crate::serve::{GraphDelta, HaloPolicy, ServeConfig, Server};
     pub use crate::tensor::Matrix;
 }

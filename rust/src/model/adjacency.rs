@@ -14,13 +14,32 @@ pub struct NormAdj {
 }
 
 impl NormAdj {
+    /// `1/sqrt(deg+1)` per node of `g` (degree includes the self
+    /// loop). The single source of the normalization factors: both
+    /// [`from_csr`](Self::from_csr) and the serving tier (which feeds
+    /// *full-graph* factors into shard-local adjacencies) use this, so
+    /// the serving bit-identity contract cannot drift from the
+    /// training-time formula.
+    pub fn inv_sqrt_degrees(g: &Csr) -> Vec<f32> {
+        (0..g.num_nodes())
+            .map(|v| 1.0 / ((g.degree(v) + 1) as f32).sqrt())
+            .collect()
+    }
+
     /// Build from an unweighted symmetric CSR.
     pub fn from_csr(g: &Csr) -> NormAdj {
+        let inv_sqrt = Self::inv_sqrt_degrees(g);
+        Self::with_inv_sqrt(g, &inv_sqrt)
+    }
+
+    /// Build over `g` with caller-supplied per-node `1/sqrt(deg+1)`
+    /// factors. The serving tier passes factors computed from *global*
+    /// degrees so a shard's Â entries match the full graph's exactly
+    /// wherever both endpoints keep their full neighbourhood — the key
+    /// to bit-identical shard-local inference on halo-complete shards.
+    pub fn with_inv_sqrt(g: &Csr, inv_sqrt: &[f32]) -> NormAdj {
         let n = g.num_nodes();
-        // degree including the self loop
-        let inv_sqrt: Vec<f32> = (0..n)
-            .map(|v| 1.0 / ((g.degree(v) + 1) as f32).sqrt())
-            .collect();
+        assert_eq!(inv_sqrt.len(), n, "inv_sqrt/node mismatch");
         let mut offsets = vec![0usize; n + 1];
         for v in 0..n {
             offsets[v + 1] = offsets[v] + g.degree(v) + 1; // + self loop
@@ -137,6 +156,44 @@ mod tests {
         let sparse = a.spmm(&x);
         let dense = gemm(&a.to_dense(5), &x);
         assert!(sparse.allclose(&dense, 1e-5));
+    }
+
+    #[test]
+    fn with_inv_sqrt_generalises_from_csr() {
+        let g = GraphBuilder::new(5)
+            .edges(&[(0, 1), (1, 2), (2, 3), (3, 4), (1, 3)])
+            .build();
+        let local: Vec<f32> = (0..5).map(|v| 1.0 / ((g.degree(v) + 1) as f32).sqrt()).collect();
+        let a = NormAdj::from_csr(&g);
+        let b = NormAdj::with_inv_sqrt(&g, &local);
+        let (ao, at, av) = a.raw();
+        let (bo, bt, bv) = b.raw();
+        assert_eq!(ao, bo);
+        assert_eq!(at, bt);
+        assert_eq!(
+            av.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            bv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "local-degree factors must reproduce from_csr bit-for-bit"
+        );
+    }
+
+    #[test]
+    fn global_factors_differ_on_truncated_subgraph() {
+        use crate::graph::Subgraph;
+        // path 0-1-2-3: induce {0,1,2}; node 2 loses its edge to 3, so
+        // induced and global degrees disagree exactly at node 2
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3)]).build();
+        let sub = Subgraph::induce(&g, &[0, 1, 2]);
+        let global: Vec<f32> = sub
+            .global_ids
+            .iter()
+            .map(|&gid| 1.0 / ((g.degree(gid as usize) + 1) as f32).sqrt())
+            .collect();
+        let induced = NormAdj::from_csr(&sub.csr).to_dense(3);
+        let exact = NormAdj::with_inv_sqrt(&sub.csr, &global).to_dense(3);
+        // rows not touching node 2 agree, node 2's self loop does not
+        assert!((induced[(0, 1)] - exact[(0, 1)]).abs() < 1e-7);
+        assert!((induced[(2, 2)] - exact[(2, 2)]).abs() > 1e-3);
     }
 
     #[test]

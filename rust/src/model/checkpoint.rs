@@ -8,16 +8,27 @@ use anyhow::{anyhow, Context, Result};
 use std::fmt::Write as _;
 use std::path::Path;
 
-/// Serialise parameters. Format:
+/// Serialise parameters. Format (version 2):
 /// ```text
-/// GADCKPT 1
+/// GADCKPT 2
 /// layers <L>
+/// shape <feature_dim> <classes>
 /// w <rows> <cols> <hex bits...>
 /// ```
+/// The `shape` line duplicates what the weight records imply, on
+/// purpose: a truncated or bit-flipped file fails the cross-check
+/// instead of loading garbage into a serving tier. Version-1 files
+/// (no `shape` line) still parse.
 pub fn to_text(params: &GcnParams) -> String {
     let mut s = String::new();
-    let _ = writeln!(s, "GADCKPT 1");
+    let _ = writeln!(s, "GADCKPT 2");
     let _ = writeln!(s, "layers {}", params.layers());
+    let _ = writeln!(
+        s,
+        "shape {} {}",
+        params.ws.first().map(|w| w.rows).unwrap_or(0),
+        params.ws.last().map(|w| w.cols).unwrap_or(0)
+    );
     for w in &params.ws {
         let _ = write!(s, "w {} {}", w.rows, w.cols);
         for v in w.data() {
@@ -28,13 +39,16 @@ pub fn to_text(params: &GcnParams) -> String {
     s
 }
 
-/// Parse a checkpoint produced by [`to_text`].
+/// Parse a checkpoint produced by [`to_text`] (version 2) or by the
+/// pre-serving version-1 writer.
 pub fn from_text(text: &str) -> Result<GcnParams> {
     let mut lines = text.lines();
     let magic = lines.next().ok_or_else(|| anyhow!("empty checkpoint"))?;
-    if magic.trim() != "GADCKPT 1" {
-        return Err(anyhow!("bad magic '{magic}'"));
-    }
+    let version: u32 = match magic.trim() {
+        "GADCKPT 1" => 1,
+        "GADCKPT 2" => 2,
+        other => return Err(anyhow!("bad magic '{other}'")),
+    };
     let layers: usize = lines
         .next()
         .and_then(|l| l.strip_prefix("layers "))
@@ -42,6 +56,22 @@ pub fn from_text(text: &str) -> Result<GcnParams> {
         .trim()
         .parse()
         .context("layer count")?;
+    if layers == 0 {
+        return Err(anyhow!("checkpoint declares zero layers"));
+    }
+    // version 2 carries a redundant shape header to cross-check against
+    let declared_shape: Option<(usize, usize)> = if version >= 2 {
+        let line = lines.next().ok_or_else(|| anyhow!("truncated checkpoint: missing shape line"))?;
+        let rest = line
+            .strip_prefix("shape ")
+            .ok_or_else(|| anyhow!("expected shape line, got '{line}'"))?;
+        let mut it = rest.split_whitespace();
+        let fin: usize = it.next().ok_or_else(|| anyhow!("shape: feature dim"))?.parse()?;
+        let fout: usize = it.next().ok_or_else(|| anyhow!("shape: classes"))?.parse()?;
+        Some((fin, fout))
+    } else {
+        None
+    };
     let mut ws = Vec::with_capacity(layers);
     for line in lines {
         let line = line.trim();
@@ -54,8 +84,16 @@ pub fn from_text(text: &str) -> Result<GcnParams> {
         }
         let rows: usize = it.next().ok_or_else(|| anyhow!("rows"))?.parse()?;
         let cols: usize = it.next().ok_or_else(|| anyhow!("cols"))?.parse()?;
+        if rows == 0 || cols == 0 {
+            return Err(anyhow!("degenerate weight shape {rows}x{cols}"));
+        }
         let data: Result<Vec<f32>> = it
             .map(|h| {
+                // the writer always emits 8 hex digits; a shorter token
+                // is a truncated file, not a smaller number
+                if h.len() != 8 {
+                    return Err(anyhow!("bad hex '{h}': expected 8 digits (truncated file?)"));
+                }
                 u32::from_str_radix(h, 16)
                     .map(f32::from_bits)
                     .map_err(|e| anyhow!("bad hex '{h}': {e}"))
@@ -63,14 +101,57 @@ pub fn from_text(text: &str) -> Result<GcnParams> {
             .collect();
         let data = data?;
         if data.len() != rows * cols {
-            return Err(anyhow!("weight size mismatch: {}x{} vs {} values", rows, cols, data.len()));
+            return Err(anyhow!(
+                "weight size mismatch: {}x{} vs {} values (truncated file?)",
+                rows,
+                cols,
+                data.len()
+            ));
         }
         ws.push(Matrix::from_vec(rows, cols, data));
     }
     if ws.len() != layers {
-        return Err(anyhow!("expected {layers} weight records, got {}", ws.len()));
+        return Err(anyhow!("expected {layers} weight records, got {} (truncated file?)", ws.len()));
+    }
+    // the layer chain must compose: f -> h -> ... -> c
+    for i in 1..ws.len() {
+        if ws[i - 1].cols != ws[i].rows {
+            return Err(anyhow!(
+                "layer chain broken at {}: {}x{} feeds {}x{}",
+                i,
+                ws[i - 1].rows,
+                ws[i - 1].cols,
+                ws[i].rows,
+                ws[i].cols
+            ));
+        }
+    }
+    if let Some((fin, fout)) = declared_shape {
+        if ws[0].rows != fin || ws.last().unwrap().cols != fout {
+            return Err(anyhow!(
+                "shape header says {fin}->{fout} but weights are {}->{}",
+                ws[0].rows,
+                ws.last().unwrap().cols
+            ));
+        }
     }
     Ok(GcnParams { ws })
+}
+
+/// Parse + verify the checkpoint fits the deployment it is about to
+/// serve: input width must match the dataset's feature dimension and
+/// output width its class count. The serving tier refuses to start on
+/// a mismatched model instead of emitting garbage predictions.
+pub fn from_text_validated(text: &str, feature_dim: usize, num_classes: usize) -> Result<GcnParams> {
+    let params = from_text(text)?;
+    let fin = params.ws[0].rows;
+    let fout = params.ws.last().unwrap().cols;
+    if fin != feature_dim || fout != num_classes {
+        return Err(anyhow!(
+            "checkpoint is a {fin}->{fout} model but the deployment needs {feature_dim}->{num_classes}"
+        ));
+    }
+    Ok(params)
 }
 
 /// Save to a file.
@@ -84,6 +165,19 @@ pub fn load(path: impl AsRef<Path>) -> Result<GcnParams> {
     let text = std::fs::read_to_string(path.as_ref())
         .with_context(|| format!("reading {}", path.as_ref().display()))?;
     from_text(&text)
+}
+
+/// Load from a file and verify the model fits the deployment (see
+/// [`from_text_validated`]).
+pub fn load_validated(
+    path: impl AsRef<Path>,
+    feature_dim: usize,
+    num_classes: usize,
+) -> Result<GcnParams> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    from_text_validated(&text, feature_dim, num_classes)
+        .with_context(|| format!("loading {}", path.as_ref().display()))
 }
 
 #[cfg(test)]
@@ -115,9 +209,70 @@ mod tests {
     #[test]
     fn rejects_corrupt_checkpoints() {
         assert!(from_text("").is_err());
-        assert!(from_text("GADCKPT 2\nlayers 0\n").is_err());
-        assert!(from_text("GADCKPT 1\nlayers 1\nw 2 2 00000000\n").is_err());
-        assert!(from_text("GADCKPT 1\nlayers 2\nw 1 1 3f800000\n").is_err());
+        assert!(from_text("GADCKPT 9\nlayers 1\n").is_err(), "unknown version");
+        assert!(from_text("GADCKPT 2\nlayers 0\n").is_err(), "zero layers");
+        assert!(from_text("GADCKPT 1\nlayers 1\nw 2 2 00000000\n").is_err(), "too few values");
+        assert!(from_text("GADCKPT 1\nlayers 2\nw 1 1 3f800000\n").is_err(), "missing record");
+        assert!(from_text("GADCKPT 1\nlayers 1\nw 1 1 zzzz\n").is_err(), "bad hex");
+        assert!(from_text("GADCKPT 1\nlayers 1\nw 0 0\n").is_err(), "degenerate shape");
+    }
+
+    #[test]
+    fn reads_version_1_files() {
+        // a file produced by the pre-serving writer: no shape line
+        let v1 = "GADCKPT 1\nlayers 1\nw 1 2 3f800000 40000000\n";
+        let p = from_text(v1).unwrap();
+        assert_eq!((p.ws[0].rows, p.ws[0].cols), (1, 2));
+        assert_eq!(p.ws[0].data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let mut rng = Rng::seed_from_u64(9);
+        let p = GcnParams::init(6, 4, 3, 2, &mut rng);
+        let full = to_text(&p);
+        // chopping anywhere shy of the end must fail, never load garbage
+        for frac in [0.2, 0.5, 0.9] {
+            let cut = (full.len() as f64 * frac) as usize; // ASCII format: any index splits cleanly
+            assert!(from_text(&full[..cut]).is_err(), "accepted a {frac} truncation");
+        }
+        // the nasty window: cutting inside the very last hex token
+        // keeps the token count right and the shape checks blind —
+        // only the 8-digit rule catches it
+        let trimmed = full.trim_end();
+        for cut in 1..8 {
+            assert!(
+                from_text(&trimmed[..trimmed.len() - cut]).is_err(),
+                "accepted a {cut}-byte tail truncation"
+            );
+        }
+    }
+
+    #[test]
+    fn shape_header_cross_check() {
+        // header says 3->2 but the weight record is 1x2
+        let lying = "GADCKPT 2\nlayers 1\nshape 3 2\nw 1 2 3f800000 40000000\n";
+        assert!(from_text(lying).is_err());
+    }
+
+    #[test]
+    fn broken_layer_chain_rejected() {
+        // 2x3 feeding 4x2 cannot compose
+        let bad = "GADCKPT 2\nlayers 2\nshape 2 2\n\
+                   w 2 3 00000000 00000000 00000000 00000000 00000000 00000000\n\
+                   w 4 2 00000000 00000000 00000000 00000000 00000000 00000000 00000000 00000000\n";
+        let err = from_text(bad).unwrap_err();
+        assert!(format!("{err:#}").contains("chain"), "got: {err:#}");
+    }
+
+    #[test]
+    fn validated_load_checks_deployment_dims() {
+        let mut rng = Rng::seed_from_u64(10);
+        let p = GcnParams::init(5, 4, 3, 2, &mut rng);
+        let text = to_text(&p);
+        assert!(from_text_validated(&text, 5, 3).is_ok());
+        assert!(from_text_validated(&text, 6, 3).is_err(), "wrong feature dim");
+        assert!(from_text_validated(&text, 5, 4).is_err(), "wrong class count");
     }
 
     #[test]

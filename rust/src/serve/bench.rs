@@ -1,0 +1,236 @@
+//! Serving latency harness (Fig. 11, ours): p50/p99 request latency
+//! and QPS for three deployments answering the same query stream —
+//!
+//! * `unsharded-pernode` — one shard covering the whole graph, no
+//!   cache, full recompute per query: the naive "run the model" loop.
+//! * `cold-sharded` — partition-aware shards, micro-batched, pruned to
+//!   each batch's dependency cone, but nothing reused across requests.
+//! * `cached-sharded` — the full subsystem: warm embedding cache plus
+//!   micro-batching; steady-state serving.
+//!
+//! Shared by the CLI `serve-bench` command and
+//! `benches/fig11_serving_latency.rs`.
+
+use super::{HaloPolicy, ServeConfig, Server};
+use crate::datasets::Dataset;
+use crate::model::GcnParams;
+use crate::rng::Rng;
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Bench dimensions.
+#[derive(Clone, Debug)]
+pub struct ServingBenchConfig {
+    /// Shard count for the sharded modes.
+    pub shards: usize,
+    /// Total queries per mode (one shared random stream).
+    pub queries: usize,
+    /// Micro-batch (request) size for the sharded modes.
+    pub batch: usize,
+    /// Halo policy for the sharded modes.
+    pub halo: HaloPolicy,
+    pub seed: u64,
+}
+
+impl Default for ServingBenchConfig {
+    fn default() -> Self {
+        ServingBenchConfig {
+            shards: 4,
+            queries: 2000,
+            batch: 32,
+            halo: HaloPolicy::Exact,
+            seed: 0,
+        }
+    }
+}
+
+/// One mode's latency/throughput row.
+#[derive(Clone, Debug)]
+pub struct LatencySummary {
+    pub mode: String,
+    /// Requests issued (queries / batch, rounded up).
+    pub requests: usize,
+    pub queries: usize,
+    pub batch: usize,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub qps: f64,
+    pub cache_hits: u64,
+    pub rows_recomputed: u64,
+}
+
+/// All modes on one workload.
+#[derive(Clone, Debug)]
+pub struct ServingBenchReport {
+    pub rows: Vec<LatencySummary>,
+}
+
+impl ServingBenchReport {
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::from(
+            "| mode | batch | p50 (µs) | p99 (µs) | mean (µs) | QPS | cache hits | rows recomputed |\n\
+             |---|---|---|---|---|---|---|---|\n",
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "| {} | {} | {:.1} | {:.1} | {:.1} | {:.0} | {} | {} |",
+                r.mode, r.batch, r.p50_us, r.p99_us, r.mean_us, r.qps, r.cache_hits, r.rows_recomputed
+            );
+        }
+        if let Some(x) = self.cached_speedup_vs_baseline() {
+            let _ = writeln!(s, "\ncached-sharded vs unsharded-pernode: **{x:.1}x QPS**");
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s =
+            String::from("mode,batch,p50_us,p99_us,mean_us,qps,cache_hits,rows_recomputed\n");
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{},{},{:.2},{:.2},{:.2},{:.1},{},{}",
+                r.mode, r.batch, r.p50_us, r.p99_us, r.mean_us, r.qps, r.cache_hits, r.rows_recomputed
+            );
+        }
+        s
+    }
+
+    fn row(&self, mode: &str) -> Option<&LatencySummary> {
+        self.rows.iter().find(|r| r.mode == mode)
+    }
+
+    /// QPS ratio of the full subsystem over the naive baseline — the
+    /// number the acceptance criterion is about.
+    pub fn cached_speedup_vs_baseline(&self) -> Option<f64> {
+        let base = self.row("unsharded-pernode")?.qps;
+        let cached = self.row("cached-sharded")?.qps;
+        (base > 0.0).then(|| cached / base)
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * p).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+fn run_mode(
+    mode: &str,
+    ds: &Dataset,
+    params: &GcnParams,
+    scfg: ServeConfig,
+    stream: &[u32],
+    batch: usize,
+    warm: bool,
+) -> Result<LatencySummary> {
+    let mut srv = Server::for_dataset(ds, params.clone(), scfg)?;
+    if warm {
+        let all: Vec<u32> = (0..ds.num_nodes() as u32).collect();
+        for chunk in all.chunks(256) {
+            srv.query_batch(chunk)?;
+        }
+    }
+    let pre = srv.stats();
+    let batch = batch.max(1);
+    let mut lat_us = Vec::with_capacity(stream.len() / batch + 1);
+    let t0 = Instant::now();
+    for chunk in stream.chunks(batch) {
+        let s = Instant::now();
+        srv.query_batch(chunk)?;
+        lat_us.push(s.elapsed().as_secs_f64() * 1e6);
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    let post = srv.stats();
+    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let mean = lat_us.iter().sum::<f64>() / lat_us.len().max(1) as f64;
+    Ok(LatencySummary {
+        mode: mode.to_string(),
+        requests: lat_us.len(),
+        queries: stream.len(),
+        batch,
+        p50_us: percentile(&lat_us, 0.50),
+        p99_us: percentile(&lat_us, 0.99),
+        mean_us: mean,
+        qps: stream.len() as f64 / total_s.max(1e-12),
+        cache_hits: post.cache_hits - pre.cache_hits,
+        rows_recomputed: post.rows_recomputed - pre.rows_recomputed,
+    })
+}
+
+/// Run all three modes on one shared random query stream.
+pub fn run_serving_bench(
+    ds: &Dataset,
+    params: &GcnParams,
+    cfg: &ServingBenchConfig,
+) -> Result<ServingBenchReport> {
+    let n = ds.num_nodes();
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x5e17e);
+    let stream: Vec<u32> = (0..cfg.queries).map(|_| rng.gen_range(n) as u32).collect();
+
+    let baseline = ServeConfig {
+        shards: 1,
+        halo: HaloPolicy::Exact,
+        cache: false,
+        pruned: false,
+        seed: cfg.seed,
+    };
+    let cold = ServeConfig {
+        shards: cfg.shards,
+        halo: cfg.halo,
+        cache: false,
+        pruned: true,
+        seed: cfg.seed,
+    };
+    let cached = ServeConfig { cache: true, ..cold.clone() };
+
+    let rows = vec![
+        run_mode("unsharded-pernode", ds, params, baseline, &stream, 1, false)?,
+        run_mode("cold-sharded", ds, params, cold, &stream, cfg.batch, false)?,
+        run_mode("cached-sharded", ds, params, cached, &stream, cfg.batch, true)?,
+    ];
+    Ok(ServingBenchReport { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SyntheticSpec;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert_eq!(percentile(&v, 0.5), 3.0); // (3 * 0.5).round() = 2
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn bench_produces_all_modes() {
+        let ds = SyntheticSpec::tiny().generate(1);
+        let mut rng = crate::rng::Rng::seed_from_u64(1);
+        let params = GcnParams::init(ds.feature_dim(), 8, ds.num_classes, 2, &mut rng);
+        let cfg = ServingBenchConfig { queries: 40, batch: 8, ..Default::default() };
+        let rep = run_serving_bench(&ds, &params, &cfg).unwrap();
+        assert_eq!(rep.rows.len(), 3);
+        for r in &rep.rows {
+            assert_eq!(r.queries, 40);
+            assert!(r.qps > 0.0);
+            assert!(r.p50_us <= r.p99_us);
+        }
+        // steady state serves straight from cache
+        let cached = rep.row("cached-sharded").unwrap();
+        assert_eq!(cached.cache_hits, 40);
+        assert_eq!(cached.rows_recomputed, 0);
+        assert!(rep.to_markdown().contains("unsharded-pernode"));
+        assert!(rep.to_csv().lines().count() == 4);
+        assert!(rep.cached_speedup_vs_baseline().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! Per-shard layered embedding cache.
+//!
+//! One matrix per GCN layer (`n_local x dim_l`) plus a validity bit
+//! per row — the bit is what gates serving: when a
+//! [`GraphDelta`](super::GraphDelta) lands, the server clears the bits
+//! of invalidated rows, so a stale row can never be served and is
+//! recomputed lazily by the next query whose dependency cone touches
+//! it. The `version` field is the graph version the surviving rows are
+//! valid for — a stamp the server sets after each delta, carried into
+//! query provenance; it is not consulted on the read path.
+
+use crate::tensor::Matrix;
+
+/// See module docs.
+#[derive(Clone, Debug)]
+pub struct EmbeddingCache {
+    enabled: bool,
+    version: u64,
+    /// `layers[l]` holds the layer-`l+1` activations (hidden layers
+    /// post-ReLU, output layer raw logits).
+    layers: Vec<Matrix>,
+    valid: Vec<Vec<bool>>,
+    /// Rows computed over the cache's lifetime.
+    pub rows_recomputed: u64,
+    /// Rows dropped by delta invalidation (including membership churn).
+    pub rows_invalidated: u64,
+}
+
+impl EmbeddingCache {
+    /// Empty cache; `enabled = false` clears validity after every
+    /// query batch so nothing is reused across calls.
+    pub fn new(enabled: bool) -> Self {
+        EmbeddingCache {
+            enabled,
+            version: 0,
+            layers: Vec::new(),
+            valid: Vec::new(),
+            rows_recomputed: 0,
+            rows_invalidated: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// (Re)allocate storage for `n` local nodes with the given
+    /// per-layer widths. All rows start invalid.
+    pub fn allocate(&mut self, n: usize, dims: &[usize]) {
+        self.layers = dims.iter().map(|&d| Matrix::zeros(n, d)).collect();
+        self.valid = dims.iter().map(|_| vec![false; n]).collect();
+    }
+
+    /// True once [`allocate`](Self::allocate) ran for `layers` layers.
+    pub fn is_allocated(&self, layers: usize) -> bool {
+        self.layers.len() == layers
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.valid.first().map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Is row `node` of layer `l` servable?
+    #[inline]
+    pub fn is_valid(&self, l: usize, node: usize) -> bool {
+        self.valid[l][node]
+    }
+
+    /// Read a cached row (caller must have checked validity).
+    #[inline]
+    pub fn row(&self, l: usize, node: usize) -> &[f32] {
+        self.layers[l].row(node)
+    }
+
+    /// The whole layer matrix (valid rows only are meaningful).
+    #[inline]
+    pub fn layer(&self, l: usize) -> &Matrix {
+        &self.layers[l]
+    }
+
+    /// Store a freshly computed row and mark it valid.
+    pub fn store(&mut self, l: usize, node: usize, row: &[f32]) {
+        self.layers[l].row_mut(node).copy_from_slice(row);
+        self.valid[l][node] = true;
+        self.rows_recomputed += 1;
+    }
+
+    /// Carry a still-valid row over from a pre-delta cache (no
+    /// recompute counted — nothing was computed).
+    pub fn adopt(&mut self, l: usize, node: usize, row: &[f32]) {
+        self.layers[l].row_mut(node).copy_from_slice(row);
+        self.valid[l][node] = true;
+    }
+
+    /// Stamp the graph version the surviving rows are valid for (the
+    /// server calls this after applying a delta).
+    pub fn set_version(&mut self, v: u64) {
+        self.version = v;
+    }
+
+    /// Carry lifetime counters from a predecessor cache whose rows are
+    /// all being discarded (budgeted-halo rebuilds start cold — the
+    /// re-sampled halo changes the local structure everywhere, so no
+    /// old row is trustworthy). The dropped rows count as invalidated.
+    pub fn carry_counters_discarding(&mut self, old: &EmbeddingCache) {
+        self.rows_recomputed += old.rows_recomputed;
+        self.rows_invalidated += old.rows_invalidated + old.valid_rows() as u64;
+    }
+
+    /// Drop one row.
+    pub fn invalidate(&mut self, l: usize, node: usize) {
+        if self.valid[l][node] {
+            self.valid[l][node] = false;
+            self.rows_invalidated += 1;
+        }
+    }
+
+    /// Forget everything (cache-disabled mode calls this after each
+    /// query batch; the scratch values were still needed *within* the
+    /// batch so upper layers could read lower ones).
+    pub fn clear_validity(&mut self) {
+        for v in &mut self.valid {
+            v.iter_mut().for_each(|b| *b = false);
+        }
+    }
+
+    /// Bytes resident in the embedding matrices.
+    pub fn nbytes(&self) -> usize {
+        self.layers.iter().map(|m| m.nbytes()).sum()
+    }
+
+    /// Count of currently valid rows (diagnostics / tests).
+    pub fn valid_rows(&self) -> usize {
+        self.valid.iter().map(|v| v.iter().filter(|&&b| b).count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_roundtrip_and_flags() {
+        let mut c = EmbeddingCache::new(true);
+        c.allocate(3, &[4, 2]);
+        assert!(c.is_allocated(2));
+        assert!(!c.is_valid(0, 1));
+        c.store(0, 1, &[1.0, 2.0, 3.0, 4.0]);
+        assert!(c.is_valid(0, 1));
+        assert_eq!(c.row(0, 1), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c.valid_rows(), 1);
+        c.invalidate(0, 1);
+        assert!(!c.is_valid(0, 1));
+        assert_eq!(c.rows_invalidated, 1);
+        // invalidating an already-invalid row is not double counted
+        c.invalidate(0, 1);
+        assert_eq!(c.rows_invalidated, 1);
+    }
+
+    #[test]
+    fn clear_validity_keeps_storage() {
+        let mut c = EmbeddingCache::new(false);
+        c.allocate(2, &[3]);
+        c.store(0, 0, &[1.0, 1.0, 1.0]);
+        c.clear_validity();
+        assert_eq!(c.valid_rows(), 0);
+        assert!(c.is_allocated(1));
+    }
+
+    #[test]
+    fn version_stamp() {
+        let mut c = EmbeddingCache::new(true);
+        assert_eq!(c.version(), 0);
+        c.set_version(3);
+        assert_eq!(c.version(), 3);
+    }
+}

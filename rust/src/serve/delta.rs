@@ -1,0 +1,157 @@
+//! Online graph mutations and their invalidation footprint.
+
+use crate::graph::{Csr, GraphBuilder};
+use anyhow::{anyhow, Result};
+use std::collections::HashSet;
+
+/// A batch of online mutations against the served graph: edge churn
+/// plus feature updates. Node count is fixed (node insertion is an
+/// offline reshard — see ROADMAP follow-ups).
+#[derive(Clone, Debug, Default)]
+pub struct GraphDelta {
+    /// Undirected edges to insert (either orientation; duplicates and
+    /// already-present edges are no-ops).
+    pub added_edges: Vec<(u32, u32)>,
+    /// Undirected edges to remove (absent edges are no-ops).
+    pub removed_edges: Vec<(u32, u32)>,
+    /// `(node, new feature row)` replacements.
+    pub updated_features: Vec<(u32, Vec<f32>)>,
+}
+
+impl GraphDelta {
+    pub fn is_empty(&self) -> bool {
+        self.added_edges.is_empty()
+            && self.removed_edges.is_empty()
+            && self.updated_features.is_empty()
+    }
+
+    /// Structural checks against the deployment's dimensions.
+    pub fn validate(&self, num_nodes: usize, feature_dim: usize) -> Result<()> {
+        for &(u, v) in self.added_edges.iter().chain(&self.removed_edges) {
+            if u as usize >= num_nodes || v as usize >= num_nodes {
+                return Err(anyhow!("delta edge ({u},{v}) out of range (n={num_nodes})"));
+            }
+            if u == v {
+                return Err(anyhow!("delta contains self loop at {u}"));
+            }
+        }
+        for (v, row) in &self.updated_features {
+            if *v as usize >= num_nodes {
+                return Err(anyhow!("feature update for node {v} out of range (n={num_nodes})"));
+            }
+            if row.len() != feature_dim {
+                return Err(anyhow!(
+                    "feature update for node {v} has dim {} (expected {feature_dim})",
+                    row.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Nodes whose *own* row of Â or features changed — the epicentre
+    /// the invalidation wave expands from.
+    pub fn seeds(&self) -> Vec<u32> {
+        let mut s: Vec<u32> = self
+            .added_edges
+            .iter()
+            .chain(&self.removed_edges)
+            .flat_map(|&(u, v)| [u, v])
+            .chain(self.updated_features.iter().map(|(v, _)| *v))
+            .collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    }
+
+    /// Apply the edge churn, producing the successor graph. O(E) — an
+    /// incremental CSR is a ROADMAP follow-up; deltas are off the
+    /// query hot path.
+    pub fn apply_to(&self, graph: &Csr) -> Csr {
+        let canon = |(u, v): (u32, u32)| if u < v { (u, v) } else { (v, u) };
+        let mut edges: HashSet<(u32, u32)> = graph.edges().collect();
+        for &e in &self.removed_edges {
+            edges.remove(&canon(e));
+        }
+        for &e in &self.added_edges {
+            edges.insert(canon(e));
+        }
+        let mut b = GraphBuilder::new(graph.num_nodes());
+        for (u, v) in edges {
+            b.edge(u, v);
+        }
+        b.build()
+    }
+}
+
+/// Hop distance (≤ `max_hops`) from any seed, or `u32::MAX` beyond.
+/// Taken as the *minimum over the old and new graphs* by the caller:
+/// influence of a removed edge travels along old adjacency, influence
+/// of an added one along new adjacency, and the layer-`l` invalidation
+/// rule ("within `l` hops of a seed") must be conservative for both.
+pub fn seed_distances(graph: &Csr, seeds: &[u32], max_hops: usize) -> Vec<u32> {
+    crate::graph::bounded_bfs_distances(graph, seeds, max_hops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path5() -> Csr {
+        GraphBuilder::new(5).edges(&[(0, 1), (1, 2), (2, 3), (3, 4)]).build()
+    }
+
+    #[test]
+    fn apply_adds_and_removes() {
+        let g = path5();
+        let d = GraphDelta {
+            added_edges: vec![(0, 4), (4, 0)], // dup collapses
+            removed_edges: vec![(1, 2), (2, 1)],
+            updated_features: vec![],
+        };
+        let g2 = d.apply_to(&g);
+        assert!(g2.has_edge(0, 4));
+        assert!(!g2.has_edge(1, 2));
+        assert_eq!(g2.num_edges(), 4);
+        assert!(g2.validate().is_ok());
+    }
+
+    #[test]
+    fn removing_absent_edge_is_noop() {
+        let g = path5();
+        let d = GraphDelta { removed_edges: vec![(0, 4)], ..Default::default() };
+        assert_eq!(d.apply_to(&g).num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn validate_rejects_bad_input() {
+        let d = GraphDelta { added_edges: vec![(0, 9)], ..Default::default() };
+        assert!(d.validate(5, 3).is_err());
+        let d = GraphDelta { added_edges: vec![(2, 2)], ..Default::default() };
+        assert!(d.validate(5, 3).is_err());
+        let d = GraphDelta { updated_features: vec![(1, vec![0.0; 2])], ..Default::default() };
+        assert!(d.validate(5, 3).is_err(), "wrong feature dim");
+        let d = GraphDelta { updated_features: vec![(1, vec![0.0; 3])], ..Default::default() };
+        assert!(d.validate(5, 3).is_ok());
+    }
+
+    #[test]
+    fn seeds_are_deduped_endpoints_and_feature_nodes() {
+        let d = GraphDelta {
+            added_edges: vec![(1, 2)],
+            removed_edges: vec![(2, 3)],
+            updated_features: vec![(0, vec![])],
+        };
+        assert_eq!(d.seeds(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn distances_bounded() {
+        let g = path5();
+        let dist = seed_distances(&g, &[0], 2);
+        assert_eq!(dist[0], 0);
+        assert_eq!(dist[1], 1);
+        assert_eq!(dist[2], 2);
+        assert_eq!(dist[3], u32::MAX);
+    }
+}

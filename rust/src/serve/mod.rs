@@ -1,0 +1,84 @@
+//! Partition-aware inference serving.
+//!
+//! Training produces a checkpoint; this subsystem turns it into a
+//! query-answering service — the ROADMAP's "serve heavy traffic" leg.
+//! The paper's augmented-subgraph insight (§3.2.2) applies directly:
+//! a shard that carries a replicated L-hop halo of its boundary
+//! (Property 1: walk/halo depth = GCN layer count) can answer
+//! node-classification queries **entirely shard-locally** — the same
+//! communication win GAD-Partition buys at training time, moved to the
+//! serving tier. Three layers:
+//!
+//! * [`ShardEngine`] — one partition part plus its halo. Runs the
+//!   layer-wise GCN forward over the local subgraph with a
+//!   gather-rows → one-GEMM micro-batch pipeline, materialising
+//!   per-layer node embeddings. With [`HaloPolicy::Exact`] the halo is
+//!   the complete L-hop candidate set and base-node predictions are
+//!   **bit-identical** to a full-graph forward (global-degree
+//!   normalization via [`NormAdj::with_inv_sqrt`]); with
+//!   [`HaloPolicy::Budgeted`] the halo is Algorithm 1's
+//!   importance-sampled replica set — the training-time approximation,
+//!   at a fraction of the memory.
+//! * [`EmbeddingCache`] — per-shard `(layer, node)` embedding rows
+//!   versioned by `graph_version`. A [`GraphDelta`] bumps the version
+//!   and invalidates exactly the rows within `l` hops of the touched
+//!   region at layer `l`; everything else survives and recomputation
+//!   happens lazily on the next query that needs it.
+//! * [`Server`] — the query frontend: routes single and batched
+//!   queries to their shard, micro-batches per shard, applies deltas,
+//!   and reports per-query provenance (owning shard, cache hit, rows
+//!   recomputed). All cross-shard bytes — halo replication at build,
+//!   delta propagation at mutation — land in the
+//!   [`CommLedger`](crate::comm::CommLedger)'s serving traffic class;
+//!   the query path itself moves zero bytes.
+//!
+//! [`NormAdj::with_inv_sqrt`]: crate::model::NormAdj::with_inv_sqrt
+
+pub mod bench;
+mod cache;
+mod delta;
+mod server;
+mod shard;
+
+pub use bench::{run_serving_bench, LatencySummary, ServingBenchConfig, ServingBenchReport};
+pub use cache::EmbeddingCache;
+pub use delta::GraphDelta;
+pub use server::{DeltaReport, QueryResult, Server, ServeStats};
+pub use shard::{ShardEngine, ShardServeOutcome};
+
+/// How a shard's halo (replicated remote nodes) is chosen.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum HaloPolicy {
+    /// The complete L-hop candidate replication set (paper Def. 2 with
+    /// no budget). Base-node predictions are bit-identical to a
+    /// full-graph forward — serving's correctness mode.
+    Exact,
+    /// Algorithm 1's Monte-Carlo importance-sampled replicas with
+    /// replication coefficient α (Eq. 5–6). Approximate at the
+    /// boundary, much smaller resident halo.
+    Budgeted { alpha: f64 },
+}
+
+/// Serving deployment configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Shard count (clamped to the node count at build).
+    pub shards: usize,
+    /// Halo construction policy.
+    pub halo: HaloPolicy,
+    /// Keep per-layer embeddings between queries. Off = every query
+    /// recomputes (the "cold" mode of the latency benchmark).
+    pub cache: bool,
+    /// Restrict each layer's compute to the rows the queried nodes
+    /// actually need (the L-hop cone). Off = recompute the whole shard
+    /// every query — only useful as the naive baseline in benchmarks.
+    pub pruned: bool,
+    /// Partitioner / halo-sampling seed.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { shards: 4, halo: HaloPolicy::Exact, cache: true, pruned: true, seed: 0 }
+    }
+}

@@ -1,0 +1,506 @@
+//! The query frontend: shard routing, per-shard micro-batching, online
+//! graph deltas, provenance and traffic accounting.
+
+use super::delta::{seed_distances, GraphDelta};
+use super::shard::ShardEngine;
+use super::ServeConfig;
+use crate::comm::{CommLedger, CommStats};
+use crate::datasets::Dataset;
+use crate::graph::Csr;
+use crate::model::GcnParams;
+use crate::partition::{partition, PartitionConfig};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
+
+/// One answered query with its provenance.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    /// Queried (global) node id.
+    pub node: u32,
+    /// Predicted class.
+    pub pred: u32,
+    /// Softmax class probabilities.
+    pub probs: Vec<f32>,
+    /// Shard that answered (always the node's home shard — queries are
+    /// shard-local by construction).
+    pub shard: u32,
+    /// Graph version the answer is valid for.
+    pub graph_version: u64,
+    /// Output-layer embedding came straight from the cache.
+    pub cache_hit: bool,
+    /// Embedding rows recomputed by the micro-batch that served this
+    /// query (shared across the batch's queries on the same shard).
+    pub rows_recomputed: usize,
+}
+
+/// Lifetime serving counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    pub queries: u64,
+    pub micro_batches: u64,
+    /// Queries answered from a valid output-layer row.
+    pub cache_hits: u64,
+    /// Embedding rows recomputed across all layers.
+    pub rows_recomputed: u64,
+    pub deltas_applied: u64,
+    pub graph_version: u64,
+    /// Cross-shard serving traffic (halo replication + delta
+    /// propagation; the query path moves nothing).
+    pub comm: CommStats,
+}
+
+/// What one [`GraphDelta`] did to the deployment.
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaReport {
+    /// Version after the delta.
+    pub graph_version: u64,
+    /// Epicentre size (distinct touched nodes).
+    pub seeds: usize,
+    /// Cached embedding rows dropped by L-hop invalidation (including
+    /// halo-membership churn).
+    pub rows_invalidated: u64,
+    /// Cross-shard bytes spent propagating the delta.
+    pub serving_bytes: u64,
+}
+
+/// See module docs ([`crate::serve`]).
+pub struct Server {
+    cfg: ServeConfig,
+    graph: Csr,
+    features: Matrix,
+    params: GcnParams,
+    assignment: Vec<u32>,
+    shards: Vec<ShardEngine>,
+    version: u64,
+    ledger: CommLedger,
+    queries: u64,
+    micro_batches: u64,
+    cache_hits: u64,
+    rows_recomputed: u64,
+    deltas_applied: u64,
+}
+
+/// `1/sqrt(deg+1)` per node over the full graph — the factors that make
+/// shard-local Â entries agree with the full graph's. Delegates to the
+/// training-time formula so the two can never diverge.
+fn global_inv_sqrt(graph: &Csr) -> Vec<f32> {
+    crate::model::NormAdj::inv_sqrt_degrees(graph)
+}
+
+impl Server {
+    /// Shard `graph` and stand the deployment up. Fails cleanly on a
+    /// model whose input width does not match the features.
+    pub fn build(graph: Csr, features: Matrix, params: GcnParams, cfg: ServeConfig) -> Result<Server> {
+        let n = graph.num_nodes();
+        if n == 0 {
+            return Err(anyhow!("cannot serve an empty graph"));
+        }
+        if features.rows != n {
+            return Err(anyhow!("features have {} rows for {} nodes", features.rows, n));
+        }
+        if params.ws.is_empty() {
+            return Err(anyhow!("model has no layers"));
+        }
+        if params.ws[0].rows != features.cols {
+            return Err(anyhow!(
+                "model expects {}-dim features, graph has {}-dim",
+                params.ws[0].rows,
+                features.cols
+            ));
+        }
+        let k = cfg.shards.clamp(1, n);
+        let layers = params.layers();
+        let part = partition(&graph, &PartitionConfig { k, seed: cfg.seed, ..Default::default() });
+        let inv = global_inv_sqrt(&graph);
+        let ledger = CommLedger::new();
+        let mut shards = Vec::with_capacity(k);
+        for p in 0..k as u32 {
+            let sh = ShardEngine::build(&graph, &features, &inv, &part.assignment, p, layers, &cfg);
+            if k > 1 {
+                // the halo is the only thing serving ever ships:
+                // replicated feature rows move once at build, queries
+                // then stay shard-local
+                ledger.record_serving((sh.replicas.len() * features.cols * 4) as u64);
+            }
+            shards.push(sh);
+        }
+        Ok(Server {
+            cfg,
+            graph,
+            features,
+            params,
+            assignment: part.assignment,
+            shards,
+            version: 0,
+            ledger,
+            queries: 0,
+            micro_batches: 0,
+            cache_hits: 0,
+            rows_recomputed: 0,
+            deltas_applied: 0,
+        })
+    }
+
+    /// Build from a dataset (graph + features are cloned; labels and
+    /// splits are a training concern the serving tier never sees).
+    pub fn for_dataset(ds: &Dataset, params: GcnParams, cfg: ServeConfig) -> Result<Server> {
+        Self::build(ds.graph.clone(), ds.features.clone(), params, cfg)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn graph_version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn params(&self) -> &GcnParams {
+        &self.params
+    }
+
+    /// Shard inspection (tests / reporting).
+    pub fn shard(&self, i: usize) -> &ShardEngine {
+        &self.shards[i]
+    }
+
+    /// Home shard of a node.
+    pub fn shard_of(&self, node: u32) -> u32 {
+        self.assignment[node as usize]
+    }
+
+    /// Resident bytes across shards (features + adjacency + cache).
+    pub fn resident_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.nbytes()).sum()
+    }
+
+    /// Classify one node.
+    pub fn query(&mut self, node: u32) -> Result<QueryResult> {
+        let mut v = self.query_batch(std::slice::from_ref(&node))?;
+        Ok(v.pop().expect("one query, one result"))
+    }
+
+    /// Classify a batch. Queries are grouped per home shard and each
+    /// group is answered by one gather-rows → GEMM pipeline pass —
+    /// the micro-batching that amortises the forward across queries.
+    /// Results come back in input order; batching cannot change any
+    /// answer (per-row compute is independent, enforced by tests).
+    pub fn query_batch(&mut self, nodes: &[u32]) -> Result<Vec<QueryResult>> {
+        let n = self.graph.num_nodes();
+        for &v in nodes {
+            if v as usize >= n {
+                return Err(anyhow!("query node {v} out of range (n={n})"));
+            }
+        }
+        let mut groups: Vec<Vec<(usize, u32)>> = vec![Vec::new(); self.shards.len()];
+        for (i, &v) in nodes.iter().enumerate() {
+            let s = self.assignment[v as usize] as usize;
+            let local = self.shards[s]
+                .sub
+                .local_of(v)
+                .expect("home shard always contains its base nodes");
+            groups[s].push((i, local));
+        }
+        let mut results: Vec<Option<QueryResult>> = vec![None; nodes.len()];
+        for (s, group) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let locals: Vec<u32> = group.iter().map(|&(_, l)| l).collect();
+            let out = self.shards[s].serve(&self.params, &locals, self.cfg.pruned);
+            self.micro_batches += 1;
+            self.cache_hits += out.cached_hits as u64;
+            self.rows_recomputed += out.rows_recomputed as u64;
+            for (ri, &(orig, _)) in group.iter().enumerate() {
+                results[orig] = Some(QueryResult {
+                    node: nodes[orig],
+                    pred: out.preds[ri],
+                    probs: out.probs.row(ri).to_vec(),
+                    shard: s as u32,
+                    graph_version: self.version,
+                    cache_hit: out.cached[ri],
+                    rows_recomputed: out.rows_recomputed,
+                });
+            }
+        }
+        self.queries += nodes.len() as u64;
+        Ok(results.into_iter().map(|r| r.expect("every query answered")).collect())
+    }
+
+    /// Apply online mutations: bump the graph version, rebuild shard
+    /// structure, and drop exactly the cached rows whose L-hop
+    /// dependency cone touches the delta (layer-`l` rows within `l`
+    /// hops of a seed, distances taken as the min over the old and new
+    /// graph so removals invalidate conservatively too). Everything
+    /// else is recomputed lazily by later queries. Budgeted-halo shards
+    /// whose region the delta touched restart cold instead: their halo
+    /// is re-sampled, so no old row is trustworthy.
+    pub fn apply_delta(&mut self, delta: &GraphDelta) -> Result<DeltaReport> {
+        delta.validate(self.graph.num_nodes(), self.features.cols)?;
+        if delta.is_empty() {
+            return Ok(DeltaReport {
+                graph_version: self.version,
+                seeds: 0,
+                rows_invalidated: 0,
+                serving_bytes: 0,
+            });
+        }
+        let layers = self.params.layers();
+        let seeds = delta.seeds();
+        let new_graph = delta.apply_to(&self.graph);
+        let dist_old = seed_distances(&self.graph, &seeds, layers);
+        let dist_new = seed_distances(&new_graph, &seeds, layers);
+        let dist: Vec<u32> =
+            dist_old.iter().zip(&dist_new).map(|(&a, &b)| a.min(b)).collect();
+
+        for (v, row) in &delta.updated_features {
+            self.features.row_mut(*v as usize).copy_from_slice(row);
+        }
+
+        self.version += 1;
+        let inv = global_inv_sqrt(&new_graph);
+        let dims: Vec<usize> = self.params.ws.iter().map(|w| w.cols).collect();
+        let k = self.shards.len();
+        let mut rows_invalidated = 0u64;
+        let mut serving_bytes = 0u64;
+        let old_shards = std::mem::take(&mut self.shards);
+        for old in old_shards {
+            // Untouched shard: no member within L hops of any seed (the
+            // dist BFS is bounded at L, so MAX means "farther"). Then no
+            // cached row is stale, and membership/Â/features are
+            // unchanged too — a new candidate path or a degree change
+            // would need a seed within L hops of a member. Keep the
+            // shard as-is instead of an O(V+E) rebuild.
+            let touched = old.sub.global_ids.iter().any(|&g| dist[g as usize] != u32::MAX);
+            if !touched {
+                let mut keep = old;
+                keep.cache.set_version(self.version);
+                self.shards.push(keep);
+                continue;
+            }
+            let mut fresh = ShardEngine::build(
+                &new_graph,
+                &self.features,
+                &inv,
+                &self.assignment,
+                old.part,
+                layers,
+                &self.cfg,
+            );
+            let invalidated_before = old.cache.rows_invalidated;
+            match self.cfg.halo {
+                // exact halos: structure around far-away nodes is
+                // provably unchanged, so their rows survive
+                super::HaloPolicy::Exact => fresh.migrate_cache_from(&old, &dist, &dims),
+                // budgeted halos are re-sampled on the mutated graph —
+                // the local adjacency can change anywhere, so the
+                // rebuilt shard starts cold
+                super::HaloPolicy::Budgeted { .. } => {
+                    fresh.cache.carry_counters_discarding(&old.cache)
+                }
+            }
+            fresh.cache.set_version(self.version);
+            rows_invalidated += fresh.cache.rows_invalidated - invalidated_before;
+
+            if k > 1 {
+                // propagation cost: updated feature rows shipped to the
+                // shards that replicate the node, churned edges to the
+                // shards that see them through a replica, and feature
+                // rows for nodes newly pulled into the halo
+                let mut bytes = 0u64;
+                let frow = (self.features.cols * 4) as u64;
+                for (v, _) in &delta.updated_features {
+                    if let Some(l) = fresh.sub.local_of(*v) {
+                        if fresh.is_replica[l as usize] {
+                            bytes += frow;
+                        }
+                    }
+                }
+                for &(u, v) in delta.added_edges.iter().chain(&delta.removed_edges) {
+                    let lu = fresh.sub.local_of(u);
+                    let lv = fresh.sub.local_of(v);
+                    let replica = |l: Option<u32>| {
+                        l.map(|i| fresh.is_replica[i as usize]).unwrap_or(false)
+                    };
+                    if (lu.is_some() || lv.is_some()) && (replica(lu) || replica(lv)) {
+                        bytes += 8;
+                    }
+                }
+                for (l, &g) in fresh.sub.global_ids.iter().enumerate() {
+                    if fresh.is_replica[l] && old.sub.local_of(g).is_none() {
+                        bytes += frow; // node joined this halo
+                    }
+                }
+                self.ledger.record_serving(bytes);
+                serving_bytes += bytes;
+            }
+            self.shards.push(fresh);
+        }
+        self.graph = new_graph;
+        self.deltas_applied += 1;
+        Ok(DeltaReport {
+            graph_version: self.version,
+            seeds: seeds.len(),
+            rows_invalidated,
+            serving_bytes,
+        })
+    }
+
+    /// Lifetime counters + traffic snapshot.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            queries: self.queries,
+            micro_batches: self.micro_batches,
+            cache_hits: self.cache_hits,
+            rows_recomputed: self.rows_recomputed,
+            deltas_applied: self.deltas_applied,
+            graph_version: self.version,
+            comm: CommStats::from_ledger(&self.ledger),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SyntheticSpec;
+    use crate::rng::Rng;
+    use crate::serve::HaloPolicy;
+
+    fn fixture() -> (Dataset, GcnParams) {
+        let ds = SyntheticSpec::tiny().generate(11);
+        let mut rng = Rng::seed_from_u64(11);
+        let params = GcnParams::init(ds.feature_dim(), 8, ds.num_classes, 2, &mut rng);
+        (ds, params)
+    }
+
+    #[test]
+    fn build_rejects_mismatched_model() {
+        let (ds, _) = fixture();
+        let mut rng = Rng::seed_from_u64(1);
+        let wrong = GcnParams::init(ds.feature_dim() + 1, 8, ds.num_classes, 2, &mut rng);
+        assert!(Server::for_dataset(&ds, wrong, ServeConfig::default()).is_err());
+    }
+
+    #[test]
+    fn batch_order_and_routing() {
+        let (ds, params) = fixture();
+        let mut srv = Server::for_dataset(&ds, params, ServeConfig::default()).unwrap();
+        let nodes = vec![5u32, 0, 17, 5];
+        let res = srv.query_batch(&nodes).unwrap();
+        assert_eq!(res.len(), 4);
+        for (r, &v) in res.iter().zip(&nodes) {
+            assert_eq!(r.node, v);
+            assert_eq!(r.shard, srv.shard_of(v));
+            assert_eq!(r.probs.len(), ds.num_classes);
+            let sum: f32 = r.probs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+        // duplicates agree with each other
+        assert_eq!(res[0].pred, res[3].pred);
+        let st = srv.stats();
+        assert_eq!(st.queries, 4);
+        assert!(st.micro_batches >= 1);
+    }
+
+    #[test]
+    fn out_of_range_query_fails() {
+        let (ds, params) = fixture();
+        let n = ds.num_nodes() as u32;
+        let mut srv = Server::for_dataset(&ds, params, ServeConfig::default()).unwrap();
+        assert!(srv.query(n).is_err());
+    }
+
+    #[test]
+    fn halo_replication_is_accounted() {
+        let (ds, params) = fixture();
+        let srv = Server::for_dataset(&ds, params.clone(), ServeConfig::default()).unwrap();
+        assert!(srv.stats().comm.serving_bytes > 0, "multi-shard halos must cost bytes");
+        let single = Server::for_dataset(
+            &ds,
+            params,
+            ServeConfig { shards: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(single.stats().comm.serving_bytes, 0, "one shard ships nothing");
+    }
+
+    #[test]
+    fn budgeted_halo_ships_fewer_bytes() {
+        let (ds, params) = fixture();
+        let exact = Server::for_dataset(&ds, params.clone(), ServeConfig::default()).unwrap();
+        let budgeted = Server::for_dataset(
+            &ds,
+            params,
+            ServeConfig { halo: HaloPolicy::Budgeted { alpha: 0.01 }, ..Default::default() },
+        )
+        .unwrap();
+        assert!(
+            budgeted.stats().comm.serving_bytes < exact.stats().comm.serving_bytes,
+            "importance-sampled halos are the cheap mode"
+        );
+    }
+
+    #[test]
+    fn delta_bumps_version_and_invalidates() {
+        let (ds, params) = fixture();
+        let mut srv = Server::for_dataset(&ds, params, ServeConfig::default()).unwrap();
+        // warm every shard
+        let all: Vec<u32> = (0..ds.num_nodes() as u32).collect();
+        srv.query_batch(&all).unwrap();
+        let warm_hits = srv.query(0).unwrap();
+        assert!(warm_hits.cache_hit);
+
+        let delta = GraphDelta {
+            added_edges: vec![(0, (ds.num_nodes() - 1) as u32)],
+            ..Default::default()
+        };
+        let rep = srv.apply_delta(&delta).unwrap();
+        assert_eq!(rep.graph_version, 1);
+        assert_eq!(rep.seeds, 2);
+        assert!(rep.rows_invalidated > 0);
+        let r = srv.query(0).unwrap();
+        assert_eq!(r.graph_version, 1);
+        assert!(!r.cache_hit, "rows at the epicentre must be recomputed");
+        assert!(r.rows_recomputed > 0);
+        // invalidation is surgical: nodes far from both seeds (and any
+        // shard the delta never reached) still answer from cache
+        let res = srv.query_batch(&all).unwrap();
+        let hits = res.iter().filter(|r| r.cache_hit).count();
+        assert!(hits > 0, "far-away rows must survive the delta");
+    }
+
+    #[test]
+    fn budgeted_delta_restarts_touched_shards_cold() {
+        let (ds, params) = fixture();
+        let cfg = ServeConfig { halo: HaloPolicy::Budgeted { alpha: 0.02 }, ..Default::default() };
+        let mut srv = Server::for_dataset(&ds, params, cfg).unwrap();
+        let all: Vec<u32> = (0..ds.num_nodes() as u32).collect();
+        srv.query_batch(&all).unwrap();
+        let delta = GraphDelta { added_edges: vec![(0, 9)], ..Default::default() };
+        let rep = srv.apply_delta(&delta).unwrap();
+        assert!(rep.rows_invalidated > 0, "touched budgeted shards drop their cache");
+        let r = srv.query(0).unwrap();
+        assert_eq!(r.graph_version, 1);
+        assert!(!r.cache_hit, "the re-sampled shard must answer fresh");
+    }
+
+    #[test]
+    fn empty_delta_is_noop() {
+        let (ds, params) = fixture();
+        let mut srv = Server::for_dataset(&ds, params, ServeConfig::default()).unwrap();
+        let rep = srv.apply_delta(&GraphDelta::default()).unwrap();
+        assert_eq!(rep.graph_version, 0);
+        assert_eq!(srv.stats().deltas_applied, 0);
+    }
+
+    #[test]
+    fn delta_rejects_bad_input() {
+        let (ds, params) = fixture();
+        let n = ds.num_nodes() as u32;
+        let mut srv = Server::for_dataset(&ds, params, ServeConfig::default()).unwrap();
+        let bad = GraphDelta { added_edges: vec![(0, n)], ..Default::default() };
+        assert!(srv.apply_delta(&bad).is_err());
+        assert_eq!(srv.graph_version(), 0, "failed delta must not advance the version");
+    }
+}

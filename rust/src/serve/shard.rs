@@ -1,0 +1,368 @@
+//! One serving shard: a partition part plus its replicated halo, the
+//! layer-wise forward over the local subgraph, and the lazy
+//! cache-filling micro-batch pipeline.
+
+use super::cache::EmbeddingCache;
+use super::{HaloPolicy, ServeConfig};
+use crate::augment::{augment_part, AugmentConfig};
+use crate::graph::{candidate_replication_nodes, Csr, Subgraph};
+use crate::model::{GcnParams, NormAdj};
+use crate::tensor::{gemm, relu, softmax_rows, Matrix};
+use std::collections::HashSet;
+
+/// Outcome of one shard micro-batch, rows in query order.
+#[derive(Clone, Debug)]
+pub struct ShardServeOutcome {
+    /// Softmax class probabilities per queried node.
+    pub probs: Matrix,
+    /// Argmax class per queried node.
+    pub preds: Vec<u32>,
+    /// Per queried node: was its output-layer row already cached?
+    pub cached: Vec<bool>,
+    /// Queried nodes whose output-layer row was already cached.
+    pub cached_hits: usize,
+    /// Embedding rows recomputed (across all layers) by this call.
+    pub rows_recomputed: usize,
+}
+
+/// See module docs.
+pub struct ShardEngine {
+    pub part: u32,
+    /// Base + halo nodes, local CSR over the induced edges.
+    pub sub: Subgraph,
+    /// `true` -> halo replica (cannot be queried here; its home shard
+    /// owns it).
+    pub is_replica: Vec<bool>,
+    /// Replicated global ids (the halo).
+    pub replicas: Vec<u32>,
+    /// Â over the local subgraph with **global-degree** normalization,
+    /// so local entries match the full graph's wherever both endpoints
+    /// keep their complete neighbourhood (see [`NormAdj::with_inv_sqrt`]).
+    adj: NormAdj,
+    /// Local copies of the member nodes' feature rows.
+    features: Matrix,
+    pub cache: EmbeddingCache,
+}
+
+impl ShardEngine {
+    /// Build the shard for `part`. `inv_sqrt_global[v] = 1/sqrt(deg(v)+1)`
+    /// over the *full* graph; `layers` is the GCN depth (= halo hops,
+    /// Property 1).
+    pub fn build(
+        graph: &Csr,
+        global_features: &Matrix,
+        inv_sqrt_global: &[f32],
+        assignment: &[u32],
+        part: u32,
+        layers: usize,
+        cfg: &ServeConfig,
+    ) -> ShardEngine {
+        let (sub, is_replica, replicas) = match cfg.halo {
+            HaloPolicy::Exact => {
+                let base: Vec<u32> = (0..graph.num_nodes() as u32)
+                    .filter(|&v| assignment[v as usize] == part)
+                    .collect();
+                let halo = candidate_replication_nodes(graph, assignment, part, layers);
+                let mut all = base.clone();
+                all.extend_from_slice(&halo);
+                let sub = Subgraph::induce(graph, &all);
+                let base_set: HashSet<u32> = base.into_iter().collect();
+                let is_replica: Vec<bool> =
+                    sub.global_ids.iter().map(|g| !base_set.contains(g)).collect();
+                (sub, is_replica, halo)
+            }
+            HaloPolicy::Budgeted { alpha } => {
+                let aug = augment_part(
+                    graph,
+                    assignment,
+                    part,
+                    &AugmentConfig { alpha, walk_length: layers, seed: cfg.seed, ..Default::default() },
+                );
+                (aug.sub, aug.is_replica, aug.replicas)
+            }
+        };
+
+        let n = sub.len();
+        let f = global_features.cols;
+        let mut features = Matrix::zeros(n, f);
+        let mut inv_local = Vec::with_capacity(n);
+        for (l, &g) in sub.global_ids.iter().enumerate() {
+            features.row_mut(l).copy_from_slice(global_features.row(g as usize));
+            inv_local.push(inv_sqrt_global[g as usize]);
+        }
+        let adj = NormAdj::with_inv_sqrt(&sub.csr, &inv_local);
+        ShardEngine {
+            part,
+            sub,
+            is_replica,
+            replicas,
+            adj,
+            features,
+            cache: EmbeddingCache::new(cfg.cache),
+        }
+    }
+
+    /// Node count (base + halo).
+    pub fn len(&self) -> usize {
+        self.sub.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sub.is_empty()
+    }
+
+    /// Base (queryable) node count.
+    pub fn base_len(&self) -> usize {
+        self.is_replica.iter().filter(|&&r| !r).count()
+    }
+
+    /// Resident bytes: features + adjacency + cached embeddings.
+    pub fn nbytes(&self) -> usize {
+        self.features.nbytes() + self.adj.nbytes() + self.cache.nbytes()
+    }
+
+    /// Answer a micro-batch of local node ids. `pruned = false`
+    /// recomputes every (invalid) row of the shard instead of just the
+    /// queries' dependency cone — the naive baseline mode.
+    pub fn serve(&mut self, params: &GcnParams, q: &[u32], pruned: bool) -> ShardServeOutcome {
+        let layer_count = params.layers();
+        let n = self.sub.len();
+        let dims: Vec<usize> = params.ws.iter().map(|w| w.cols).collect();
+        if !self.cache.is_allocated(layer_count) || self.cache.num_nodes() != n {
+            self.cache.allocate(n, &dims);
+        }
+
+        let out_l = layer_count - 1;
+        let cached: Vec<bool> = q.iter().map(|&v| self.cache.is_valid(out_l, v as usize)).collect();
+        let cached_hits = cached.iter().filter(|&&h| h).count();
+
+        // ---- plan: which rows must be computed at each layer --------
+        let mut need: Vec<Vec<u32>> = vec![Vec::new(); layer_count];
+        if pruned {
+            // top-down dependency cone: layer l feeds the closed
+            // neighbourhoods of whatever layer l+1 recomputes
+            let mut mark = vec![false; n];
+            for &v in q {
+                let v = v as usize;
+                if !mark[v] && !self.cache.is_valid(out_l, v) {
+                    mark[v] = true;
+                    need[out_l].push(v as u32);
+                }
+            }
+            for l in (0..out_l).rev() {
+                let mut mark = vec![false; n];
+                let mut nl = Vec::new();
+                for &v in &need[l + 1] {
+                    let v = v as usize;
+                    if !mark[v] && !self.cache.is_valid(l, v) {
+                        mark[v] = true;
+                        nl.push(v as u32);
+                    }
+                    for &t in self.sub.csr.neighbors(v) {
+                        let t = t as usize;
+                        if !mark[t] && !self.cache.is_valid(l, t) {
+                            mark[t] = true;
+                            nl.push(t as u32);
+                        }
+                    }
+                }
+                nl.sort_unstable();
+                need[l] = nl;
+            }
+        } else {
+            for (l, nl) in need.iter_mut().enumerate() {
+                *nl = (0..n as u32).filter(|&v| !self.cache.is_valid(l, v as usize)).collect();
+            }
+        }
+
+        // ---- compute bottom-up: gather rows -> one GEMM per layer ---
+        // The per-row aggregation replays `spmm_csr`'s inner loop and
+        // the GEMM computes each output row independently of which
+        // other rows are present, so a partial recompute is
+        // bit-identical to the full-shard forward.
+        let mut rows_recomputed = 0usize;
+        for l in 0..layer_count {
+            if need[l].is_empty() {
+                continue;
+            }
+            let sel = std::mem::take(&mut need[l]);
+            let in_dim = params.ws[l].rows;
+            let mut agg = Matrix::zeros(sel.len(), in_dim);
+            {
+                let (offs, tgts, vals) = self.adj.raw();
+                for (i, &v) in sel.iter().enumerate() {
+                    let orow = agg.row_mut(i);
+                    for e in offs[v as usize]..offs[v as usize + 1] {
+                        let j = tgts[e] as usize;
+                        let w = vals[e];
+                        let drow =
+                            if l == 0 { self.features.row(j) } else { self.cache.row(l - 1, j) };
+                        for c in 0..in_dim {
+                            orow[c] += w * drow[c];
+                        }
+                    }
+                }
+            }
+            let mut z = gemm(&agg, &params.ws[l]);
+            if l + 1 < layer_count {
+                relu(&mut z);
+            }
+            for (i, &v) in sel.iter().enumerate() {
+                self.cache.store(l, v as usize, z.row(i));
+            }
+            rows_recomputed += sel.len();
+        }
+
+        // ---- answer from the (now valid) output layer ---------------
+        let classes = dims[out_l];
+        let mut logits = Matrix::zeros(q.len(), classes);
+        for (i, &v) in q.iter().enumerate() {
+            logits.row_mut(i).copy_from_slice(self.cache.row(out_l, v as usize));
+        }
+        let probs = softmax_rows(&logits);
+        let preds = probs.argmax_rows();
+
+        if !self.cache.enabled() {
+            self.cache.clear_validity();
+        }
+        ShardServeOutcome { probs, preds, cached, cached_hits, rows_recomputed }
+    }
+
+    /// Carry forward cache rows that survive a [`GraphDelta`]
+    /// (membership matched by global id, layer-`l` rows dropped inside
+    /// `l+1` hops of a seed — `dist` is the min-over-old-and-new-graph
+    /// seed distance). Counters carry over so lifetime stats survive
+    /// rebuilds.
+    ///
+    /// [`GraphDelta`]: super::GraphDelta
+    pub fn migrate_cache_from(&mut self, old: &ShardEngine, dist: &[u32], dims: &[usize]) {
+        let layer_count = dims.len();
+        let n = self.sub.len();
+        if !self.cache.is_allocated(layer_count) || self.cache.num_nodes() != n {
+            self.cache.allocate(n, dims);
+        }
+        self.cache.rows_recomputed += old.cache.rows_recomputed;
+        self.cache.rows_invalidated += old.cache.rows_invalidated;
+        if !old.cache.is_allocated(layer_count) {
+            return; // old shard was never queried — nothing to carry
+        }
+        let mut adopted = 0u64;
+        for (local, &g) in self.sub.global_ids.iter().enumerate() {
+            let Some(old_local) = old.sub.local_of(g) else { continue };
+            let d = dist[g as usize];
+            for l in 0..layer_count {
+                // layer l of the cache holds H_{l+1}: stale within l+1 hops
+                let touched = d != u32::MAX && d <= (l + 1) as u32;
+                if !touched && old.cache.is_valid(l, old_local as usize) {
+                    self.cache.adopt(l, local, old.cache.row(l, old_local as usize));
+                    adopted += 1;
+                }
+            }
+        }
+        let old_valid = old.cache.valid_rows() as u64;
+        self.cache.rows_invalidated += old_valid.saturating_sub(adopted);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::SyntheticSpec;
+    use crate::partition::{partition, PartitionConfig};
+    use crate::rng::Rng;
+
+    fn fixture() -> (crate::datasets::Dataset, Vec<u32>, Vec<f32>) {
+        let ds = SyntheticSpec::tiny().generate(3);
+        let p = partition(&ds.graph, &PartitionConfig { k: 3, seed: 1, ..Default::default() });
+        let inv = NormAdj::inv_sqrt_degrees(&ds.graph);
+        (ds, p.assignment, inv)
+    }
+
+    #[test]
+    fn exact_halo_contains_all_candidates() {
+        let (ds, assign, inv) = fixture();
+        let cfg = ServeConfig { shards: 3, ..Default::default() };
+        let sh = ShardEngine::build(&ds.graph, &ds.features, &inv, &assign, 0, 2, &cfg);
+        let expect = candidate_replication_nodes(&ds.graph, &assign, 0, 2);
+        assert_eq!(sh.replicas, expect);
+        assert_eq!(sh.len(), sh.base_len() + expect.len());
+        assert!(sh.sub.csr.validate().is_ok());
+    }
+
+    #[test]
+    fn budgeted_halo_is_smaller() {
+        let (ds, assign, inv) = fixture();
+        let exact = ShardEngine::build(
+            &ds.graph,
+            &ds.features,
+            &inv,
+            &assign,
+            0,
+            2,
+            &ServeConfig::default(),
+        );
+        let budgeted = ShardEngine::build(
+            &ds.graph,
+            &ds.features,
+            &inv,
+            &assign,
+            0,
+            2,
+            &ServeConfig { halo: HaloPolicy::Budgeted { alpha: 0.01 }, ..Default::default() },
+        );
+        assert!(budgeted.replicas.len() < exact.replicas.len());
+        assert!(budgeted.nbytes() < exact.nbytes());
+    }
+
+    #[test]
+    fn pruned_serve_matches_full_recompute() {
+        let (ds, assign, inv) = fixture();
+        let mut rng = Rng::seed_from_u64(5);
+        let params = GcnParams::init(ds.feature_dim(), 8, ds.num_classes, 2, &mut rng);
+        let cfg = ServeConfig { shards: 3, ..Default::default() };
+        let mut a = ShardEngine::build(&ds.graph, &ds.features, &inv, &assign, 1, 2, &cfg);
+        let mut b = ShardEngine::build(&ds.graph, &ds.features, &inv, &assign, 1, 2, &cfg);
+        let q: Vec<u32> = (0..a.len() as u32).filter(|&v| !a.is_replica[v as usize]).collect();
+        let pruned = a.serve(&params, &q, true);
+        let full = b.serve(&params, &q, false);
+        assert_eq!(pruned.preds, full.preds);
+        assert_eq!(
+            pruned.probs.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            full.probs.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "dependency-cone compute must be bit-identical to full-shard compute"
+        );
+        assert!(pruned.rows_recomputed <= full.rows_recomputed);
+    }
+
+    #[test]
+    fn second_query_is_all_cache_hits() {
+        let (ds, assign, inv) = fixture();
+        let mut rng = Rng::seed_from_u64(6);
+        let params = GcnParams::init(ds.feature_dim(), 8, ds.num_classes, 2, &mut rng);
+        let mut sh =
+            ShardEngine::build(&ds.graph, &ds.features, &inv, &assign, 0, 2, &ServeConfig::default());
+        let q: Vec<u32> = (0..sh.len().min(4) as u32).collect();
+        let first = sh.serve(&params, &q, true);
+        assert_eq!(first.cached_hits, 0);
+        assert!(first.rows_recomputed > 0);
+        let second = sh.serve(&params, &q, true);
+        assert_eq!(second.cached_hits, q.len());
+        assert_eq!(second.rows_recomputed, 0);
+        assert_eq!(first.preds, second.preds);
+    }
+
+    #[test]
+    fn disabled_cache_never_reuses() {
+        let (ds, assign, inv) = fixture();
+        let mut rng = Rng::seed_from_u64(7);
+        let params = GcnParams::init(ds.feature_dim(), 8, ds.num_classes, 2, &mut rng);
+        let cfg = ServeConfig { cache: false, ..Default::default() };
+        let mut sh = ShardEngine::build(&ds.graph, &ds.features, &inv, &assign, 0, 2, &cfg);
+        let q = vec![0u32];
+        let a = sh.serve(&params, &q, true);
+        let b = sh.serve(&params, &q, true);
+        assert_eq!(b.cached_hits, 0);
+        assert_eq!(a.rows_recomputed, b.rows_recomputed);
+        assert_eq!(a.preds, b.preds);
+    }
+}

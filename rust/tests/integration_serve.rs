@@ -1,0 +1,265 @@
+//! Serving correctness: the degenerate deployment must reproduce the
+//! training-time forward bit-for-bit, exact-halo sharding must not
+//! change a single answer, and the delta-invalidation path must be
+//! indistinguishable from a from-scratch recompute.
+
+use gad::augment::plain_part;
+use gad::backend::{Backend, NativeBackend};
+use gad::coordinator::{batch_from_subgraph, train_gad, TrainConfig};
+use gad::datasets::{Dataset, SyntheticSpec};
+use gad::model::{checkpoint, GcnParams};
+use gad::proptest_util::forall;
+use gad::rng::Rng;
+use gad::serve::{
+    run_serving_bench, GraphDelta, HaloPolicy, ServeConfig, Server, ServingBenchConfig,
+};
+
+/// The training-time full-graph forward — the oracle every serving
+/// configuration is measured against.
+fn native_preds(ds: &Dataset, params: &GcnParams) -> Vec<u32> {
+    let assignment = vec![0u32; ds.num_nodes()];
+    let aug = plain_part(&ds.graph, &assignment, 0);
+    let batch = batch_from_subgraph(ds, &aug, 0);
+    NativeBackend::new().predict(&batch, params).expect("native forward")
+}
+
+fn fixture(seed: u64, layers: usize) -> (Dataset, GcnParams) {
+    let ds = SyntheticSpec::tiny().generate(seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0xBEEF);
+    let params = GcnParams::init(ds.feature_dim(), 16, ds.num_classes, layers, &mut rng);
+    (ds, params)
+}
+
+fn all_nodes(ds: &Dataset) -> Vec<u32> {
+    (0..ds.num_nodes() as u32).collect()
+}
+
+#[test]
+fn degenerate_config_is_bit_identical_to_training_forward() {
+    // single shard, no cache, no pruning: the serving pipeline reduced
+    // to "run the model" — must agree with the trainer's forward on
+    // every node, bit for bit
+    let (ds, params) = fixture(1, 2);
+    let oracle = native_preds(&ds, &params);
+    let cfg = ServeConfig { shards: 1, cache: false, pruned: false, ..Default::default() };
+    let mut srv = Server::for_dataset(&ds, params.clone(), cfg).unwrap();
+    let res = srv.query_batch(&all_nodes(&ds)).unwrap();
+    let preds: Vec<u32> = res.iter().map(|r| r.pred).collect();
+    assert_eq!(preds, oracle);
+    // the full feature set on (cache + pruning) must not change a bit
+    let mut srv2 = Server::for_dataset(&ds, params, ServeConfig { shards: 1, ..Default::default() })
+        .unwrap();
+    let res2 = srv2.query_batch(&all_nodes(&ds)).unwrap();
+    for (a, b) in res.iter().zip(&res2) {
+        assert_eq!(a.pred, b.pred);
+        assert_eq!(
+            a.probs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.probs.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn exact_halo_sharding_matches_full_graph_forward() {
+    // the tentpole claim: with complete L-hop halos and global-degree
+    // normalization, every shard-local answer equals the full-graph
+    // forward exactly — zero cross-shard fetches, zero approximation
+    for layers in [1usize, 2, 3] {
+        let (ds, params) = fixture(2 + layers as u64, layers);
+        let oracle = native_preds(&ds, &params);
+        for shards in [2usize, 4, 7] {
+            let cfg = ServeConfig { shards, halo: HaloPolicy::Exact, ..Default::default() };
+            let mut srv = Server::for_dataset(&ds, params.clone(), cfg).unwrap();
+            let preds: Vec<u32> =
+                srv.query_batch(&all_nodes(&ds)).unwrap().iter().map(|r| r.pred).collect();
+            assert_eq!(preds, oracle, "layers={layers} shards={shards}");
+        }
+    }
+}
+
+#[test]
+fn budgeted_halo_is_approximate_but_mostly_agrees() {
+    let (ds, params) = fixture(9, 2);
+    let oracle = native_preds(&ds, &params);
+    let cfg = ServeConfig {
+        shards: 4,
+        halo: HaloPolicy::Budgeted { alpha: 0.05 },
+        ..Default::default()
+    };
+    let mut srv = Server::for_dataset(&ds, params, cfg).unwrap();
+    let preds: Vec<u32> =
+        srv.query_batch(&all_nodes(&ds)).unwrap().iter().map(|r| r.pred).collect();
+    let agree = preds.iter().zip(&oracle).filter(|(a, b)| a == b).count();
+    // the truncated halo only perturbs boundary neighbourhoods
+    assert!(
+        agree as f64 >= 0.7 * oracle.len() as f64,
+        "budgeted halo agreement {agree}/{}",
+        oracle.len()
+    );
+}
+
+#[test]
+fn batching_cannot_change_answers() {
+    let (ds, params) = fixture(4, 2);
+    let cfg = ServeConfig::default();
+    let mut batched = Server::for_dataset(&ds, params.clone(), cfg.clone()).unwrap();
+    let mut single = Server::for_dataset(&ds, params, cfg).unwrap();
+    let nodes: Vec<u32> = (0..60).map(|i| (i * 7) % ds.num_nodes() as u32).collect();
+    let res = batched.query_batch(&nodes).unwrap();
+    for (r, &v) in res.iter().zip(&nodes) {
+        let s = single.query(v).unwrap();
+        assert_eq!(r.pred, s.pred);
+        assert_eq!(
+            r.probs.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            s.probs.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "node {v}: micro-batching changed the numerics"
+        );
+    }
+}
+
+#[test]
+fn warm_cache_serves_identical_results() {
+    let (ds, params) = fixture(5, 3);
+    let mut srv = Server::for_dataset(&ds, params, ServeConfig::default()).unwrap();
+    let nodes = all_nodes(&ds);
+    let cold = srv.query_batch(&nodes).unwrap();
+    let warm = srv.query_batch(&nodes).unwrap();
+    let mut hits = 0usize;
+    for (c, w) in cold.iter().zip(&warm) {
+        assert_eq!(c.pred, w.pred);
+        assert_eq!(
+            c.probs.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            w.probs.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        hits += w.cache_hit as usize;
+    }
+    assert_eq!(hits, nodes.len(), "second pass must be all cache hits");
+    assert_eq!(srv.stats().cache_hits as usize, nodes.len());
+}
+
+/// Random online mutations: the cached server's post-delta answers must
+/// be bit-identical to a server built from scratch on the mutated
+/// graph — delta invalidation may never save a stale row.
+#[test]
+fn delta_invalidation_matches_from_scratch_recompute() {
+    forall("delta == fresh rebuild", 6, |rng| {
+        let seed = rng.next_u64() % 1_000;
+        let ds = SyntheticSpec::tiny().generate(seed);
+        let mut prng = Rng::seed_from_u64(seed ^ 0xD1);
+        let params = GcnParams::init(ds.feature_dim(), 12, ds.num_classes, 2, &mut prng);
+        let n = ds.num_nodes();
+
+        // random delta: a few adds, removes and feature rewrites
+        let edges: Vec<(u32, u32)> = ds.graph.edges().collect();
+        let added: Vec<(u32, u32)> = (0..1 + rng.gen_range(3))
+            .filter_map(|_| {
+                let u = rng.gen_range(n) as u32;
+                let v = rng.gen_range(n) as u32;
+                (u != v).then_some((u, v))
+            })
+            .collect();
+        let removed: Vec<(u32, u32)> =
+            (0..1 + rng.gen_range(3)).map(|_| *rng.choose(&edges)).collect();
+        let updated: Vec<(u32, Vec<f32>)> = (0..rng.gen_range(3))
+            .map(|_| {
+                let v = rng.gen_range(n) as u32;
+                let row: Vec<f32> =
+                    (0..ds.feature_dim()).map(|_| (rng.gen_f32() - 0.5) * 2.0).collect();
+                (v, row)
+            })
+            .collect();
+        let delta = GraphDelta {
+            added_edges: added,
+            removed_edges: removed,
+            updated_features: updated,
+        };
+
+        // cached server: warm on the old graph, then mutate
+        let cfg = ServeConfig { shards: 3, seed: 7, ..Default::default() };
+        let mut cached = Server::for_dataset(&ds, params.clone(), cfg.clone())
+            .map_err(|e| format!("build: {e:#}"))?;
+        let nodes: Vec<u32> = (0..n as u32).collect();
+        cached.query_batch(&nodes).map_err(|e| format!("warm: {e:#}"))?;
+        let rep = cached.apply_delta(&delta).map_err(|e| format!("delta: {e:#}"))?;
+        let after = cached.query_batch(&nodes).map_err(|e| format!("requery: {e:#}"))?;
+
+        // oracle 1: a server that never saw the old graph
+        let mut ds2 = ds.clone();
+        ds2.graph = delta.apply_to(&ds.graph);
+        for (v, row) in &delta.updated_features {
+            ds2.features.row_mut(*v as usize).copy_from_slice(row);
+        }
+        let mut fresh = Server::for_dataset(&ds2, params.clone(), cfg)
+            .map_err(|e| format!("fresh build: {e:#}"))?;
+        let scratch = fresh.query_batch(&nodes).map_err(|e| format!("fresh query: {e:#}"))?;
+
+        for (a, b) in after.iter().zip(&scratch) {
+            if a.pred != b.pred
+                || a.probs.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                    != b.probs.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            {
+                return Err(format!(
+                    "node {}: cached-after-delta != from-scratch (v{}, {} rows invalidated)",
+                    a.node, rep.graph_version, rep.rows_invalidated
+                ));
+            }
+        }
+
+        // oracle 2: the full-graph training forward on the mutated data
+        let oracle = native_preds(&ds2, &params);
+        for (a, want) in after.iter().zip(&oracle) {
+            if a.pred != *want {
+                return Err(format!("node {}: delta'd server diverged from oracle", a.node));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn checkpoint_to_serving_pipeline() {
+    // the end-to-end path the CLI and example walk: train briefly,
+    // checkpoint, reload validated, serve
+    let ds = SyntheticSpec::tiny().generate(21);
+    let cfg = TrainConfig {
+        partitions: 4,
+        workers: 2,
+        layers: 2,
+        hidden: 24,
+        epochs: 4,
+        seed: 21,
+        ..Default::default()
+    };
+    let report = train_gad(&ds, &cfg).unwrap();
+    let params = report.final_params.expect("harvested params");
+    let path = std::env::temp_dir().join("gad_serve_pipeline_test.ckpt");
+    checkpoint::save(&params, &path).unwrap();
+    let loaded = checkpoint::load_validated(&path, ds.feature_dim(), ds.num_classes).unwrap();
+    // wrong deployment dims must fail cleanly, not serve garbage
+    assert!(checkpoint::load_validated(&path, ds.feature_dim() + 1, ds.num_classes).is_err());
+    std::fs::remove_file(&path).ok();
+
+    let mut srv = Server::for_dataset(&ds, loaded, ServeConfig::default()).unwrap();
+    let res = srv.query(0).unwrap();
+    assert!((res.probs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    // and the served answers are still the training forward's answers
+    let oracle = native_preds(&ds, srv.params());
+    let preds: Vec<u32> =
+        srv.query_batch(&all_nodes(&ds)).unwrap().iter().map(|r| r.pred).collect();
+    assert_eq!(preds, oracle);
+}
+
+#[test]
+fn cached_microbatched_serving_beats_unsharded_pernode() {
+    // the Fig-11 acceptance criterion, at test scale: steady-state
+    // cached serving must out-QPS the naive per-node full forward by a
+    // wide margin (cache hit = row gather + softmax; baseline = full
+    // L-layer forward over the whole graph, per query)
+    let (ds, params) = fixture(30, 2);
+    let cfg = ServingBenchConfig { shards: 4, queries: 120, batch: 16, ..Default::default() };
+    let rep = run_serving_bench(&ds, &params, &cfg).unwrap();
+    let speedup = rep.cached_speedup_vs_baseline().expect("both modes ran");
+    assert!(speedup > 1.0, "cached QPS must beat the baseline (got {speedup:.2}x)");
+    let md = rep.to_markdown();
+    assert!(md.contains("cached-sharded") && md.contains("cold-sharded"));
+}

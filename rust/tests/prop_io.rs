@@ -1,0 +1,88 @@
+//! Persistence properties: GADB dataset files and GADCKPT checkpoints
+//! must round-trip losslessly — including split masks, sparse feature
+//! encoding, and exact f32 bit patterns.
+
+use gad::datasets::{io, Dataset, Split};
+use gad::graph::GraphBuilder;
+use gad::model::{checkpoint, GcnParams};
+use gad::proptest_util::{arb_graph, forall};
+use gad::tensor::Matrix;
+
+#[test]
+fn gadb_roundtrip_is_identity() {
+    forall("to_gadb -> from_gadb is the identity", 40, |rng| {
+        let (n, edges) = arb_graph(rng, 2, 40, 0.15);
+        let classes = 1 + rng.gen_range(5);
+        let f = 1 + rng.gen_range(12);
+        // sparse-ish features with negative / fractional values so the
+        // index:value encoding and float formatting are both exercised
+        let mut features = Matrix::zeros(n, f);
+        for i in 0..n {
+            for j in 0..f {
+                if rng.gen_bool(0.3) {
+                    features[(i, j)] = (rng.gen_f32() - 0.5) * 100.0;
+                }
+            }
+        }
+        let labels: Vec<u32> = (0..n).map(|_| rng.gen_range(classes) as u32).collect();
+        let split = Split::random(n, 0.5, 0.2, rng);
+        let ds = Dataset {
+            name: format!("prop {n}"),
+            graph: GraphBuilder::new(n).edges(&edges).build(),
+            features,
+            labels,
+            num_classes: classes,
+            split,
+        };
+
+        let back = io::from_gadb(&io::to_gadb(&ds)).map_err(|e| format!("parse: {e:#}"))?;
+        back.validate().map_err(|e| format!("validate: {e}"))?;
+        if back.name != ds.name {
+            return Err(format!("name: '{}' != '{}'", back.name, ds.name));
+        }
+        if back.graph != ds.graph {
+            return Err("graph differs".into());
+        }
+        if back.labels != ds.labels || back.num_classes != ds.num_classes {
+            return Err("labels differ".into());
+        }
+        let bits = |m: &Matrix| m.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        if bits(&back.features) != bits(&ds.features) {
+            return Err("features not bit-identical".into());
+        }
+        if back.split.train != ds.split.train
+            || back.split.val != ds.split.val
+            || back.split.test != ds.split.test
+        {
+            return Err("split masks differ".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn checkpoint_roundtrip_is_identity() {
+    forall("to_text -> from_text is the identity", 30, |rng| {
+        let f = 1 + rng.gen_range(20);
+        let h = 1 + rng.gen_range(16);
+        let c = 2 + rng.gen_range(6);
+        let layers = 1 + rng.gen_range(4);
+        let params = GcnParams::init(f, h, c, layers, rng);
+        let back = checkpoint::from_text(&checkpoint::to_text(&params))
+            .map_err(|e| format!("parse: {e:#}"))?;
+        if back.layers() != params.layers() {
+            return Err("layer count differs".into());
+        }
+        for (a, b) in params.ws.iter().zip(&back.ws) {
+            if (a.rows, a.cols) != (b.rows, b.cols) {
+                return Err("shape differs".into());
+            }
+            let ab: Vec<u32> = a.data().iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.data().iter().map(|v| v.to_bits()).collect();
+            if ab != bb {
+                return Err("weights not bit-identical".into());
+            }
+        }
+        Ok(())
+    });
+}
