@@ -65,19 +65,21 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // 5. mutate the graph online: edge churn + a feature update
+    // 5. mutate the graph online: edge churn + a feature update —
+    //    spliced through the overlay CSR in O(Δ), no global rebuild
     let delta = GraphDelta {
         added_edges: vec![(0, 42)],
-        removed_edges: vec![],
         updated_features: vec![(7, vec![0.25; dataset.feature_dim()])],
+        ..GraphDelta::default()
     };
     let rep = server.apply_delta(&delta)?;
     println!(
-        "delta applied: version {}, {} seed nodes, {} cached rows invalidated, {:.1} KB propagated",
+        "delta applied: version {}, {} seed nodes, {} cached rows invalidated, {:.1} KB propagated, {} shard(s) re-induced",
         rep.graph_version,
         rep.seeds,
         rep.rows_invalidated,
-        rep.serving_bytes as f64 / 1e3
+        rep.serving_bytes as f64 / 1e3,
+        rep.shards_rebuilt,
     );
 
     // 6. re-query: touched nodes recompute, untouched ones still hit
@@ -89,10 +91,34 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // 7. elastic membership: grow and shrink the deployment online
+    let newcomer = GraphDelta {
+        added_nodes: vec![gad::serve::NewNode {
+            features: vec![0.1; dataset.feature_dim()],
+            edges: vec![0, 42],
+        }],
+        ..GraphDelta::default()
+    };
+    let rep = server.apply_delta(&newcomer)?;
+    let new_id = (server.num_nodes() - 1) as u32;
+    let answer = server.query(new_id)?;
+    println!(
+        "node {new_id} joined online (v{}, homed on shard {}), class {}",
+        rep.graph_version, answer.shard, answer.pred
+    );
+    server.apply_delta(&GraphDelta { removed_nodes: vec![new_id], ..GraphDelta::default() })?;
+    println!("node {new_id} retired online: query now errors = {}", server.query(new_id).is_err());
+
     let st = server.stats();
     println!(
-        "totals: {} queries / {} micro-batches, {} cache hits, {} rows recomputed, serving traffic {:.2} MB",
-        st.queries, st.micro_batches, st.cache_hits, st.rows_recomputed, st.comm.serving_mb()
+        "totals: {} queries / {} micro-batches, {} cache hits, {} rows recomputed, +{} / -{} nodes, serving traffic {:.2} MB",
+        st.queries,
+        st.micro_batches,
+        st.cache_hits,
+        st.rows_recomputed,
+        st.nodes_added,
+        st.nodes_removed,
+        st.comm.serving_mb()
     );
     std::fs::remove_file(&path).ok();
     Ok(())

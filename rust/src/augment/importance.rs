@@ -10,7 +10,7 @@
 //! error formula `n = (z_c σ / (x̄ E))²` (Eq. 4).
 
 use super::AugmentConfig;
-use crate::graph::{avg_degree, boundary_nodes, Csr};
+use crate::graph::{avg_degree, boundary_nodes, GraphView};
 use crate::rng::Rng;
 use std::collections::HashMap;
 
@@ -36,7 +36,7 @@ impl ImportanceReport {
 }
 
 /// One uniform random walk of `len` steps starting at `start`.
-fn random_walk(graph: &Csr, start: u32, len: usize, rng: &mut Rng) -> Vec<u32> {
+fn random_walk<G: GraphView>(graph: &G, start: u32, len: usize, rng: &mut Rng) -> Vec<u32> {
     let mut seq = Vec::with_capacity(len + 1);
     seq.push(start);
     let mut cur = start as usize;
@@ -52,8 +52,8 @@ fn random_walk(graph: &Csr, start: u32, len: usize, rng: &mut Rng) -> Vec<u32> {
 }
 
 /// Estimate `I(v)` for each node of `candidates` (Eq. 3).
-pub fn walk_importance(
-    graph: &Csr,
+pub fn walk_importance<G: GraphView>(
+    graph: &G,
     assignment: &[u32],
     part: u32,
     candidates: &[u32],
@@ -133,7 +133,7 @@ pub fn walk_importance(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{candidate_replication_nodes, GraphBuilder};
+    use crate::graph::{candidate_replication_nodes, Csr, GraphBuilder};
 
     /// Star of remote nodes behind a single boundary: 0,1 local (part 0),
     /// 2 remote hub, 3..6 remote leaves. Hub must dominate importance.

@@ -18,7 +18,7 @@ mod select;
 pub use importance::{walk_importance, ImportanceReport};
 pub use select::select_replicas;
 
-use crate::graph::{candidate_replication_nodes, Csr, Subgraph};
+use crate::graph::{candidate_replication_nodes, GraphView, Subgraph};
 use crate::rng::Rng;
 
 /// Tunables for augmentation.
@@ -78,8 +78,8 @@ impl AugmentedSubgraph {
 }
 
 /// Augment one part of `assignment` per Algorithm 1.
-pub fn augment_part(
-    graph: &Csr,
+pub fn augment_part<G: GraphView>(
+    graph: &G,
     assignment: &[u32],
     part: u32,
     cfg: &AugmentConfig,
@@ -114,7 +114,12 @@ pub fn augment_part(
 }
 
 /// Augment every part; returns one [`AugmentedSubgraph`] per part.
-pub fn augment_all(graph: &Csr, assignment: &[u32], k: usize, cfg: &AugmentConfig) -> Vec<AugmentedSubgraph> {
+pub fn augment_all<G: GraphView>(
+    graph: &G,
+    assignment: &[u32],
+    k: usize,
+    cfg: &AugmentConfig,
+) -> Vec<AugmentedSubgraph> {
     (0..k as u32)
         .map(|p| augment_part(graph, assignment, p, cfg))
         .collect()
@@ -122,7 +127,7 @@ pub fn augment_all(graph: &Csr, assignment: &[u32], k: usize, cfg: &AugmentConfi
 
 /// A non-augmented part wrapped in the same type (replicas empty) so
 /// the trainer can run either mode through one code path.
-pub fn plain_part(graph: &Csr, assignment: &[u32], part: u32) -> AugmentedSubgraph {
+pub fn plain_part<G: GraphView>(graph: &G, assignment: &[u32], part: u32) -> AugmentedSubgraph {
     let base_nodes: Vec<u32> = (0..graph.num_nodes() as u32)
         .filter(|&v| assignment[v as usize] == part)
         .collect();
@@ -142,6 +147,7 @@ pub fn plain_part(graph: &Csr, assignment: &[u32], part: u32) -> AugmentedSubgra
 mod tests {
     use super::*;
     use crate::datasets::SyntheticSpec;
+    use crate::graph::Csr;
     use crate::partition::{partition, PartitionConfig};
 
     fn fixture() -> (Csr, Vec<u32>) {

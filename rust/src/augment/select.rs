@@ -10,11 +10,11 @@
 
 use super::importance::ImportanceReport;
 use super::AugmentConfig;
-use crate::graph::{density, Csr, Subgraph};
+use crate::graph::{density, GraphView, Subgraph};
 use std::collections::HashSet;
 
 /// Replication budget `n(g)` of Eq. 6 for a part with `base_nodes`.
-pub fn replication_budget(graph: &Csr, base_nodes: &[u32], alpha: f64) -> usize {
+pub fn replication_budget<G: GraphView>(graph: &G, base_nodes: &[u32], alpha: f64) -> usize {
     let sub = Subgraph::induce(graph, base_nodes);
     let d = density(&sub.csr);
     (alpha * (1.0 + d) * base_nodes.len() as f64).ceil() as usize
@@ -24,8 +24,8 @@ pub fn replication_budget(graph: &Csr, base_nodes: &[u32], alpha: f64) -> usize 
 /// global ids, at most `budget (+ one final walk's overshoot)` — the
 /// paper fills until `|v'| = n(g)`, we stop the moment the budget is
 /// met mid-walk, so the bound is exact.
-pub fn select_replicas(
-    graph: &Csr,
+pub fn select_replicas<G: GraphView>(
+    graph: &G,
     base_nodes: &[u32],
     candidates: &[u32],
     report: &ImportanceReport,

@@ -526,16 +526,20 @@ pub fn ablation(args: &Args, opts: &RunOpts) -> Result<()> {
 }
 
 // --------------------------------------------------------------------
-// Fig 11 (ours): serving latency
+// Fig 11 (ours): serving latency · Fig 12 (ours): serving under churn
 // --------------------------------------------------------------------
 
 /// The full serving pipeline as one command: train briefly, checkpoint,
 /// reload with dimension validation, then benchmark the three serving
 /// modes (naive unsharded per-node, cold sharded, cached sharded) on a
-/// shared random query stream.
+/// shared random query stream (Fig 11), followed by the high-churn
+/// scenario — interleaved delta streams at increasing rates, the
+/// incremental overlay path vs per-delta rebuild (Fig 12).
 pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
     use crate::model::checkpoint;
-    use crate::serve::{run_serving_bench, HaloPolicy, ServingBenchConfig};
+    use crate::serve::{
+        run_churn_bench, run_serving_bench, ChurnBenchConfig, HaloPolicy, ServingBenchConfig,
+    };
 
     let name = args.get("dataset", "cora");
     let ds = load(name, opts)?;
@@ -568,6 +572,8 @@ pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
         } else {
             HaloPolicy::Exact
         },
+        cache_budget_bytes: (args.get_f64("cache-budget-mb", 0.0)? * 1e6) as u64,
+        gather_missing: args.has("gather"),
         seed: opts.seed,
     };
     let rep = run_serving_bench(&ds, &params, &bcfg)?;
@@ -581,6 +587,28 @@ pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
     println!("{md}");
     write_result_file(&format!("{}/fig11_serving_latency.md", opts.out_dir), &md)?;
     write_result_file(&format!("{}/fig11_serving_latency.csv", opts.out_dir), &rep.to_csv())?;
+
+    // 4. churn benchmark: deltas/sec and query p99 as the graph mutates
+    //    under load, incremental overlay splicing vs per-delta rebuild
+    let ccfg = ChurnBenchConfig {
+        shards: bcfg.shards,
+        rounds: args.get_usize("churn-rounds", if opts.fast { 3 } else { 6 })?,
+        queries_per_round: args.get_usize("churn-queries", if opts.fast { 64 } else { 192 })?,
+        batch: bcfg.batch,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let crep = run_churn_bench(&ds, &params, &ccfg)?;
+    let md = format!(
+        "## Fig 12 — serving under churn ({name}, k={}, {} rounds x {} queries)\n\n{}",
+        ccfg.shards,
+        ccfg.rounds,
+        ccfg.queries_per_round,
+        crep.to_markdown()
+    );
+    println!("{md}");
+    write_result_file(&format!("{}/fig12_churn.md", opts.out_dir), &md)?;
+    write_result_file(&format!("{}/fig12_churn.csv", opts.out_dir), &crep.to_csv())?;
     Ok(())
 }
 

@@ -163,7 +163,9 @@ commands
   fig8        loss convergence vs partition count, aug on/off
   fig9        weighted vs plain consensus loss curves
   serve-bench train -> checkpoint -> serve: p50/p99 latency + QPS for
-              cached / cold / unsharded serving (Fig 11, ours)
+              cached / cold / unsharded serving (Fig 11, ours), then
+              deltas/sec + p99 under churn, incremental vs rebuild
+              (Fig 12, ours)
   ablate      design-choice ablations (+ crash-fault run)
   all         everything above into --out-dir
 
@@ -192,6 +194,12 @@ serve-bench flags
   --halo-alpha F > 0 switches the halo to Algorithm 1's budgeted
                  replicas; 0 = exact L-hop halo (default). Distinct
                  from --alpha, the training augmentation coefficient
+  --gather       budgeted halos answer exactly by gathering missing
+                 rows from their home shards (bytes accounted)
+  --cache-budget-mb F  per-shard cap on retained cache rows; evicts
+                 lowest Monte-Carlo importance I(v) first (0 = off)
+  --churn-rounds N   Fig 12 rounds per churn rate (default 6; 3 fast)
+  --churn-queries N  Fig 12 queries per round (default 192; 64 fast)
 ";
 
 #[cfg(test)]

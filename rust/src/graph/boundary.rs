@@ -7,10 +7,11 @@
 //! the part — exactly the remote nodes a distributed GCN would have to
 //! fetch during training.
 
-use super::Csr;
+use super::GraphView;
+use std::collections::HashMap;
 
 /// Nodes of part `part` that have at least one cross-part edge.
-pub fn boundary_nodes(graph: &Csr, assignment: &[u32], part: u32) -> Vec<u32> {
+pub fn boundary_nodes<G: GraphView>(graph: &G, assignment: &[u32], part: u32) -> Vec<u32> {
     let mut out = Vec::new();
     for v in 0..graph.num_nodes() {
         if assignment[v] != part {
@@ -30,7 +31,7 @@ pub fn boundary_nodes(graph: &Csr, assignment: &[u32], part: u32) -> Vec<u32> {
 /// Bounded multi-source BFS: hop distance (≤ `max_hops`) from the
 /// nearest seed, `u32::MAX` beyond. Shared by candidate-replication
 /// discovery and the serving tier's delta-invalidation footprint.
-pub fn bounded_bfs_distances(graph: &Csr, seeds: &[u32], max_hops: usize) -> Vec<u32> {
+pub fn bounded_bfs_distances<G: GraphView>(graph: &G, seeds: &[u32], max_hops: usize) -> Vec<u32> {
     let n = graph.num_nodes();
     let mut dist = vec![u32::MAX; n];
     let mut frontier: Vec<u32> = Vec::new();
@@ -58,20 +59,73 @@ pub fn bounded_bfs_distances(graph: &Csr, seeds: &[u32], max_hops: usize) -> Vec
     dist
 }
 
+/// Sparse bounded multi-source BFS: hop distance (≤ `max_hops`) from
+/// the nearest seed for every *reached* node only. Memory and time are
+/// proportional to the visited region, not the graph — the form the
+/// serving tier's delta path uses so a small delta never allocates
+/// O(V) state. Unreached nodes are simply absent.
+pub fn bounded_bfs_distances_sparse<G: GraphView>(
+    graph: &G,
+    seeds: &[u32],
+    max_hops: usize,
+) -> HashMap<u32, u32> {
+    let mut dist: HashMap<u32, u32> = HashMap::new();
+    let mut frontier: Vec<u32> = Vec::new();
+    for &s in seeds {
+        if !dist.contains_key(&s) {
+            dist.insert(s, 0);
+            frontier.push(s);
+        }
+    }
+    for d in 1..=max_hops as u32 {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for &t in graph.neighbors(v as usize) {
+                if !dist.contains_key(&t) {
+                    dist.insert(t, d);
+                    next.push(t);
+                }
+            }
+        }
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    dist
+}
+
 /// `C(g_part)`: all nodes outside `part` reachable within `hops` edges
 /// from the part's boundary nodes (paths may pass through any node).
 /// Returned sorted.
-pub fn candidate_replication_nodes(
-    graph: &Csr,
+pub fn candidate_replication_nodes<G: GraphView>(
+    graph: &G,
     assignment: &[u32],
     part: u32,
     hops: usize,
 ) -> Vec<u32> {
     let seeds = boundary_nodes(graph, assignment, part);
-    let dist = bounded_bfs_distances(graph, &seeds, hops);
-    (0..graph.num_nodes() as u32)
-        .filter(|&v| dist[v as usize] != u32::MAX && assignment[v as usize] != part)
-        .collect()
+    candidate_replication_from_boundary(graph, assignment, &seeds, part, hops)
+}
+
+/// [`candidate_replication_nodes`] with a caller-supplied boundary set —
+/// the serving tier maintains per-shard boundaries incrementally under
+/// churn, so halo recomputation after a [`GraphDelta`] needs no
+/// full-part rescan, only the bounded BFS from the (updated) boundary.
+///
+/// [`GraphDelta`]: crate::serve::GraphDelta
+pub fn candidate_replication_from_boundary<G: GraphView>(
+    graph: &G,
+    assignment: &[u32],
+    boundary: &[u32],
+    part: u32,
+    hops: usize,
+) -> Vec<u32> {
+    let dist = bounded_bfs_distances_sparse(graph, boundary, hops);
+    let mut out: Vec<u32> =
+        dist.into_keys().filter(|&v| assignment[v as usize] != part).collect();
+    out.sort_unstable();
+    out
 }
 
 #[cfg(test)]
@@ -108,6 +162,21 @@ mod tests {
         let a = vec![0, 0, 1, 1];
         assert!(boundary_nodes(&g, &a, 0).is_empty());
         assert!(candidate_replication_nodes(&g, &a, 0, 3).is_empty());
+    }
+
+    #[test]
+    fn sparse_bfs_matches_dense() {
+        let (g, _) = path6();
+        let dense = bounded_bfs_distances(&g, &[0, 3], 2);
+        let sparse = bounded_bfs_distances_sparse(&g, &[0, 3], 2);
+        for (v, &d) in dense.iter().enumerate() {
+            assert_eq!(
+                sparse.get(&(v as u32)).copied().unwrap_or(u32::MAX),
+                d,
+                "node {v}"
+            );
+        }
+        assert_eq!(sparse.len(), dense.iter().filter(|&&d| d != u32::MAX).count());
     }
 
     #[test]

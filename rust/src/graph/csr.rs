@@ -1,5 +1,7 @@
 //! Compressed-sparse-row undirected graph.
 
+use super::GraphView;
+
 /// An undirected graph in CSR form. Every edge `{u,v}` is stored in both
 /// adjacency lists; `num_edges()` reports undirected edge count.
 #[derive(Clone, Debug, PartialEq)]
@@ -116,6 +118,30 @@ impl Csr {
             }
         }
         Ok(())
+    }
+}
+
+/// The flat snapshot trivially implements the shared read surface
+/// (delegating to the inherent methods, which stay the fast path).
+impl GraphView for Csr {
+    fn num_nodes(&self) -> usize {
+        Csr::num_nodes(self)
+    }
+
+    fn degree(&self, v: usize) -> usize {
+        Csr::degree(self, v)
+    }
+
+    fn neighbors(&self, v: usize) -> &[u32] {
+        Csr::neighbors(self, v)
+    }
+
+    fn num_edges(&self) -> usize {
+        Csr::num_edges(self)
+    }
+
+    fn has_edge(&self, u: usize, v: usize) -> bool {
+        Csr::has_edge(self, u, v)
     }
 }
 

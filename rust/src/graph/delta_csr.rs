@@ -1,0 +1,356 @@
+//! Versioned delta-friendly adjacency: a flat [`Csr`] base plus
+//! per-node overlay rows, with batched compaction.
+//!
+//! The serving tier mutates the graph continuously (edge churn, online
+//! node insertion/removal). Rebuilding a flat CSR per
+//! [`GraphDelta`](crate::serve::GraphDelta) costs O(E); `DeltaCsr`
+//! instead keeps the last compacted snapshot as the *base* and stores a
+//! full merged neighbour row only for nodes that have diverged — so a
+//! delta costs O(Δ · deg) and reads stay `&[u32]` slices either way.
+//! Once the overlay grows past a threshold the whole thing is folded
+//! back into a fresh flat base (O(V+E), amortised over the many deltas
+//! that grew the overlay).
+//!
+//! Node ids are stable for the lifetime of the structure: an inserted
+//! node takes the next id (`num_nodes()` grows), a removed node is
+//! isolated (all incident edges dropped) and its id is never reused —
+//! exactly what the serving tier needs so caches, shard membership and
+//! query routing never have to renumber.
+
+use super::{Csr, GraphView};
+use std::collections::HashMap;
+
+/// See module docs.
+#[derive(Clone, Debug)]
+pub struct DeltaCsr {
+    /// Last compacted flat snapshot.
+    base: Csr,
+    /// Full merged (sorted) neighbour row per diverged node.
+    overlay: HashMap<u32, Vec<u32>>,
+    /// Nodes appended after the base snapshot (ids `base.num_nodes()..`).
+    extra_nodes: usize,
+    /// Directed arc count of the *current* graph (base ± overlay).
+    arcs: usize,
+    /// Sum of overlay row lengths — the compaction trigger metric.
+    overlay_arcs: usize,
+    /// Overlay arcs above which [`maybe_compact`](Self::maybe_compact)
+    /// folds into a fresh base.
+    threshold: usize,
+    /// Monotonic graph version, bumped once per applied delta batch.
+    version: u64,
+    /// Lifetime compaction count (diagnostics / benches).
+    compactions: u64,
+}
+
+impl DeltaCsr {
+    /// Wrap a flat snapshot with the default compaction threshold
+    /// (a quarter of the base arcs, at least 1024).
+    pub fn new(base: Csr) -> Self {
+        let t = (base.num_arcs() / 4).max(1024);
+        Self::with_threshold(base, t)
+    }
+
+    /// Wrap with an explicit overlay-arc compaction threshold (tests
+    /// use tiny thresholds to force compactions mid-sequence).
+    pub fn with_threshold(base: Csr, threshold: usize) -> Self {
+        let arcs = base.num_arcs();
+        DeltaCsr {
+            base,
+            overlay: HashMap::new(),
+            extra_nodes: 0,
+            arcs,
+            overlay_arcs: 0,
+            threshold: threshold.max(1),
+            version: 0,
+            compactions: 0,
+        }
+    }
+
+    /// Current graph version (bumped by [`bump_version`](Self::bump_version)).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Advance the version — the server calls this once per applied
+    /// delta batch; caches key their validity stamp off it.
+    pub fn bump_version(&mut self) {
+        self.version += 1;
+    }
+
+    /// Lifetime compaction count.
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    /// Diverged-row count (diagnostics).
+    pub fn overlay_rows(&self) -> usize {
+        self.overlay.len()
+    }
+
+    /// Sum of overlay row lengths (the compaction trigger metric).
+    pub fn overlay_arcs(&self) -> usize {
+        self.overlay_arcs
+    }
+
+    /// Number of stored directed arcs (2x undirected edges).
+    pub fn num_arcs(&self) -> usize {
+        self.arcs
+    }
+
+    /// Append a fresh isolated node; returns its id. Ids are assigned
+    /// densely and never reused.
+    pub fn add_node(&mut self) -> u32 {
+        let id = self.num_nodes() as u32;
+        self.extra_nodes += 1;
+        id
+    }
+
+    /// Insert (`insert = true`) or remove `b` in `a`'s row, copying the
+    /// base row into the overlay on first touch and maintaining the
+    /// overlay-arc counter. Caller guarantees the operation applies.
+    fn splice(&mut self, a: u32, b: u32, insert: bool) {
+        let base = &self.base;
+        let mut materialised = 0usize;
+        let row = self.overlay.entry(a).or_insert_with(|| {
+            let r: Vec<u32> = if (a as usize) < base.num_nodes() {
+                base.neighbors(a as usize).to_vec()
+            } else {
+                Vec::new()
+            };
+            materialised = r.len();
+            r
+        });
+        if insert {
+            let pos = row.binary_search(&b).unwrap_err();
+            row.insert(pos, b);
+            self.overlay_arcs += materialised + 1;
+        } else {
+            let pos = row.binary_search(&b).expect("edge present");
+            row.remove(pos);
+            self.overlay_arcs += materialised;
+            self.overlay_arcs -= 1;
+        }
+    }
+
+    /// Insert undirected edge `{u,v}`. Returns `false` (no-op) when the
+    /// edge already exists or `u == v`. O(deg(u) + deg(v)).
+    pub fn add_edge(&mut self, u: u32, v: u32) -> bool {
+        let n = self.num_nodes();
+        assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range (n={n})");
+        if u == v || GraphView::has_edge(self, u as usize, v as usize) {
+            return false;
+        }
+        self.splice(u, v, true);
+        self.splice(v, u, true);
+        self.arcs += 2;
+        true
+    }
+
+    /// Remove undirected edge `{u,v}`. Returns `false` (no-op) when the
+    /// edge is absent. O(deg(u) + deg(v)).
+    pub fn remove_edge(&mut self, u: u32, v: u32) -> bool {
+        let n = self.num_nodes();
+        assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range (n={n})");
+        if u == v || !GraphView::has_edge(self, u as usize, v as usize) {
+            return false;
+        }
+        self.splice(u, v, false);
+        self.splice(v, u, false);
+        self.arcs -= 2;
+        true
+    }
+
+    /// Drop every edge incident to `v` (online node removal keeps the
+    /// id, isolated). Returns the former neighbours.
+    pub fn isolate(&mut self, v: u32) -> Vec<u32> {
+        let nbrs = GraphView::neighbors(self, v as usize).to_vec();
+        for &t in &nbrs {
+            self.remove_edge(v, t);
+        }
+        nbrs
+    }
+
+    /// Fold the overlay into a fresh flat base when it has outgrown the
+    /// threshold (appended isolated nodes alone never trigger — they
+    /// carry no arcs). Returns whether a compaction ran.
+    pub fn maybe_compact(&mut self) -> bool {
+        if self.overlay_arcs <= self.threshold {
+            return false;
+        }
+        self.compact();
+        true
+    }
+
+    /// Unconditionally fold the overlay into a fresh flat base. O(V+E).
+    pub fn compact(&mut self) {
+        if self.overlay.is_empty() && self.extra_nodes == 0 {
+            return;
+        }
+        self.base = self.to_csr();
+        self.overlay.clear();
+        self.extra_nodes = 0;
+        self.overlay_arcs = 0;
+        self.compactions += 1;
+        debug_assert_eq!(self.base.num_arcs(), self.arcs);
+    }
+
+    /// Flatten into a standalone [`Csr`] (does not mutate; the oracle
+    /// path for property tests and the compaction workhorse).
+    pub fn to_csr(&self) -> Csr {
+        let n = self.num_nodes();
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + GraphView::degree(self, v);
+        }
+        let mut targets = vec![0u32; offsets[n]];
+        for v in 0..n {
+            let row = GraphView::neighbors(self, v);
+            targets[offsets[v]..offsets[v] + row.len()].copy_from_slice(row);
+        }
+        Csr::from_raw(offsets, targets)
+    }
+
+    /// Bytes held by base + overlay (memory accounting).
+    pub fn nbytes(&self) -> usize {
+        self.base.nbytes()
+            + self
+                .overlay
+                .values()
+                .map(|r| r.capacity() * std::mem::size_of::<u32>() + std::mem::size_of::<(u32, Vec<u32>)>())
+                .sum::<usize>()
+    }
+
+    /// Structural invariants across base and overlay (tests).
+    pub fn validate(&self) -> Result<(), String> {
+        let flat = self.to_csr();
+        flat.validate()?;
+        if flat.num_arcs() != self.arcs {
+            return Err(format!("arc counter {} != materialised {}", self.arcs, flat.num_arcs()));
+        }
+        let tracked: usize = self.overlay.values().map(|r| r.len()).sum();
+        if tracked != self.overlay_arcs {
+            return Err(format!("overlay_arcs {} != tracked {}", self.overlay_arcs, tracked));
+        }
+        Ok(())
+    }
+}
+
+impl GraphView for DeltaCsr {
+    fn num_nodes(&self) -> usize {
+        self.base.num_nodes() + self.extra_nodes
+    }
+
+    fn degree(&self, v: usize) -> usize {
+        match self.overlay.get(&(v as u32)) {
+            Some(row) => row.len(),
+            None if v < self.base.num_nodes() => self.base.degree(v),
+            None => 0,
+        }
+    }
+
+    fn neighbors(&self, v: usize) -> &[u32] {
+        match self.overlay.get(&(v as u32)) {
+            Some(row) => row,
+            None if v < self.base.num_nodes() => self.base.neighbors(v),
+            None => &[],
+        }
+    }
+
+    fn num_edges(&self) -> usize {
+        self.arcs / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn path5() -> Csr {
+        GraphBuilder::new(5).edges(&[(0, 1), (1, 2), (2, 3), (3, 4)]).build()
+    }
+
+    #[test]
+    fn reads_passthrough_before_any_delta() {
+        let base = path5();
+        let d = DeltaCsr::new(base.clone());
+        assert_eq!(GraphView::num_nodes(&d), 5);
+        assert_eq!(GraphView::num_edges(&d), 4);
+        for v in 0..5 {
+            assert_eq!(GraphView::neighbors(&d, v), base.neighbors(v));
+        }
+        assert_eq!(d.overlay_rows(), 0);
+    }
+
+    #[test]
+    fn add_remove_edge_roundtrip() {
+        let mut d = DeltaCsr::new(path5());
+        assert!(d.add_edge(0, 4));
+        assert!(!d.add_edge(4, 0), "duplicate (either orientation) is a no-op");
+        assert!(GraphView::has_edge(&d, 0, 4) && GraphView::has_edge(&d, 4, 0));
+        assert_eq!(GraphView::num_edges(&d), 5);
+        assert!(d.remove_edge(4, 0));
+        assert!(!d.remove_edge(0, 4), "absent edge is a no-op");
+        assert_eq!(GraphView::num_edges(&d), 4);
+        assert!(!d.add_edge(2, 2), "self loop rejected");
+        assert!(d.validate().is_ok());
+    }
+
+    #[test]
+    fn overlay_rows_stay_sorted() {
+        let mut d = DeltaCsr::new(path5());
+        d.add_edge(2, 0);
+        d.add_edge(2, 4);
+        let row = GraphView::neighbors(&d, 2);
+        assert_eq!(row, &[0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn added_nodes_and_isolation() {
+        let mut d = DeltaCsr::new(path5());
+        let v = d.add_node();
+        assert_eq!(v, 5);
+        assert_eq!(GraphView::degree(&d, 5), 0);
+        assert!(d.add_edge(5, 0));
+        assert!(d.add_edge(5, 3));
+        assert_eq!(GraphView::neighbors(&d, 5), &[0, 3]);
+        let dropped = d.isolate(5);
+        assert_eq!(dropped, vec![0, 3]);
+        assert_eq!(GraphView::degree(&d, 5), 0);
+        assert!(!GraphView::has_edge(&d, 0, 5));
+        assert!(d.validate().is_ok());
+    }
+
+    #[test]
+    fn compaction_preserves_graph_and_counts() {
+        let mut d = DeltaCsr::with_threshold(path5(), 2);
+        d.add_edge(0, 3);
+        d.add_edge(1, 4);
+        d.remove_edge(2, 3);
+        let before = d.to_csr();
+        assert!(d.maybe_compact(), "tiny threshold must trigger");
+        assert_eq!(d.compactions(), 1);
+        assert_eq!(d.overlay_rows(), 0);
+        assert_eq!(d.to_csr(), before);
+        assert!(d.validate().is_ok());
+    }
+
+    #[test]
+    fn to_csr_matches_builder_rebuild() {
+        let mut d = DeltaCsr::new(path5());
+        d.add_edge(0, 2);
+        d.remove_edge(0, 1);
+        let want = GraphBuilder::new(5).edges(&[(1, 2), (2, 3), (3, 4), (0, 2)]).build();
+        assert_eq!(d.to_csr(), want);
+    }
+
+    #[test]
+    fn version_is_explicit() {
+        let mut d = DeltaCsr::new(path5());
+        assert_eq!(d.version(), 0);
+        d.add_edge(0, 2);
+        assert_eq!(d.version(), 0, "edits alone don't advance the version");
+        d.bump_version();
+        assert_eq!(d.version(), 1);
+    }
+}

@@ -1,15 +1,29 @@
 //! Graph substrate: CSR storage, builders, subgraph extraction,
 //! boundary / candidate-replication sets (paper Def. 2), and the
 //! degree/density statistics the augmentation budget uses (Def. 3).
+//!
+//! Two adjacency representations sit behind one read surface
+//! ([`GraphView`]): the flat [`Csr`] snapshot (training, builds) and
+//! the versioned [`DeltaCsr`] overlay (serving under churn — O(Δ)
+//! edge/node mutations with batched compaction). Every algorithm in
+//! this module is generic over the trait, so BFS, induction and
+//! statistics run on either without flattening.
 
 mod boundary;
 mod builder;
 mod csr;
+mod delta_csr;
 mod stats;
 mod subgraph;
+mod view;
 
-pub use boundary::{bounded_bfs_distances, boundary_nodes, candidate_replication_nodes};
+pub use boundary::{
+    bounded_bfs_distances, bounded_bfs_distances_sparse, boundary_nodes,
+    candidate_replication_from_boundary, candidate_replication_nodes,
+};
 pub use builder::GraphBuilder;
 pub use csr::Csr;
+pub use delta_csr::DeltaCsr;
 pub use stats::{avg_degree, degree_histogram, density};
 pub use subgraph::Subgraph;
+pub use view::GraphView;

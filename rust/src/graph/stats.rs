@@ -1,10 +1,10 @@
 //! Degree / density statistics (paper Definition 3).
 
-use super::Csr;
+use super::GraphView;
 
 /// Graph density `2|E| / (|V| (|V|-1))` — Definition 3. Zero for
 /// graphs with fewer than two nodes.
-pub fn density(g: &Csr) -> f64 {
+pub fn density<G: GraphView>(g: &G) -> f64 {
     let n = g.num_nodes();
     if n < 2 {
         return 0.0;
@@ -14,7 +14,7 @@ pub fn density(g: &Csr) -> f64 {
 
 /// Mean degree over a node subset (used for Algorithm 1's pilot
 /// walk count `d * |B(g)|`).
-pub fn avg_degree(g: &Csr, nodes: &[u32]) -> f64 {
+pub fn avg_degree<G: GraphView>(g: &G, nodes: &[u32]) -> f64 {
     if nodes.is_empty() {
         return 0.0;
     }
@@ -22,7 +22,7 @@ pub fn avg_degree(g: &Csr, nodes: &[u32]) -> f64 {
 }
 
 /// Histogram of degrees (index = degree).
-pub fn degree_histogram(g: &Csr) -> Vec<usize> {
+pub fn degree_histogram<G: GraphView>(g: &G) -> Vec<usize> {
     let max_deg = (0..g.num_nodes()).map(|v| g.degree(v)).max().unwrap_or(0);
     let mut h = vec![0usize; max_deg + 1];
     for v in 0..g.num_nodes() {

@@ -1,6 +1,6 @@
 //! Induced subgraphs with global<->local id maps.
 
-use super::Csr;
+use super::{Csr, GraphView};
 use std::collections::HashMap;
 
 /// A node-induced subgraph of a parent graph. Local ids are dense
@@ -15,7 +15,9 @@ pub struct Subgraph {
 
 impl Subgraph {
     /// Induce the subgraph of `parent` on `nodes` (dedup + sorted).
-    pub fn induce(parent: &Csr, nodes: &[u32]) -> Subgraph {
+    /// Generic over [`GraphView`] so shards can re-induce straight off
+    /// the serving tier's overlay graph without flattening it first.
+    pub fn induce<G: GraphView>(parent: &G, nodes: &[u32]) -> Subgraph {
         let mut global_ids = nodes.to_vec();
         global_ids.sort_unstable();
         global_ids.dedup();

@@ -1,0 +1,46 @@
+//! Read-only adjacency access shared by flat and overlay graphs.
+
+/// The read surface every graph-consuming algorithm in this crate
+/// (BFS, subgraph induction, statistics, augmentation walks, serving)
+/// actually needs. Implemented by the flat [`Csr`](super::Csr)
+/// snapshot and by the versioned [`DeltaCsr`](super::DeltaCsr)
+/// overlay, so the same call sites run on either representation —
+/// the key to applying [`GraphDelta`](crate::serve::GraphDelta)s
+/// without rebuilding a flat CSR first.
+pub trait GraphView {
+    /// Number of nodes.
+    fn num_nodes(&self) -> usize;
+
+    /// Degree of `v`.
+    fn degree(&self, v: usize) -> usize;
+
+    /// Neighbours of `v`, strictly sorted ascending.
+    fn neighbors(&self, v: usize) -> &[u32];
+
+    /// Number of *undirected* edges.
+    fn num_edges(&self) -> usize;
+
+    /// True if `{u,v}` is an edge (binary search; lists are sorted).
+    fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.neighbors(u).binary_search(&(v as u32)).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DeltaCsr, GraphBuilder};
+
+    /// The same algorithm must run on both representations.
+    fn sum_two_hop<G: GraphView>(g: &G, v: usize) -> usize {
+        g.neighbors(v).iter().map(|&t| g.degree(t as usize)).sum()
+    }
+
+    #[test]
+    fn trait_object_agnostic_algorithms() {
+        let flat = GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3)]).build();
+        let overlay = DeltaCsr::new(flat.clone());
+        assert_eq!(sum_two_hop(&flat, 1), sum_two_hop(&overlay, 1));
+        assert!(flat.has_edge(1, 2) && GraphView::has_edge(&overlay, 1, 2));
+    }
+}

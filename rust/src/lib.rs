@@ -24,7 +24,12 @@
 //! Beyond training, [`serve`] turns a checkpoint into a partition-aware
 //! inference tier: halo-complete shards answer node-classification
 //! queries shard-locally through a versioned embedding cache with
-//! L-hop delta invalidation and per-shard micro-batching.
+//! L-hop delta invalidation and per-shard micro-batching. The served
+//! graph is a **versioned delta-friendly core**
+//! ([`graph::DeltaCsr`] behind the [`graph::GraphView`] trait):
+//! online edge churn and elastic node insertion/removal splice through
+//! a per-node overlay in O(Δ) with batched compaction — no O(E)
+//! rebuild, no offline reshard.
 //!
 //! ## Quickstart
 //!
@@ -70,10 +75,10 @@ pub mod prelude {
     pub use crate::baselines::Method;
     pub use crate::coordinator::{AsyncConfig, ConsensusMode, TrainConfig, TrainReport};
     pub use crate::datasets::{Dataset, SyntheticSpec};
-    pub use crate::graph::{Csr, Subgraph};
+    pub use crate::graph::{Csr, DeltaCsr, GraphView, Subgraph};
     pub use crate::model::GcnParams;
     pub use crate::partition::{PartitionConfig, Partitioning};
     pub use crate::rng::Rng;
-    pub use crate::serve::{GraphDelta, HaloPolicy, ServeConfig, Server};
+    pub use crate::serve::{DeltaMode, GraphDelta, HaloPolicy, NewNode, ServeConfig, Server};
     pub use crate::tensor::Matrix;
 }

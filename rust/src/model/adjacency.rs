@@ -1,9 +1,19 @@
 //! Symmetric-normalized adjacency `Â = D^{-1/2} (A + I) D^{-1/2}`
 //! (Kipf & Welling preprocessing), stored sparse (CSR with values) for
 //! the native backend and densified on demand for the XLA path.
+//!
+//! For the serving tier's live-update path the structure is *patchable*:
+//! [`refresh_rows`](NormAdj::refresh_rows) rebuilds just the rows whose
+//! adjacency or inverse-sqrt-degree factors a [`GraphDelta`] touched
+//! (O(Δ · deg) instead of an O(V+E) recompute), storing them in a
+//! per-row overlay that [`compact`](NormAdj::compact) periodically
+//! folds back into the flat arrays.
+//!
+//! [`GraphDelta`]: crate::serve::GraphDelta
 
-use crate::graph::Csr;
+use crate::graph::{Csr, GraphView};
 use crate::tensor::{spmm_csr, Matrix};
+use std::collections::HashMap;
 
 /// Sparse normalized adjacency with self loops.
 #[derive(Clone, Debug)]
@@ -11,6 +21,10 @@ pub struct NormAdj {
     offsets: Vec<usize>,
     targets: Vec<u32>,
     values: Vec<f32>,
+    /// Rows diverged from the flat arrays since the last compaction
+    /// (serving-tier delta updates land here; empty on the training
+    /// path).
+    patched: HashMap<u32, (Vec<u32>, Vec<f32>)>,
 }
 
 impl NormAdj {
@@ -20,10 +34,18 @@ impl NormAdj {
     /// *full-graph* factors into shard-local adjacencies) use this, so
     /// the serving bit-identity contract cannot drift from the
     /// training-time formula.
-    pub fn inv_sqrt_degrees(g: &Csr) -> Vec<f32> {
+    pub fn inv_sqrt_degrees<G: GraphView>(g: &G) -> Vec<f32> {
         (0..g.num_nodes())
             .map(|v| 1.0 / ((g.degree(v) + 1) as f32).sqrt())
             .collect()
+    }
+
+    /// The factor for a single node — the incremental-update form of
+    /// [`inv_sqrt_degrees`](Self::inv_sqrt_degrees), used when a delta
+    /// changes O(Δ) degrees and a full recompute would be wasteful.
+    #[inline]
+    pub fn inv_sqrt_degree(degree: usize) -> f32 {
+        1.0 / ((degree + 1) as f32).sqrt()
     }
 
     /// Build from an unweighted symmetric CSR.
@@ -37,7 +59,7 @@ impl NormAdj {
     /// degrees so a shard's Â entries match the full graph's exactly
     /// wherever both endpoints keep their full neighbourhood — the key
     /// to bit-identical shard-local inference on halo-complete shards.
-    pub fn with_inv_sqrt(g: &Csr, inv_sqrt: &[f32]) -> NormAdj {
+    pub fn with_inv_sqrt<G: GraphView>(g: &G, inv_sqrt: &[f32]) -> NormAdj {
         let n = g.num_nodes();
         assert_eq!(inv_sqrt.len(), n, "inv_sqrt/node mismatch");
         let mut offsets = vec![0usize; n + 1];
@@ -66,7 +88,7 @@ impl NormAdj {
                 values[c] = inv_sqrt[v] * inv_sqrt[v];
             }
         }
-        NormAdj { offsets, targets, values }
+        NormAdj { offsets, targets, values, patched: HashMap::new() }
     }
 
     /// Node count.
@@ -74,9 +96,104 @@ impl NormAdj {
         self.offsets.len() - 1
     }
 
+    /// One row of Â: `(targets, values)`, sorted by target, self loop
+    /// included — reads through the patch overlay. The serving tier's
+    /// aggregation loop uses this instead of [`raw`](Self::raw) so it
+    /// keeps working mid-overlay.
+    #[inline]
+    pub fn row(&self, v: usize) -> (&[u32], &[f32]) {
+        if let Some((t, w)) = self.patched.get(&(v as u32)) {
+            (t, w)
+        } else {
+            let (a, b) = (self.offsets[v], self.offsets[v + 1]);
+            (&self.targets[a..b], &self.values[a..b])
+        }
+    }
+
+    /// Rebuild the rows in `rows` from the (post-delta) graph view and
+    /// the *updated* inverse-sqrt-degree factors, placing them in the
+    /// patch overlay. Callers pass exactly the affected set — the
+    /// delta's endpoints plus their current neighbours (a degree change
+    /// at `u` perturbs `inv_sqrt[u]`, which appears in every
+    /// neighbour's row) — so the cost is O(Δ · deg), not O(V+E).
+    pub fn refresh_rows<G: GraphView>(&mut self, g: &G, inv_sqrt: &[f32], rows: &[u32]) {
+        assert_eq!(g.num_nodes(), self.num_nodes(), "refresh cannot resize; rebuild instead");
+        for &v in rows {
+            let vu = v as usize;
+            let nbrs = g.neighbors(vu);
+            let mut t = Vec::with_capacity(nbrs.len() + 1);
+            let mut w = Vec::with_capacity(nbrs.len() + 1);
+            let iv = inv_sqrt[vu];
+            let mut self_written = false;
+            for &x in nbrs {
+                if !self_written && x > v {
+                    t.push(v);
+                    w.push(iv * iv);
+                    self_written = true;
+                }
+                t.push(x);
+                w.push(iv * inv_sqrt[x as usize]);
+            }
+            if !self_written {
+                t.push(v);
+                w.push(iv * iv);
+            }
+            self.patched.insert(v, (t, w));
+        }
+    }
+
+    /// Patched-row count (compaction heuristics / tests).
+    pub fn patched_rows(&self) -> usize {
+        self.patched.len()
+    }
+
+    /// Fold the patch overlay back into flat arrays. O(V+E); called on
+    /// the same cadence as [`DeltaCsr`](crate::graph::DeltaCsr)
+    /// compaction, never per delta.
+    pub fn compact(&mut self) {
+        if self.patched.is_empty() {
+            return;
+        }
+        let n = self.num_nodes();
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + self.row(v).0.len();
+        }
+        let mut targets = vec![0u32; offsets[n]];
+        let mut values = vec![0f32; offsets[n]];
+        for v in 0..n {
+            let (t, w) = self.row(v);
+            targets[offsets[v]..offsets[v] + t.len()].copy_from_slice(t);
+            values[offsets[v]..offsets[v] + w.len()].copy_from_slice(w);
+        }
+        self.offsets = offsets;
+        self.targets = targets;
+        self.values = values;
+        self.patched.clear();
+    }
+
     /// `Â * dense` — the aggregation of one GCN layer.
     pub fn spmm(&self, dense: &Matrix) -> Matrix {
-        spmm_csr(&self.offsets, &self.targets, &self.values, dense, self.num_nodes())
+        let n = self.num_nodes();
+        if self.patched.is_empty() {
+            return spmm_csr(&self.offsets, &self.targets, &self.values, dense, n);
+        }
+        // overlay present: row-wise gather (serving-tier path; the
+        // training hot loop never patches)
+        let cols = dense.cols;
+        let mut out = Matrix::zeros(n, cols);
+        for v in 0..n {
+            let (t, w) = self.row(v);
+            let orow = out.row_mut(v);
+            for (e, &j) in t.iter().enumerate() {
+                let x = dense.row(j as usize);
+                let wv = w[e];
+                for c in 0..cols {
+                    orow[c] += wv * x[c];
+                }
+            }
+        }
+        out
     }
 
     /// Densify into an `n x n` matrix (XLA path, pre-padding).
@@ -85,8 +202,9 @@ impl NormAdj {
         assert!(padded >= n);
         let mut m = Matrix::zeros(padded, padded);
         for v in 0..n {
-            for e in self.offsets[v]..self.offsets[v + 1] {
-                m[(v, self.targets[e] as usize)] = self.values[e];
+            let (t, w) = self.row(v);
+            for (e, &j) in t.iter().enumerate() {
+                m[(v, j as usize)] = w[e];
             }
         }
         m
@@ -94,12 +212,18 @@ impl NormAdj {
 
     /// Bytes resident.
     pub fn nbytes(&self) -> usize {
-        self.offsets.len() * 8 + self.targets.len() * 4 + self.values.len() * 4
+        self.offsets.len() * 8
+            + self.targets.len() * 4
+            + self.values.len() * 4
+            + self
+                .patched
+                .values()
+                .map(|(t, w)| t.capacity() * 4 + w.capacity() * 4 + 32)
+                .sum::<usize>()
     }
 
-    /// Row sums of `D^{1/2} Â D^{1/2}` are degrees+1 — cheap invariant:
-    /// every row of Â must sum to a positive value <= 1·√((d+1)) etc.
-    /// We expose raw parts for tests instead.
+    /// Raw flat parts (tests; ignores the patch overlay — call
+    /// [`compact`](Self::compact) first when patches may exist).
     pub fn raw(&self) -> (&[usize], &[u32], &[f32]) {
         (&self.offsets, &self.targets, &self.values)
     }
@@ -204,5 +328,62 @@ mod tests {
         for (i, j, want) in [(0, 0, 0.5), (0, 1, 0.5), (1, 1, 0.5)] {
             assert!((d[(i, j)] - want).abs() < 1e-6);
         }
+    }
+
+    /// Patch a delta's affected rows and compare against a from-scratch
+    /// rebuild on the mutated graph — the incremental path must be
+    /// bit-identical, across spmm and after compaction.
+    #[test]
+    fn refresh_rows_matches_full_rebuild() {
+        use crate::graph::{DeltaCsr, GraphView};
+        let base = GraphBuilder::new(6)
+            .edges(&[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (1, 4)])
+            .build();
+        let mut inv = NormAdj::inv_sqrt_degrees(&base);
+        let mut adj = NormAdj::with_inv_sqrt(&base, &inv);
+
+        let mut g = DeltaCsr::new(base);
+        g.add_edge(0, 5);
+        g.remove_edge(1, 4);
+        // affected: endpoints {0,5,1,4} + their current neighbours
+        let mut affected: Vec<u32> = vec![0, 5, 1, 4];
+        for &v in &[0u32, 5, 1, 4] {
+            inv[v as usize] = NormAdj::inv_sqrt_degree(GraphView::degree(&g, v as usize));
+        }
+        for &v in &[0u32, 5, 1, 4] {
+            affected.extend_from_slice(GraphView::neighbors(&g, v as usize));
+        }
+        affected.sort_unstable();
+        affected.dedup();
+        adj.refresh_rows(&g, &inv, &affected);
+
+        let oracle = NormAdj::with_inv_sqrt(&g, &NormAdj::inv_sqrt_degrees(&g));
+        for v in 0..6 {
+            let (pt, pw) = adj.row(v);
+            let (ot, ow) = oracle.row(v);
+            assert_eq!(pt, ot, "targets diverge at row {v}");
+            assert_eq!(
+                pw.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                ow.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "values diverge at row {v}"
+            );
+        }
+        // spmm through the overlay agrees too, and compaction is lossless
+        use crate::rng::Rng;
+        let mut rng = Rng::seed_from_u64(9);
+        let x = Matrix::rand_uniform(6, 4, &mut rng);
+        let through_patch = adj.spmm(&x);
+        adj.compact();
+        assert_eq!(adj.patched_rows(), 0);
+        let flat = adj.spmm(&x);
+        assert_eq!(
+            through_patch.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            flat.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let oracle_y = oracle.spmm(&x);
+        assert_eq!(
+            flat.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            oracle_y.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 }

@@ -1,5 +1,7 @@
-//! Serving latency harness (Fig. 11, ours): p50/p99 request latency
-//! and QPS for three deployments answering the same query stream —
+//! Serving benchmark harnesses.
+//!
+//! **Fig. 11 (ours)** — p50/p99 request latency and QPS for three
+//! deployments answering the same query stream:
 //!
 //! * `unsharded-pernode` — one shard covering the whole graph, no
 //!   cache, full recompute per query: the naive "run the model" loop.
@@ -8,18 +10,25 @@
 //! * `cached-sharded` — the full subsystem: warm embedding cache plus
 //!   micro-batching; steady-state serving.
 //!
+//! **Fig. 12 (ours)** — serving under *churn*: interleaved
+//! [`GraphDelta`](super::GraphDelta) streams at increasing rates,
+//! [`DeltaMode::Incremental`] (overlay splicing) vs
+//! [`DeltaMode::Rebuild`] (flat-CSR rebuild per delta), reporting
+//! delta throughput and query p99 side by side.
+//!
 //! Shared by the CLI `serve-bench` command and
-//! `benches/fig11_serving_latency.rs`.
+//! `benches/fig11_serving_latency.rs` / `benches/fig12_churn.rs`.
 
-use super::{HaloPolicy, ServeConfig, Server};
+use super::{DeltaMode, GraphDelta, HaloPolicy, ServeConfig, Server};
 use crate::datasets::Dataset;
 use crate::model::GcnParams;
 use crate::rng::Rng;
 use anyhow::Result;
+use std::collections::HashSet;
 use std::fmt::Write as _;
 use std::time::Instant;
 
-/// Bench dimensions.
+/// Bench dimensions (Fig. 11).
 #[derive(Clone, Debug)]
 pub struct ServingBenchConfig {
     /// Shard count for the sharded modes.
@@ -30,6 +39,10 @@ pub struct ServingBenchConfig {
     pub batch: usize,
     /// Halo policy for the sharded modes.
     pub halo: HaloPolicy,
+    /// Per-shard retained-row cache budget (0 = unbounded).
+    pub cache_budget_bytes: u64,
+    /// Budgeted halos answer exactly via cross-shard row gathers.
+    pub gather_missing: bool,
     pub seed: u64,
 }
 
@@ -40,6 +53,8 @@ impl Default for ServingBenchConfig {
             queries: 2000,
             batch: 32,
             halo: HaloPolicy::Exact,
+            cache_budget_bytes: 0,
+            gather_missing: false,
             seed: 0,
         }
     }
@@ -164,7 +179,7 @@ fn run_mode(
     })
 }
 
-/// Run all three modes on one shared random query stream.
+/// Run all three Fig-11 modes on one shared random query stream.
 pub fn run_serving_bench(
     ds: &Dataset,
     params: &GcnParams,
@@ -180,13 +195,17 @@ pub fn run_serving_bench(
         cache: false,
         pruned: false,
         seed: cfg.seed,
+        ..Default::default()
     };
     let cold = ServeConfig {
         shards: cfg.shards,
         halo: cfg.halo,
         cache: false,
+        cache_budget_bytes: cfg.cache_budget_bytes,
         pruned: true,
+        gather_missing: cfg.gather_missing,
         seed: cfg.seed,
+        ..Default::default()
     };
     let cached = ServeConfig { cache: true, ..cold.clone() };
 
@@ -196,6 +215,264 @@ pub fn run_serving_bench(
         run_mode("cached-sharded", ds, params, cached, &stream, cfg.batch, true)?,
     ];
     Ok(ServingBenchReport { rows })
+}
+
+// --------------------------------------------------------------------
+// Fig 12 (ours): serving under churn — incremental vs rebuild
+// --------------------------------------------------------------------
+
+/// Bench dimensions (Fig. 12).
+#[derive(Clone, Debug)]
+pub struct ChurnBenchConfig {
+    /// Serving shards (Exact halo).
+    pub shards: usize,
+    /// Rounds per churn rate; each round applies the rate's deltas and
+    /// then answers a fixed query block.
+    pub rounds: usize,
+    /// Churn-rate sweep: deltas applied per round.
+    pub deltas_per_round: Vec<usize>,
+    /// Undirected edge mutations per delta (≈ half adds, half removes),
+    /// plus one feature rewrite per delta.
+    pub edges_per_delta: usize,
+    /// Queries answered between delta bursts, per round.
+    pub queries_per_round: usize,
+    /// Micro-batch size for the query blocks.
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl Default for ChurnBenchConfig {
+    fn default() -> Self {
+        ChurnBenchConfig {
+            shards: 4,
+            rounds: 6,
+            deltas_per_round: vec![1, 4, 16],
+            edges_per_delta: 4,
+            queries_per_round: 192,
+            batch: 32,
+            seed: 0,
+        }
+    }
+}
+
+/// One `(mode, churn rate)` row.
+#[derive(Clone, Debug)]
+pub struct ChurnSummary {
+    /// `incremental` or `rebuild`.
+    pub mode: String,
+    /// Deltas applied per round.
+    pub deltas_per_round: usize,
+    pub delta_mean_us: f64,
+    pub delta_p99_us: f64,
+    /// Sustained delta throughput (1e6 / mean apply µs).
+    pub deltas_per_sec: f64,
+    pub query_p50_us: f64,
+    pub query_p99_us: f64,
+    pub rows_invalidated: u64,
+    pub serving_bytes: u64,
+    /// Shard re-inductions (membership churn) over the run.
+    pub shard_rebuilds: u64,
+    /// Overlay compactions over the run.
+    pub compactions: u64,
+}
+
+/// The whole sweep.
+#[derive(Clone, Debug)]
+pub struct ChurnBenchReport {
+    pub rows: Vec<ChurnSummary>,
+}
+
+impl ChurnBenchReport {
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::from(
+            "| mode | deltas/round | delta mean (µs) | delta p99 (µs) | deltas/s | query p50 (µs) | query p99 (µs) | rows invalidated | shard rebuilds | compactions |\n\
+             |---|---|---|---|---|---|---|---|---|---|\n",
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "| {} | {} | {:.1} | {:.1} | {:.0} | {:.1} | {:.1} | {} | {} | {} |",
+                r.mode,
+                r.deltas_per_round,
+                r.delta_mean_us,
+                r.delta_p99_us,
+                r.deltas_per_sec,
+                r.query_p50_us,
+                r.query_p99_us,
+                r.rows_invalidated,
+                r.shard_rebuilds,
+                r.compactions
+            );
+        }
+        if let Some(x) = self.incremental_speedup() {
+            let _ = writeln!(
+                s,
+                "\nincremental vs rebuild delta throughput (max churn): **{x:.1}x deltas/s**"
+            );
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "mode,deltas_per_round,delta_mean_us,delta_p99_us,deltas_per_sec,query_p50_us,query_p99_us,rows_invalidated,serving_bytes,shard_rebuilds,compactions\n",
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{},{},{:.2},{:.2},{:.1},{:.2},{:.2},{},{},{},{}",
+                r.mode,
+                r.deltas_per_round,
+                r.delta_mean_us,
+                r.delta_p99_us,
+                r.deltas_per_sec,
+                r.query_p50_us,
+                r.query_p99_us,
+                r.rows_invalidated,
+                r.serving_bytes,
+                r.shard_rebuilds,
+                r.compactions
+            );
+        }
+        s
+    }
+
+    /// Delta-throughput ratio of incremental over rebuild at the
+    /// highest churn rate — the headline number.
+    pub fn incremental_speedup(&self) -> Option<f64> {
+        let max_rate = self.rows.iter().map(|r| r.deltas_per_round).max()?;
+        let pick = |mode: &str| {
+            self.rows
+                .iter()
+                .find(|r| r.mode == mode && r.deltas_per_round == max_rate)
+                .map(|r| r.deltas_per_sec)
+        };
+        let inc = pick("incremental")?;
+        let reb = pick("rebuild")?;
+        (reb > 0.0).then(|| inc / reb)
+    }
+}
+
+/// Deterministic delta schedule for one churn rate: both modes replay
+/// the exact same mutations (the rng never sees server state).
+fn churn_schedule(ds: &Dataset, cfg: &ChurnBenchConfig, rate: usize) -> Vec<Vec<GraphDelta>> {
+    let n = ds.num_nodes();
+    let fdim = ds.feature_dim();
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0xC0FFEE ^ (rate as u64).wrapping_mul(0x9E37));
+    let mut edges: Vec<(u32, u32)> = ds.graph.edges().collect();
+    let mut present: HashSet<(u32, u32)> = edges.iter().copied().collect();
+    (0..cfg.rounds)
+        .map(|_| {
+            (0..rate)
+                .map(|_| {
+                    let mut d = GraphDelta::default();
+                    for _ in 0..cfg.edges_per_delta {
+                        if rng.gen_bool(0.5) && edges.len() > 1 {
+                            let i = rng.gen_range(edges.len());
+                            let e = edges.swap_remove(i);
+                            present.remove(&e);
+                            d.removed_edges.push(e);
+                        } else {
+                            for _attempt in 0..8 {
+                                let u = rng.gen_range(n) as u32;
+                                let v = rng.gen_range(n) as u32;
+                                if u == v {
+                                    continue;
+                                }
+                                let c = if u < v { (u, v) } else { (v, u) };
+                                if present.insert(c) {
+                                    edges.push(c);
+                                    d.added_edges.push(c);
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    let fv = rng.gen_range(n) as u32;
+                    let row: Vec<f32> = (0..fdim).map(|_| rng.gen_f32() - 0.5).collect();
+                    d.updated_features.push((fv, row));
+                    d
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn run_churn_mode(
+    ds: &Dataset,
+    params: &GcnParams,
+    cfg: &ChurnBenchConfig,
+    rate: usize,
+    mode: DeltaMode,
+) -> Result<ChurnSummary> {
+    let scfg = ServeConfig {
+        shards: cfg.shards,
+        delta_mode: mode,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let mut srv = Server::for_dataset(ds, params.clone(), scfg)?;
+    let all: Vec<u32> = (0..ds.num_nodes() as u32).collect();
+    for chunk in all.chunks(256) {
+        srv.query_batch(chunk)?; // warm: churn hits a steady-state cache
+    }
+    let schedule = churn_schedule(ds, cfg, rate);
+    let mut qrng = Rng::seed_from_u64(cfg.seed ^ 0x51AB ^ (rate as u64).wrapping_mul(0x51));
+    let pre = srv.stats();
+    let mut delta_us: Vec<f64> = Vec::new();
+    let mut query_us: Vec<f64> = Vec::new();
+    let mut rows_invalidated = 0u64;
+    for round in &schedule {
+        for d in round {
+            let t = Instant::now();
+            let rep = srv.apply_delta(d)?;
+            delta_us.push(t.elapsed().as_secs_f64() * 1e6);
+            rows_invalidated += rep.rows_invalidated;
+        }
+        let stream: Vec<u32> =
+            (0..cfg.queries_per_round).map(|_| qrng.gen_range(ds.num_nodes()) as u32).collect();
+        for chunk in stream.chunks(cfg.batch.max(1)) {
+            let t = Instant::now();
+            srv.query_batch(chunk)?;
+            query_us.push(t.elapsed().as_secs_f64() * 1e6);
+        }
+    }
+    let post = srv.stats();
+    delta_us.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+    query_us.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+    let delta_mean = delta_us.iter().sum::<f64>() / delta_us.len().max(1) as f64;
+    Ok(ChurnSummary {
+        mode: match mode {
+            DeltaMode::Incremental => "incremental".into(),
+            DeltaMode::Rebuild => "rebuild".into(),
+        },
+        deltas_per_round: rate,
+        delta_mean_us: delta_mean,
+        delta_p99_us: percentile(&delta_us, 0.99),
+        deltas_per_sec: if delta_mean > 0.0 { 1e6 / delta_mean } else { 0.0 },
+        query_p50_us: percentile(&query_us, 0.50),
+        query_p99_us: percentile(&query_us, 0.99),
+        rows_invalidated,
+        serving_bytes: post.comm.serving_bytes - pre.comm.serving_bytes,
+        shard_rebuilds: post.shard_rebuilds - pre.shard_rebuilds,
+        compactions: post.graph_compactions - pre.graph_compactions,
+    })
+}
+
+/// Sweep churn rates × delta modes on identical mutation and query
+/// streams (Fig. 12).
+pub fn run_churn_bench(
+    ds: &Dataset,
+    params: &GcnParams,
+    cfg: &ChurnBenchConfig,
+) -> Result<ChurnBenchReport> {
+    let mut rows = Vec::new();
+    for &rate in &cfg.deltas_per_round {
+        for mode in [DeltaMode::Incremental, DeltaMode::Rebuild] {
+            rows.push(run_churn_mode(ds, params, cfg, rate, mode)?);
+        }
+    }
+    Ok(ChurnBenchReport { rows })
 }
 
 #[cfg(test)]
@@ -232,5 +509,28 @@ mod tests {
         assert!(rep.to_markdown().contains("unsharded-pernode"));
         assert!(rep.to_csv().lines().count() == 4);
         assert!(rep.cached_speedup_vs_baseline().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn churn_bench_covers_modes_and_rates() {
+        let ds = SyntheticSpec::tiny().generate(2);
+        let mut rng = crate::rng::Rng::seed_from_u64(2);
+        let params = GcnParams::init(ds.feature_dim(), 8, ds.num_classes, 2, &mut rng);
+        let cfg = ChurnBenchConfig {
+            rounds: 2,
+            deltas_per_round: vec![1, 3],
+            queries_per_round: 24,
+            batch: 8,
+            ..Default::default()
+        };
+        let rep = run_churn_bench(&ds, &params, &cfg).unwrap();
+        assert_eq!(rep.rows.len(), 4, "2 rates x 2 modes");
+        for r in &rep.rows {
+            assert!(r.deltas_per_sec > 0.0);
+            assert!(r.query_p50_us <= r.query_p99_us);
+        }
+        assert!(rep.incremental_speedup().is_some());
+        assert!(rep.to_markdown().contains("incremental"));
+        assert_eq!(rep.to_csv().lines().count(), 5);
     }
 }

@@ -24,6 +24,10 @@ pub struct EmbeddingCache {
     pub rows_recomputed: u64,
     /// Rows dropped by delta invalidation (including membership churn).
     pub rows_invalidated: u64,
+    /// Rows dropped by the byte-budget admission policy (lowest
+    /// Monte-Carlo importance first) — distinct from invalidation:
+    /// evicted rows were still *correct*, just not worth their bytes.
+    pub rows_evicted: u64,
 }
 
 impl EmbeddingCache {
@@ -37,6 +41,7 @@ impl EmbeddingCache {
             valid: Vec::new(),
             rows_recomputed: 0,
             rows_invalidated: 0,
+            rows_evicted: 0,
         }
     }
 
@@ -113,6 +118,7 @@ impl EmbeddingCache {
     pub fn carry_counters_discarding(&mut self, old: &EmbeddingCache) {
         self.rows_recomputed += old.rows_recomputed;
         self.rows_invalidated += old.rows_invalidated + old.valid_rows() as u64;
+        self.rows_evicted += old.rows_evicted;
     }
 
     /// Drop one row.
@@ -135,6 +141,70 @@ impl EmbeddingCache {
     /// Bytes resident in the embedding matrices.
     pub fn nbytes(&self) -> usize {
         self.layers.iter().map(|m| m.nbytes()).sum()
+    }
+
+    /// Bytes of *retained* (valid) rows — what the admission budget
+    /// governs. The dense layer matrices double as per-batch compute
+    /// scratch, so the budget caps what survives between queries, not
+    /// the transient working set.
+    pub fn cached_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .zip(&self.valid)
+            .map(|(m, v)| (v.iter().filter(|&&b| b).count() * m.cols * 4) as u64)
+            .sum()
+    }
+
+    /// Enforce a byte budget over retained rows: evict valid rows in
+    /// ascending admission-score order (`scores[node]`, the shard's
+    /// Monte-Carlo importance `I(v)` for halo replicas, 1.0 for base
+    /// nodes) until `cached_bytes() <= budget`. Ties break toward
+    /// evicting lower layers (cheapest to recompute — their inputs sit
+    /// closer to the features) first, then higher node ids — fully
+    /// deterministic. Returns rows evicted.
+    pub fn enforce_budget(&mut self, budget: u64, scores: &[f32]) -> u64 {
+        let mut resident = self.cached_bytes();
+        if resident <= budget {
+            return 0;
+        }
+        // candidate rows: (score, layer, node)
+        let mut cand: Vec<(f32, usize, usize)> = Vec::new();
+        for (l, valid) in self.valid.iter().enumerate() {
+            for (node, &b) in valid.iter().enumerate() {
+                if b {
+                    cand.push((scores.get(node).copied().unwrap_or(0.0), l, node));
+                }
+            }
+        }
+        let cmp = |a: &(f32, usize, usize), b: &(f32, usize, usize)| {
+            a.0.partial_cmp(&b.0)
+                .expect("scores are finite")
+                .then(a.1.cmp(&b.1))
+                .then(b.2.cmp(&a.2))
+        };
+        // steady state sits at the cap and only a few rows must go per
+        // batch: quickselect an upper bound on the eviction count and
+        // sort just that prefix instead of every valid row
+        let min_row_bytes =
+            self.layers.iter().map(|m| (m.cols * 4).max(4)).min().unwrap_or(4) as u64;
+        let excess = resident - budget;
+        let k = (excess.div_ceil(min_row_bytes) as usize).min(cand.len());
+        if k > 0 && k < cand.len() {
+            cand.select_nth_unstable_by(k - 1, cmp);
+            cand.truncate(k);
+        }
+        cand.sort_by(cmp);
+        let mut evicted = 0u64;
+        for (_, l, node) in cand {
+            if resident <= budget {
+                break;
+            }
+            self.valid[l][node] = false;
+            resident -= (self.layers[l].cols * 4) as u64;
+            evicted += 1;
+        }
+        self.rows_evicted += evicted;
+        evicted
     }
 
     /// Count of currently valid rows (diagnostics / tests).
@@ -181,5 +251,28 @@ mod tests {
         assert_eq!(c.version(), 0);
         c.set_version(3);
         assert_eq!(c.version(), 3);
+    }
+
+    #[test]
+    fn budget_evicts_lowest_importance_first() {
+        let mut c = EmbeddingCache::new(true);
+        c.allocate(3, &[2]); // 8 bytes per row
+        for node in 0..3 {
+            c.store(0, node, &[node as f32, 0.0]);
+        }
+        assert_eq!(c.cached_bytes(), 24);
+        // scores: node 1 is the unimportant one
+        let scores = [1.0, 0.05, 0.9];
+        let evicted = c.enforce_budget(16, &scores);
+        assert_eq!(evicted, 1);
+        assert!(!c.is_valid(0, 1), "lowest-I(v) row goes first");
+        assert!(c.is_valid(0, 0) && c.is_valid(0, 2));
+        assert_eq!(c.cached_bytes(), 16);
+        assert_eq!(c.rows_evicted, 1);
+        // already under budget: no-op
+        assert_eq!(c.enforce_budget(16, &scores), 0);
+        // budget 0 clears everything
+        assert_eq!(c.enforce_budget(0, &scores), 2);
+        assert_eq!(c.cached_bytes(), 0);
     }
 }

@@ -1,12 +1,26 @@
 //! Online graph mutations and their invalidation footprint.
 
-use crate::graph::{Csr, GraphBuilder};
+use crate::graph::{Csr, GraphBuilder, GraphView};
 use anyhow::{anyhow, Result};
 use std::collections::HashSet;
 
-/// A batch of online mutations against the served graph: edge churn
-/// plus feature updates. Node count is fixed (node insertion is an
-/// offline reshard — see ROADMAP follow-ups).
+/// A node inserted online. Its id is assigned on application: the
+/// `i`-th added node of a delta gets id `num_nodes + i`.
+#[derive(Clone, Debug)]
+pub struct NewNode {
+    /// Feature row (must match the deployment's feature dim).
+    pub features: Vec<f32>,
+    /// Undirected edges to attach, as the *other* endpoint — an
+    /// existing node id, or the prospective id of a node added earlier
+    /// in the same delta.
+    pub edges: Vec<u32>,
+}
+
+/// A batch of online mutations against the served graph: edge churn,
+/// feature updates, and **elastic membership** — node insertion and
+/// removal — applied in place through the overlay CSR; no offline
+/// reshard. A removed node's incident edges are dropped implicitly and
+/// its id is retired (never reused, queries against it fail).
 #[derive(Clone, Debug, Default)]
 pub struct GraphDelta {
     /// Undirected edges to insert (either orientation; duplicates and
@@ -16,6 +30,40 @@ pub struct GraphDelta {
     pub removed_edges: Vec<(u32, u32)>,
     /// `(node, new feature row)` replacements.
     pub updated_features: Vec<(u32, Vec<f32>)>,
+    /// Nodes to insert online (ids assigned densely at application).
+    pub added_nodes: Vec<NewNode>,
+    /// Nodes to remove online.
+    pub removed_nodes: Vec<u32>,
+}
+
+/// The edge churn a delta *actually* applied (no-ops and implicit
+/// removed-node edges resolved), plus the nodes whose degree — and
+/// therefore inverse-sqrt-degree factor — changed. This is the O(Δ)
+/// working set every downstream incremental update keys off.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeChurn {
+    /// Effectively inserted undirected edges.
+    pub added: Vec<(u32, u32)>,
+    /// Effectively removed undirected edges (including a removed
+    /// node's implicit incident edges).
+    pub removed: Vec<(u32, u32)>,
+    /// Sorted, deduped endpoints of the effective churn.
+    pub degree_changed: Vec<u32>,
+}
+
+impl EdgeChurn {
+    /// Derive `degree_changed` from the effective edge lists.
+    pub fn finish(&mut self) {
+        let mut d: Vec<u32> = self
+            .added
+            .iter()
+            .chain(&self.removed)
+            .flat_map(|&(u, v)| [u, v])
+            .collect();
+        d.sort_unstable();
+        d.dedup();
+        self.degree_changed = d;
+    }
 }
 
 impl GraphDelta {
@@ -23,21 +71,69 @@ impl GraphDelta {
         self.added_edges.is_empty()
             && self.removed_edges.is_empty()
             && self.updated_features.is_empty()
+            && self.added_nodes.is_empty()
+            && self.removed_nodes.is_empty()
     }
 
-    /// Structural checks against the deployment's dimensions.
+    /// Structural checks against the deployment's dimensions. Edge and
+    /// feature targets may reference prospective ids of nodes this
+    /// delta itself adds (`num_nodes..num_nodes+added`); liveness of
+    /// existing ids is the server's to check (it knows which are
+    /// retired).
     pub fn validate(&self, num_nodes: usize, feature_dim: usize) -> Result<()> {
+        let n_after = num_nodes + self.added_nodes.len();
+        let removed: HashSet<u32> = self.removed_nodes.iter().copied().collect();
+        if removed.len() != self.removed_nodes.len() {
+            return Err(anyhow!("delta removes the same node twice"));
+        }
+        for &v in &self.removed_nodes {
+            if v as usize >= num_nodes {
+                return Err(anyhow!("removed node {v} out of range (n={num_nodes})"));
+            }
+        }
         for &(u, v) in self.added_edges.iter().chain(&self.removed_edges) {
-            if u as usize >= num_nodes || v as usize >= num_nodes {
-                return Err(anyhow!("delta edge ({u},{v}) out of range (n={num_nodes})"));
+            if u as usize >= n_after || v as usize >= n_after {
+                return Err(anyhow!("delta edge ({u},{v}) out of range (n={n_after})"));
             }
             if u == v {
                 return Err(anyhow!("delta contains self loop at {u}"));
             }
+            if removed.contains(&u) || removed.contains(&v) {
+                return Err(anyhow!(
+                    "delta edge ({u},{v}) references a node the same delta removes"
+                ));
+            }
+        }
+        for (i, nn) in self.added_nodes.iter().enumerate() {
+            if nn.features.len() != feature_dim {
+                return Err(anyhow!(
+                    "added node {i} has feature dim {} (expected {feature_dim})",
+                    nn.features.len()
+                ));
+            }
+            let own_id = (num_nodes + i) as u32;
+            for &e in &nn.edges {
+                if e as usize >= n_after {
+                    return Err(anyhow!("added node {i} edge to {e} out of range (n={n_after})"));
+                }
+                if e == own_id {
+                    return Err(anyhow!("added node {i} links to itself"));
+                }
+                if removed.contains(&e) {
+                    return Err(anyhow!(
+                        "added node {i} links to node {e}, which the same delta removes"
+                    ));
+                }
+            }
         }
         for (v, row) in &self.updated_features {
-            if *v as usize >= num_nodes {
-                return Err(anyhow!("feature update for node {v} out of range (n={num_nodes})"));
+            if *v as usize >= n_after {
+                return Err(anyhow!("feature update for node {v} out of range (n={n_after})"));
+            }
+            if removed.contains(v) {
+                return Err(anyhow!(
+                    "feature update for node {v}, which the same delta removes"
+                ));
             }
             if row.len() != feature_dim {
                 return Err(anyhow!(
@@ -49,25 +145,37 @@ impl GraphDelta {
         Ok(())
     }
 
-    /// Nodes whose *own* row of Â or features changed — the epicentre
-    /// the invalidation wave expands from.
-    pub fn seeds(&self) -> Vec<u32> {
+    /// Nodes whose *own* row of Â or features changes — the epicentre
+    /// the invalidation wave expands from. `num_nodes` is the
+    /// pre-delta node count (prospective ids of added nodes resolve
+    /// against it); the caller filters ids `>= num_nodes` when walking
+    /// the *old* graph.
+    pub fn seeds(&self, num_nodes: usize) -> Vec<u32> {
         let mut s: Vec<u32> = self
             .added_edges
             .iter()
             .chain(&self.removed_edges)
             .flat_map(|&(u, v)| [u, v])
             .chain(self.updated_features.iter().map(|(v, _)| *v))
+            .chain(self.removed_nodes.iter().copied())
             .collect();
+        for (i, nn) in self.added_nodes.iter().enumerate() {
+            s.push((num_nodes + i) as u32);
+            s.extend_from_slice(&nn.edges);
+        }
         s.sort_unstable();
         s.dedup();
         s
     }
 
-    /// Apply the edge churn, producing the successor graph. O(E) — an
-    /// incremental CSR is a ROADMAP follow-up; deltas are off the
-    /// query hot path.
+    /// Apply everything to a flat snapshot, producing the successor
+    /// graph: O(E) from-scratch rebuild. **The oracle, not the hot
+    /// path** — serving applies deltas through the
+    /// [`DeltaCsr`](crate::graph::DeltaCsr) overlay in O(Δ); property
+    /// tests compare the two for bit-identity.
     pub fn apply_to(&self, graph: &Csr) -> Csr {
+        let n_old = graph.num_nodes();
+        let n_new = n_old + self.added_nodes.len();
         let canon = |(u, v): (u32, u32)| if u < v { (u, v) } else { (v, u) };
         let mut edges: HashSet<(u32, u32)> = graph.edges().collect();
         for &e in &self.removed_edges {
@@ -76,7 +184,15 @@ impl GraphDelta {
         for &e in &self.added_edges {
             edges.insert(canon(e));
         }
-        let mut b = GraphBuilder::new(graph.num_nodes());
+        for (i, nn) in self.added_nodes.iter().enumerate() {
+            let id = (n_old + i) as u32;
+            for &e in &nn.edges {
+                edges.insert(canon((id, e)));
+            }
+        }
+        let removed: HashSet<u32> = self.removed_nodes.iter().copied().collect();
+        edges.retain(|&(u, v)| !removed.contains(&u) && !removed.contains(&v));
+        let mut b = GraphBuilder::new(n_new);
         for (u, v) in edges {
             b.edge(u, v);
         }
@@ -89,13 +205,14 @@ impl GraphDelta {
 /// influence of a removed edge travels along old adjacency, influence
 /// of an added one along new adjacency, and the layer-`l` invalidation
 /// rule ("within `l` hops of a seed") must be conservative for both.
-pub fn seed_distances(graph: &Csr, seeds: &[u32], max_hops: usize) -> Vec<u32> {
+pub fn seed_distances<G: GraphView>(graph: &G, seeds: &[u32], max_hops: usize) -> Vec<u32> {
     crate::graph::bounded_bfs_distances(graph, seeds, max_hops)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::GraphBuilder;
 
     fn path5() -> Csr {
         GraphBuilder::new(5).edges(&[(0, 1), (1, 2), (2, 3), (3, 4)]).build()
@@ -107,7 +224,7 @@ mod tests {
         let d = GraphDelta {
             added_edges: vec![(0, 4), (4, 0)], // dup collapses
             removed_edges: vec![(1, 2), (2, 1)],
-            updated_features: vec![],
+            ..Default::default()
         };
         let g2 = d.apply_to(&g);
         assert!(g2.has_edge(0, 4));
@@ -124,6 +241,26 @@ mod tests {
     }
 
     #[test]
+    fn apply_handles_elastic_nodes() {
+        let g = path5();
+        let d = GraphDelta {
+            added_nodes: vec![
+                NewNode { features: vec![0.0; 3], edges: vec![0, 2] },
+                NewNode { features: vec![0.0; 3], edges: vec![5] }, // prospective id
+            ],
+            removed_nodes: vec![4],
+            ..Default::default()
+        };
+        assert!(d.validate(5, 3).is_ok());
+        let g2 = d.apply_to(&g);
+        assert_eq!(g2.num_nodes(), 7);
+        assert!(g2.has_edge(5, 0) && g2.has_edge(5, 2) && g2.has_edge(5, 6));
+        assert_eq!(g2.degree(4), 0, "removed node is isolated, id retired");
+        assert!(!g2.has_edge(3, 4));
+        assert!(g2.validate().is_ok());
+    }
+
+    #[test]
     fn validate_rejects_bad_input() {
         let d = GraphDelta { added_edges: vec![(0, 9)], ..Default::default() };
         assert!(d.validate(5, 3).is_err());
@@ -136,13 +273,61 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_bad_elastic_input() {
+        // wrong feature dim on the new node
+        let d = GraphDelta {
+            added_nodes: vec![NewNode { features: vec![0.0; 2], edges: vec![] }],
+            ..Default::default()
+        };
+        assert!(d.validate(5, 3).is_err());
+        // edge to a node removed by the same delta
+        let d = GraphDelta {
+            removed_nodes: vec![1],
+            added_edges: vec![(0, 1)],
+            ..Default::default()
+        };
+        assert!(d.validate(5, 3).is_err());
+        // double removal
+        let d = GraphDelta { removed_nodes: vec![1, 1], ..Default::default() };
+        assert!(d.validate(5, 3).is_err());
+        // removal out of range
+        let d = GraphDelta { removed_nodes: vec![7], ..Default::default() };
+        assert!(d.validate(5, 3).is_err());
+        // prospective-id edge is fine, one past it is not
+        let ok = GraphDelta {
+            added_nodes: vec![NewNode { features: vec![0.0; 3], edges: vec![5] }],
+            ..Default::default()
+        };
+        assert!(ok.validate(5, 3).is_err(), "node 0's own prospective id is 5");
+        let ok = GraphDelta {
+            added_nodes: vec![
+                NewNode { features: vec![0.0; 3], edges: vec![] },
+                NewNode { features: vec![0.0; 3], edges: vec![5] },
+            ],
+            ..Default::default()
+        };
+        assert!(ok.validate(5, 3).is_ok());
+    }
+
+    #[test]
     fn seeds_are_deduped_endpoints_and_feature_nodes() {
         let d = GraphDelta {
             added_edges: vec![(1, 2)],
             removed_edges: vec![(2, 3)],
             updated_features: vec![(0, vec![])],
+            ..Default::default()
         };
-        assert_eq!(d.seeds(), vec![0, 1, 2, 3]);
+        assert_eq!(d.seeds(5), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn seeds_include_elastic_nodes_and_attachment_points() {
+        let d = GraphDelta {
+            removed_nodes: vec![4],
+            added_nodes: vec![NewNode { features: vec![], edges: vec![1] }],
+            ..Default::default()
+        };
+        assert_eq!(d.seeds(5), vec![1, 4, 5]);
     }
 
     #[test]

@@ -1,0 +1,167 @@
+//! Exact answers on budgeted halos: cross-shard row gathering.
+//!
+//! A [`HaloPolicy::Budgeted`](super::HaloPolicy::Budgeted) shard lacks
+//! part of its L-hop candidate set, so its local forward approximates
+//! boundary neighbourhoods. With
+//! [`ServeConfig::gather_missing`](super::ServeConfig::gather_missing)
+//! the server answers such queries **exactly** instead: it walks the
+//! queried nodes' true L-hop dependency cone over the *global* overlay
+//! graph, computes each layer's rows grouped by the owning home shard
+//! (one GEMM per layer — per-row results are independent of grouping,
+//! so this is bit-identical to the full-graph forward), and accounts
+//! every row a consumer shard needs but does not hold:
+//!
+//! * layer 0 — a feature row is free when the consumer's shard already
+//!   replicates the node (base or sampled halo member); otherwise it is
+//!   fetched from the node's home shard at `feature_dim × 4` bytes.
+//!   This is where a bigger sampled halo buys fewer fetches.
+//! * layer `l > 0` — an embedding row is computed by its node's home
+//!   shard and is free only there; any other consumer pays
+//!   `dim_l × 4` bytes.
+//!
+//! Fetches are deduplicated per `(layer, row, consumer shard)` within a
+//! request. All bytes land in the [`CommLedger`](crate::comm::CommLedger)
+//! serving class. Results are transient per request — mixing exact
+//! gathered rows into the shards' (approximate) local caches would
+//! poison them, so the caches are bypassed entirely on this path.
+
+use super::server::{QueryResult, Server};
+use crate::graph::GraphView;
+use crate::tensor::{gemm, relu, softmax_rows, Matrix};
+use anyhow::Result;
+use std::collections::{HashMap, HashSet};
+
+/// One input row's contribution to the aggregation of `(v, layer l)`,
+/// replayed in `NormAdj` row order so the result is bit-identical to
+/// the full-graph forward; cross-shard fetches are tallied as they
+/// happen.
+#[allow(clippy::too_many_arguments)]
+fn accumulate(
+    srv: &Server,
+    prev: &HashMap<u32, Vec<f32>>,
+    l: usize,
+    v: u32,
+    t: u32,
+    iv: f32,
+    consumer: u32,
+    orow: &mut [f32],
+    bytes: &mut u64,
+    fetched: &mut HashSet<(usize, u32, u32)>,
+    frow_bytes: u64,
+    row_bytes: u64,
+) {
+    let w = iv * srv.inv_sqrt[t as usize];
+    let row: &[f32] = if l == 0 { srv.features.row(t as usize) } else { &prev[&t] };
+    for (c, &x) in row.iter().enumerate() {
+        orow[c] += w * x;
+    }
+    if t == v {
+        return; // self loop: the consumer owns its own row
+    }
+    let missing = if l == 0 {
+        // feature rows are replicated wherever the halo sampled them
+        srv.shards[consumer as usize].local_of(t).is_none()
+    } else {
+        // embedding rows live only on their home shard this request
+        srv.assignment[t as usize] != consumer
+    };
+    if missing && fetched.insert((l, t, consumer)) {
+        *bytes += if l == 0 { frow_bytes } else { row_bytes };
+    }
+}
+
+/// See module docs. Caller ([`Server::query_batch`]) has validated the
+/// node ids (in range, not retired).
+pub(crate) fn query_batch_gather(srv: &mut Server, nodes: &[u32]) -> Result<Vec<QueryResult>> {
+    let layers = srv.params.layers();
+
+    // ---- the true dependency cone, layer by layer (global ids) ------
+    let mut need: Vec<Vec<u32>> = vec![Vec::new(); layers];
+    let mut top: Vec<u32> = nodes.to_vec();
+    top.sort_unstable();
+    top.dedup();
+    need[layers - 1] = top;
+    for l in (0..layers.saturating_sub(1)).rev() {
+        let mut s: Vec<u32> = need[l + 1].clone();
+        for &v in &need[l + 1] {
+            s.extend_from_slice(srv.graph.neighbors(v as usize));
+        }
+        s.sort_unstable();
+        s.dedup();
+        need[l] = s;
+    }
+
+    // ---- per-layer: aggregate over global adjacency, one GEMM -------
+    let frow_bytes = (srv.features.cols * 4) as u64;
+    let mut bytes = 0u64;
+    let mut fetched: HashSet<(usize, u32, u32)> = HashSet::new();
+    let mut prev: HashMap<u32, Vec<f32>> = HashMap::new();
+    let mut rows_recomputed = 0usize;
+    for l in 0..layers {
+        let sel = std::mem::take(&mut need[l]);
+        let in_dim = srv.params.ws[l].rows;
+        let row_bytes = (in_dim * 4) as u64;
+        let mut agg = Matrix::zeros(sel.len(), in_dim);
+        for (i, &v) in sel.iter().enumerate() {
+            let vu = v as usize;
+            let consumer = srv.assignment[vu];
+            let iv = srv.inv_sqrt[vu];
+            let orow = agg.row_mut(i);
+            let mut self_done = false;
+            for &t in srv.graph.neighbors(vu) {
+                if !self_done && t > v {
+                    accumulate(
+                        srv, &prev, l, v, v, iv, consumer, orow, &mut bytes, &mut fetched,
+                        frow_bytes, row_bytes,
+                    );
+                    self_done = true;
+                }
+                accumulate(
+                    srv, &prev, l, v, t, iv, consumer, orow, &mut bytes, &mut fetched,
+                    frow_bytes, row_bytes,
+                );
+            }
+            if !self_done {
+                accumulate(
+                    srv, &prev, l, v, v, iv, consumer, orow, &mut bytes, &mut fetched,
+                    frow_bytes, row_bytes,
+                );
+            }
+        }
+        let mut z = gemm(&agg, &srv.params.ws[l]);
+        if l + 1 < layers {
+            relu(&mut z);
+        }
+        prev = sel.iter().enumerate().map(|(i, &v)| (v, z.row(i).to_vec())).collect();
+        rows_recomputed += sel.len();
+    }
+
+    // ---- answer ------------------------------------------------------
+    let classes = srv.params.ws[layers - 1].cols;
+    let mut logits = Matrix::zeros(nodes.len(), classes);
+    for (i, &v) in nodes.iter().enumerate() {
+        logits.row_mut(i).copy_from_slice(&prev[&v]);
+    }
+    let probs = softmax_rows(&logits);
+    let preds = probs.argmax_rows();
+    let version = srv.graph.version();
+
+    srv.queries += nodes.len() as u64;
+    srv.micro_batches += 1;
+    srv.rows_recomputed += rows_recomputed as u64;
+    srv.ledger.record_serving(bytes);
+
+    Ok(nodes
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| QueryResult {
+            node: v,
+            pred: preds[i],
+            probs: probs.row(i).to_vec(),
+            shard: srv.assignment[v as usize],
+            graph_version: version,
+            cache_hit: false,
+            rows_recomputed,
+        })
+        .collect())
+}

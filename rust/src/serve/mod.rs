@@ -18,31 +18,44 @@
 //!   normalization via [`NormAdj::with_inv_sqrt`]); with
 //!   [`HaloPolicy::Budgeted`] the halo is Algorithm 1's
 //!   importance-sampled replica set — the training-time approximation,
-//!   at a fraction of the memory.
+//!   at a fraction of the memory (or exact again with
+//!   [`ServeConfig::gather_missing`], which fetches the rows the halo
+//!   lacks from their home shards, bytes accounted).
 //! * [`EmbeddingCache`] — per-shard `(layer, node)` embedding rows
-//!   versioned by `graph_version`. A [`GraphDelta`] bumps the version
-//!   and invalidates exactly the rows within `l` hops of the touched
-//!   region at layer `l`; everything else survives and recomputation
-//!   happens lazily on the next query that needs it.
+//!   versioned by the overlay graph's version. A [`GraphDelta`] bumps
+//!   the version and invalidates exactly the rows within `l` hops of
+//!   the touched region at layer `l`; everything else survives and
+//!   recomputation happens lazily on the next query that needs it. An
+//!   optional byte budget ([`ServeConfig::cache_budget_bytes`]) admits
+//!   retained rows by Monte-Carlo importance `I(v)` and evicts the
+//!   least important first.
 //! * [`Server`] — the query frontend: routes single and batched
-//!   queries to their shard, micro-batches per shard, applies deltas,
-//!   and reports per-query provenance (owning shard, cache hit, rows
-//!   recomputed). All cross-shard bytes — halo replication at build,
-//!   delta propagation at mutation — land in the
-//!   [`CommLedger`](crate::comm::CommLedger)'s serving traffic class;
-//!   the query path itself moves zero bytes.
+//!   queries to their shard, micro-batches per shard, applies deltas
+//!   **in place** through a versioned [`DeltaCsr`](crate::graph::DeltaCsr)
+//!   overlay (O(Δ·affected-hops), compaction amortised — see
+//!   [`DeltaMode`]), supports **online elastic membership** (node
+//!   insertion/removal with incremental shard + halo + cache updates,
+//!   no offline reshard), and reports per-query provenance. All
+//!   cross-shard bytes — halo replication at build, delta propagation
+//!   and halo churn at mutation, missing-row gathers in budgeted mode —
+//!   land in the [`CommLedger`](crate::comm::CommLedger)'s serving
+//!   traffic class; the Exact-halo query path itself moves zero bytes.
 //!
 //! [`NormAdj::with_inv_sqrt`]: crate::model::NormAdj::with_inv_sqrt
 
 pub mod bench;
 mod cache;
 mod delta;
+mod gather;
 mod server;
 mod shard;
 
-pub use bench::{run_serving_bench, LatencySummary, ServingBenchConfig, ServingBenchReport};
+pub use bench::{
+    run_churn_bench, run_serving_bench, ChurnBenchConfig, ChurnBenchReport, ChurnSummary,
+    LatencySummary, ServingBenchConfig, ServingBenchReport,
+};
 pub use cache::EmbeddingCache;
-pub use delta::GraphDelta;
+pub use delta::{EdgeChurn, GraphDelta, NewNode};
 pub use server::{DeltaReport, QueryResult, Server, ServeStats};
 pub use shard::{ShardEngine, ShardServeOutcome};
 
@@ -59,6 +72,20 @@ pub enum HaloPolicy {
     Budgeted { alpha: f64 },
 }
 
+/// How a [`GraphDelta`] is folded into the running deployment.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DeltaMode {
+    /// Splice the delta through the overlay CSR and update only the
+    /// affected shard state: O(Δ·affected-hops) per delta, flat-CSR
+    /// compaction amortised over many deltas. The production path.
+    #[default]
+    Incremental,
+    /// Compact to a flat CSR and rebuild every touched shard from
+    /// scratch per delta (the pre-overlay behaviour): O(E). Kept as
+    /// the churn benchmark's baseline and the property tests' oracle.
+    Rebuild,
+}
+
 /// Serving deployment configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -69,16 +96,36 @@ pub struct ServeConfig {
     /// Keep per-layer embeddings between queries. Off = every query
     /// recomputes (the "cold" mode of the latency benchmark).
     pub cache: bool,
+    /// Per-shard byte budget for *retained* cache rows; 0 = unbounded.
+    /// Over budget, rows are evicted lowest Monte-Carlo importance
+    /// `I(v)` first (base nodes score 1.0 and effectively never go
+    /// before replicas).
+    pub cache_budget_bytes: u64,
     /// Restrict each layer's compute to the rows the queried nodes
     /// actually need (the L-hop cone). Off = recompute the whole shard
     /// every query — only useful as the naive baseline in benchmarks.
     pub pruned: bool,
+    /// Budgeted halos only: answer exactly by gathering the rows the
+    /// truncated halo lacks from their home shards (fetched bytes land
+    /// in the serving traffic class) instead of approximating.
+    pub gather_missing: bool,
+    /// Delta application strategy (see [`DeltaMode`]).
+    pub delta_mode: DeltaMode,
     /// Partitioner / halo-sampling seed.
     pub seed: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { shards: 4, halo: HaloPolicy::Exact, cache: true, pruned: true, seed: 0 }
+        ServeConfig {
+            shards: 4,
+            halo: HaloPolicy::Exact,
+            cache: true,
+            cache_budget_bytes: 0,
+            pruned: true,
+            gather_missing: false,
+            delta_mode: DeltaMode::Incremental,
+            seed: 0,
+        }
     }
 }

@@ -1,14 +1,28 @@
 //! One serving shard: a partition part plus its replicated halo, the
 //! layer-wise forward over the local subgraph, and the lazy
 //! cache-filling micro-batch pipeline.
+//!
+//! The local adjacency is a [`DeltaCsr`] and the normalized adjacency
+//! keeps a patched-row overlay, so a [`GraphDelta`] whose churn leaves
+//! shard *membership* unchanged is spliced in place — O(Δ · deg) local
+//! work plus validity-bit invalidation — instead of re-inducing the
+//! subgraph. Membership changes (halo join/leave, elastic node
+//! insert/remove) fall back to a shard-local rebuild that migrates the
+//! surviving cache rows; nothing ever rebuilds globally.
+//!
+//! [`GraphDelta`]: super::GraphDelta
 
 use super::cache::EmbeddingCache;
+use super::delta::EdgeChurn;
 use super::{HaloPolicy, ServeConfig};
-use crate::augment::{augment_part, AugmentConfig};
-use crate::graph::{candidate_replication_nodes, Csr, Subgraph};
+use crate::augment::{augment_part, walk_importance, AugmentConfig};
+use crate::graph::{
+    boundary_nodes, candidate_replication_from_boundary, DeltaCsr, GraphView, Subgraph,
+};
 use crate::model::{GcnParams, NormAdj};
+use crate::rng::Rng;
 use crate::tensor::{gemm, relu, softmax_rows, Matrix};
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
 /// Outcome of one shard micro-batch, rows in query order.
 #[derive(Clone, Debug)]
@@ -25,31 +39,108 @@ pub struct ShardServeOutcome {
     pub rows_recomputed: usize,
 }
 
+/// Everything a shard needs to fold one applied [`GraphDelta`]
+/// (post-mutation state plus the delta's O(Δ) working set).
+///
+/// [`GraphDelta`]: super::GraphDelta
+pub struct ShardDeltaCtx<'a> {
+    /// The mutated overlay graph.
+    pub graph: &'a DeltaCsr,
+    /// Global feature matrix (already carries the delta's updates).
+    pub global_features: &'a Matrix,
+    /// Updated global `1/sqrt(deg+1)` factors.
+    pub inv_sqrt: &'a [f32],
+    /// Home part per node (`u32::MAX` = retired id).
+    pub assignment: &'a [u32],
+    /// Effective edge churn (no-ops resolved).
+    pub churn: &'a EdgeChurn,
+    /// The delta's feature replacements.
+    pub updated_features: &'a [(u32, Vec<f32>)],
+    /// Nodes this delta homed into the shard's part (elastic insert).
+    pub base_added: &'a [u32],
+    /// Nodes this delta retired from the shard's part (elastic remove).
+    pub base_removed: &'a [u32],
+    /// Min-over-old-and-new hop distance to the nearest delta seed,
+    /// sparse: absent = farther than L hops (untouched).
+    pub dist: &'a HashMap<u32, u32>,
+    /// GCN depth (= halo hops).
+    pub layers: usize,
+    /// Per-layer output widths.
+    pub dims: &'a [usize],
+    /// More than one shard exists → cross-shard bytes are real.
+    pub multi_shard: bool,
+}
+
+/// What folding a delta into one shard did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardDeltaOutcome {
+    /// The shard re-induced its subgraph (membership changed) instead
+    /// of splicing in place.
+    pub rebuilt: bool,
+    /// Cached rows dropped by this delta on this shard.
+    pub rows_invalidated: u64,
+    /// Cross-shard bytes this shard's update cost.
+    pub bytes: u64,
+}
+
 /// See module docs.
 pub struct ShardEngine {
     pub part: u32,
-    /// Base + halo nodes, local CSR over the induced edges.
-    pub sub: Subgraph,
+    /// Parent-graph node id per local id (sorted ascending; base + halo).
+    pub global_ids: Vec<u32>,
+    /// Local adjacency over the induced edges — an overlay CSR so
+    /// deltas splice in place.
+    pub local: DeltaCsr,
     /// `true` -> halo replica (cannot be queried here; its home shard
     /// owns it).
     pub is_replica: Vec<bool>,
-    /// Replicated global ids (the halo).
+    /// Replicated global ids (the halo, sorted).
     pub replicas: Vec<u32>,
+    /// Base nodes with ≥1 cross-part edge (global ids, sorted) —
+    /// maintained incrementally under churn so halo recomputation
+    /// needs a bounded BFS, not a full-part rescan.
+    boundary: Vec<u32>,
     /// Â over the local subgraph with **global-degree** normalization,
     /// so local entries match the full graph's wherever both endpoints
     /// keep their complete neighbourhood (see [`NormAdj::with_inv_sqrt`]).
     adj: NormAdj,
+    /// Mirror of the global `1/sqrt(deg+1)` factors for local nodes.
+    inv_local: Vec<f32>,
     /// Local copies of the member nodes' feature rows.
     features: Matrix,
+    /// Cache admission score per local node: Monte-Carlo `I(v)` for
+    /// replicas, 1.0 for base nodes. Only populated when a cache byte
+    /// budget is set (or the halo itself was importance-sampled).
+    scores: Vec<f32>,
+    /// Retained-row byte budget (0 = unbounded), from [`ServeConfig`].
+    cache_budget: u64,
     pub cache: EmbeddingCache,
+}
+
+/// `I(v)` over the exact halo, for cache admission: only computed when
+/// a byte budget makes the scores matter.
+fn halo_importance<G: GraphView>(
+    graph: &G,
+    assignment: &[u32],
+    part: u32,
+    halo: &[u32],
+    layers: usize,
+    cfg: &ServeConfig,
+) -> Vec<(u32, f64)> {
+    if cfg.cache_budget_bytes == 0 || halo.is_empty() {
+        return Vec::new();
+    }
+    let acfg = AugmentConfig { walk_length: layers, seed: cfg.seed, ..Default::default() };
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ (part as u64).wrapping_mul(0x9E37_79B9));
+    walk_importance(graph, assignment, part, halo, &acfg, &mut rng).importance
 }
 
 impl ShardEngine {
     /// Build the shard for `part`. `inv_sqrt_global[v] = 1/sqrt(deg(v)+1)`
     /// over the *full* graph; `layers` is the GCN depth (= halo hops,
     /// Property 1).
-    pub fn build(
-        graph: &Csr,
+    pub fn build<G: GraphView>(
+        graph: &G,
         global_features: &Matrix,
         inv_sqrt_global: &[f32],
         assignment: &[u32],
@@ -57,58 +148,110 @@ impl ShardEngine {
         layers: usize,
         cfg: &ServeConfig,
     ) -> ShardEngine {
-        let (sub, is_replica, replicas) = match cfg.halo {
+        let base: Vec<u32> = (0..graph.num_nodes() as u32)
+            .filter(|&v| assignment[v as usize] == part)
+            .collect();
+        let boundary = boundary_nodes(graph, assignment, part);
+        let (replicas, importance) = match cfg.halo {
             HaloPolicy::Exact => {
-                let base: Vec<u32> = (0..graph.num_nodes() as u32)
-                    .filter(|&v| assignment[v as usize] == part)
-                    .collect();
-                let halo = candidate_replication_nodes(graph, assignment, part, layers);
-                let mut all = base.clone();
-                all.extend_from_slice(&halo);
-                let sub = Subgraph::induce(graph, &all);
-                let base_set: HashSet<u32> = base.into_iter().collect();
-                let is_replica: Vec<bool> =
-                    sub.global_ids.iter().map(|g| !base_set.contains(g)).collect();
-                (sub, is_replica, halo)
+                let halo = candidate_replication_from_boundary(
+                    graph, assignment, &boundary, part, layers,
+                );
+                let imp = halo_importance(graph, assignment, part, &halo, layers, cfg);
+                (halo, imp)
             }
             HaloPolicy::Budgeted { alpha } => {
                 let aug = augment_part(
                     graph,
                     assignment,
                     part,
-                    &AugmentConfig { alpha, walk_length: layers, seed: cfg.seed, ..Default::default() },
+                    &AugmentConfig {
+                        alpha,
+                        walk_length: layers,
+                        seed: cfg.seed,
+                        ..Default::default()
+                    },
                 );
-                (aug.sub, aug.is_replica, aug.replicas)
+                (aug.replicas, aug.candidate_importance)
             }
         };
+        Self::assemble(
+            graph,
+            global_features,
+            inv_sqrt_global,
+            part,
+            base,
+            replicas,
+            boundary,
+            &importance,
+            cfg,
+        )
+    }
 
-        let n = sub.len();
+    /// Induce the subgraph over `base ∪ replicas` and materialise every
+    /// derived structure. The one constructor both the offline build
+    /// and the online membership-change rebuild go through.
+    #[allow(clippy::too_many_arguments)]
+    fn assemble<G: GraphView>(
+        graph: &G,
+        global_features: &Matrix,
+        inv_sqrt_global: &[f32],
+        part: u32,
+        base: Vec<u32>,
+        replicas: Vec<u32>,
+        boundary: Vec<u32>,
+        importance: &[(u32, f64)],
+        cfg: &ServeConfig,
+    ) -> ShardEngine {
+        let mut all = base.clone();
+        all.extend_from_slice(&replicas);
+        let Subgraph { global_ids, csr } = Subgraph::induce(graph, &all);
+        let base_set: HashSet<u32> = base.into_iter().collect();
+        let is_replica: Vec<bool> = global_ids.iter().map(|g| !base_set.contains(g)).collect();
+
+        let n = global_ids.len();
         let f = global_features.cols;
         let mut features = Matrix::zeros(n, f);
         let mut inv_local = Vec::with_capacity(n);
-        for (l, &g) in sub.global_ids.iter().enumerate() {
+        for (l, &g) in global_ids.iter().enumerate() {
             features.row_mut(l).copy_from_slice(global_features.row(g as usize));
             inv_local.push(inv_sqrt_global[g as usize]);
         }
-        let adj = NormAdj::with_inv_sqrt(&sub.csr, &inv_local);
+        let adj = NormAdj::with_inv_sqrt(&csr, &inv_local);
+        let imp: HashMap<u32, f64> = importance.iter().copied().collect();
+        let scores: Vec<f32> = global_ids
+            .iter()
+            .zip(&is_replica)
+            .map(|(&g, &r)| if r { imp.get(&g).copied().unwrap_or(0.0) as f32 } else { 1.0 })
+            .collect();
         ShardEngine {
             part,
-            sub,
+            global_ids,
+            local: DeltaCsr::new(csr),
             is_replica,
             replicas,
+            boundary,
             adj,
+            inv_local,
             features,
+            scores,
+            cache_budget: cfg.cache_budget_bytes,
             cache: EmbeddingCache::new(cfg.cache),
         }
     }
 
+    /// Local id of a global node, if a member (binary search).
+    pub fn local_of(&self, global: u32) -> Option<u32> {
+        self.global_ids.binary_search(&global).ok().map(|i| i as u32)
+    }
+
     /// Node count (base + halo).
     pub fn len(&self) -> usize {
-        self.sub.len()
+        self.global_ids.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.sub.is_empty()
+        self.global_ids.is_empty()
     }
 
     /// Base (queryable) node count.
@@ -116,9 +259,10 @@ impl ShardEngine {
         self.is_replica.iter().filter(|&&r| !r).count()
     }
 
-    /// Resident bytes: features + adjacency + cached embeddings.
+    /// Resident bytes: features + adjacency (flat + overlays) + cached
+    /// embeddings.
     pub fn nbytes(&self) -> usize {
-        self.features.nbytes() + self.adj.nbytes() + self.cache.nbytes()
+        self.features.nbytes() + self.adj.nbytes() + self.local.nbytes() + self.cache.nbytes()
     }
 
     /// Answer a micro-batch of local node ids. `pruned = false`
@@ -126,7 +270,7 @@ impl ShardEngine {
     /// queries' dependency cone — the naive baseline mode.
     pub fn serve(&mut self, params: &GcnParams, q: &[u32], pruned: bool) -> ShardServeOutcome {
         let layer_count = params.layers();
-        let n = self.sub.len();
+        let n = self.global_ids.len();
         let dims: Vec<usize> = params.ws.iter().map(|w| w.cols).collect();
         if !self.cache.is_allocated(layer_count) || self.cache.num_nodes() != n {
             self.cache.allocate(n, &dims);
@@ -158,7 +302,7 @@ impl ShardEngine {
                         mark[v] = true;
                         nl.push(v as u32);
                     }
-                    for &t in self.sub.csr.neighbors(v) {
+                    for &t in self.local.neighbors(v) {
                         let t = t as usize;
                         if !mark[t] && !self.cache.is_valid(l, t) {
                             mark[t] = true;
@@ -188,18 +332,15 @@ impl ShardEngine {
             let sel = std::mem::take(&mut need[l]);
             let in_dim = params.ws[l].rows;
             let mut agg = Matrix::zeros(sel.len(), in_dim);
-            {
-                let (offs, tgts, vals) = self.adj.raw();
-                for (i, &v) in sel.iter().enumerate() {
-                    let orow = agg.row_mut(i);
-                    for e in offs[v as usize]..offs[v as usize + 1] {
-                        let j = tgts[e] as usize;
-                        let w = vals[e];
-                        let drow =
-                            if l == 0 { self.features.row(j) } else { self.cache.row(l - 1, j) };
-                        for c in 0..in_dim {
-                            orow[c] += w * drow[c];
-                        }
+            for (i, &v) in sel.iter().enumerate() {
+                let (tgts, vals) = self.adj.row(v as usize);
+                let orow = agg.row_mut(i);
+                for (e, &j) in tgts.iter().enumerate() {
+                    let w = vals[e];
+                    let drow =
+                        if l == 0 { self.features.row(j as usize) } else { self.cache.row(l - 1, j as usize) };
+                    for c in 0..in_dim {
+                        orow[c] += w * drow[c];
                     }
                 }
             }
@@ -224,8 +365,234 @@ impl ShardEngine {
 
         if !self.cache.enabled() {
             self.cache.clear_validity();
+        } else if self.cache_budget > 0 {
+            // admission policy: retain the most important rows only
+            self.cache.enforce_budget(self.cache_budget, &self.scores);
         }
         ShardServeOutcome { probs, preds, cached, cached_hits, rows_recomputed }
+    }
+
+    /// Fold one applied delta into this shard (Exact-halo path). When
+    /// membership is untouched the churn is spliced in place; when the
+    /// halo or the base changed (including elastic node insert/remove)
+    /// the shard re-induces locally and migrates surviving cache rows.
+    pub fn apply_delta(&mut self, cfg: &ServeConfig, ctx: &ShardDeltaCtx) -> ShardDeltaOutcome {
+        // 1. refresh boundary status of churn endpoints (boundary
+        //    membership can only change for nodes whose incident edges
+        //    or neighbours' assignments changed — all of which appear
+        //    in `degree_changed`)
+        for &g in &ctx.churn.degree_changed {
+            let in_part = ctx.assignment[g as usize] == self.part;
+            let is_boundary = in_part
+                && ctx
+                    .graph
+                    .neighbors(g as usize)
+                    .iter()
+                    .any(|&t| ctx.assignment[t as usize] != self.part);
+            match (self.boundary.binary_search(&g), is_boundary) {
+                (Ok(i), false) => {
+                    self.boundary.remove(i);
+                }
+                (Err(i), true) => {
+                    self.boundary.insert(i, g);
+                }
+                _ => {}
+            }
+        }
+
+        // 2. the halo this shard now needs: bounded BFS from the
+        //    (incrementally maintained) boundary — never a global scan
+        let new_halo = candidate_replication_from_boundary(
+            ctx.graph,
+            ctx.assignment,
+            &self.boundary,
+            self.part,
+            ctx.layers,
+        );
+
+        let membership_changed = !ctx.base_added.is_empty()
+            || !ctx.base_removed.is_empty()
+            || new_halo != self.replicas;
+
+        if membership_changed {
+            return self.rebuild_local(cfg, ctx, new_halo);
+        }
+
+        // 3. in-place splice: membership identical, so only edges,
+        //    Â rows, feature rows and cache validity move
+        let before_invalid = self.cache.rows_invalidated;
+        for &(u, v) in &ctx.churn.added {
+            if let (Some(lu), Some(lv)) = (self.local_of(u), self.local_of(v)) {
+                self.local.add_edge(lu, lv);
+            }
+        }
+        for &(u, v) in &ctx.churn.removed {
+            if let (Some(lu), Some(lv)) = (self.local_of(u), self.local_of(v)) {
+                self.local.remove_edge(lu, lv);
+            }
+        }
+        // Â rows to refresh: members whose global degree changed, plus
+        // their current local neighbours (their rows reference the
+        // changed inv-sqrt factors)
+        let mut touched_locals: Vec<u32> = Vec::new();
+        for &g in &ctx.churn.degree_changed {
+            if let Some(l) = self.local_of(g) {
+                self.inv_local[l as usize] = ctx.inv_sqrt[g as usize];
+                touched_locals.push(l);
+            }
+        }
+        let mut affected = touched_locals.clone();
+        for &l in &touched_locals {
+            affected.extend_from_slice(self.local.neighbors(l as usize));
+        }
+        affected.sort_unstable();
+        affected.dedup();
+        self.adj.refresh_rows(&self.local, &self.inv_local, &affected);
+
+        for (v, row) in ctx.updated_features {
+            if let Some(l) = self.local_of(*v) {
+                self.features.row_mut(l as usize).copy_from_slice(row);
+            }
+        }
+        self.invalidate_by_distance(ctx.dist, ctx.layers);
+
+        // compaction cadence: fold overlays on the DeltaCsr's schedule
+        if self.local.maybe_compact() || self.adj.patched_rows() * 4 > self.global_ids.len() {
+            self.adj.compact();
+        }
+
+        let bytes = if ctx.multi_shard {
+            let frow = (ctx.global_features.cols * 4) as u64;
+            self.replica_churn_bytes(ctx.churn, ctx.updated_features, frow)
+        } else {
+            0
+        };
+        ShardDeltaOutcome {
+            rebuilt: false,
+            rows_invalidated: self.cache.rows_invalidated - before_invalid,
+            bytes,
+        }
+    }
+
+    /// Membership changed: re-induce this shard over the overlay graph
+    /// (shard-local cost) and migrate every surviving cache row.
+    fn rebuild_local(
+        &mut self,
+        cfg: &ServeConfig,
+        ctx: &ShardDeltaCtx,
+        new_halo: Vec<u32>,
+    ) -> ShardDeltaOutcome {
+        let removed: HashSet<u32> = ctx.base_removed.iter().copied().collect();
+        let mut base: Vec<u32> = self
+            .global_ids
+            .iter()
+            .zip(&self.is_replica)
+            .filter(|&(g, &r)| !r && !removed.contains(g))
+            .map(|(&g, _)| g)
+            .collect();
+        base.extend_from_slice(ctx.base_added);
+        base.sort_unstable();
+        base.dedup();
+
+        // admission scores are heuristic weights, not correctness: carry
+        // the surviving replicas' I(v) over by global id instead of
+        // re-running the Monte-Carlo estimator on every rebuild (halo
+        // joiners start at 0.0 — evicted first until a full build or
+        // deployment restart re-estimates them)
+        let importance: Vec<(u32, f64)> = if cfg.cache_budget_bytes > 0 {
+            self.global_ids
+                .iter()
+                .zip(&self.is_replica)
+                .zip(&self.scores)
+                .filter(|((_, &r), _)| r)
+                .map(|((&g, _), &s)| (g, s as f64))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut fresh = Self::assemble(
+            ctx.graph,
+            ctx.global_features,
+            ctx.inv_sqrt,
+            self.part,
+            base,
+            new_halo,
+            std::mem::take(&mut self.boundary),
+            &importance,
+            cfg,
+        );
+        fresh.migrate_cache_from(self, ctx.dist, ctx.dims);
+        let rows_invalidated = fresh.cache.rows_invalidated - self.cache.rows_invalidated;
+        let mut bytes = 0u64;
+        if ctx.multi_shard {
+            let frow = (ctx.global_features.cols * 4) as u64;
+            bytes = fresh.halo_join_bytes(self, frow)
+                + fresh.replica_churn_bytes(ctx.churn, ctx.updated_features, frow);
+        }
+        *self = fresh;
+        ShardDeltaOutcome { rebuilt: true, rows_invalidated, bytes }
+    }
+
+    /// Feature rows shipped for nodes that joined this shard's halo
+    /// relative to its predecessor — the one accounting rule every
+    /// rebuild path (in-place fallback and [`DeltaMode::Rebuild`])
+    /// shares, so the two modes can never drift apart.
+    ///
+    /// [`DeltaMode::Rebuild`]: super::DeltaMode::Rebuild
+    pub(crate) fn halo_join_bytes(&self, old: &ShardEngine, frow: u64) -> u64 {
+        self.global_ids
+            .iter()
+            .enumerate()
+            .filter(|&(l, &g)| self.is_replica[l] && old.local_of(g).is_none())
+            .count() as u64
+            * frow
+    }
+
+    /// Cross-shard bytes a delta costs this shard beyond membership
+    /// churn: updated feature rows re-shipped to replicas, plus churned
+    /// edges visible through a replica. Shared by both delta modes.
+    pub(crate) fn replica_churn_bytes(
+        &self,
+        churn: &EdgeChurn,
+        updated_features: &[(u32, Vec<f32>)],
+        frow: u64,
+    ) -> u64 {
+        let mut bytes = 0u64;
+        for (v, _) in updated_features {
+            if let Some(l) = self.local_of(*v) {
+                if self.is_replica[l as usize] {
+                    bytes += frow;
+                }
+            }
+        }
+        let replica = |l: Option<u32>| l.map(|i| self.is_replica[i as usize]).unwrap_or(false);
+        for &(u, v) in churn.added.iter().chain(&churn.removed) {
+            let lu = self.local_of(u);
+            let lv = self.local_of(v);
+            if (lu.is_some() || lv.is_some()) && (replica(lu) || replica(lv)) {
+                bytes += 8;
+            }
+        }
+        bytes
+    }
+
+    /// Drop the cached rows the delta's influence cone reaches: the
+    /// layer-`l` row of a node within `l+1` hops of a seed (`dist` is
+    /// the sparse min-over-old-and-new-graph seed distance). Iterates
+    /// the cone, not the membership — O(|cone|·log) per shard.
+    pub fn invalidate_by_distance(&mut self, dist: &HashMap<u32, u32>, layer_count: usize) {
+        if !self.cache.is_allocated(layer_count) {
+            return; // never queried — nothing cached
+        }
+        for (&g, &d) in dist {
+            let Some(local) = self.local_of(g) else { continue };
+            for l in 0..layer_count {
+                // layer l of the cache holds H_{l+1}: stale within l+1 hops
+                if d <= (l + 1) as u32 {
+                    self.cache.invalidate(l, local as usize);
+                }
+            }
+        }
     }
 
     /// Carry forward cache rows that survive a [`GraphDelta`]
@@ -235,21 +602,22 @@ impl ShardEngine {
     /// rebuilds.
     ///
     /// [`GraphDelta`]: super::GraphDelta
-    pub fn migrate_cache_from(&mut self, old: &ShardEngine, dist: &[u32], dims: &[usize]) {
+    pub fn migrate_cache_from(&mut self, old: &ShardEngine, dist: &HashMap<u32, u32>, dims: &[usize]) {
         let layer_count = dims.len();
-        let n = self.sub.len();
+        let n = self.global_ids.len();
         if !self.cache.is_allocated(layer_count) || self.cache.num_nodes() != n {
             self.cache.allocate(n, dims);
         }
         self.cache.rows_recomputed += old.cache.rows_recomputed;
         self.cache.rows_invalidated += old.cache.rows_invalidated;
+        self.cache.rows_evicted += old.cache.rows_evicted;
         if !old.cache.is_allocated(layer_count) {
             return; // old shard was never queried — nothing to carry
         }
         let mut adopted = 0u64;
-        for (local, &g) in self.sub.global_ids.iter().enumerate() {
-            let Some(old_local) = old.sub.local_of(g) else { continue };
-            let d = dist[g as usize];
+        for (local, &g) in self.global_ids.iter().enumerate() {
+            let Some(old_local) = old.local_of(g) else { continue };
+            let d = dist.get(&g).copied().unwrap_or(u32::MAX);
             for l in 0..layer_count {
                 // layer l of the cache holds H_{l+1}: stale within l+1 hops
                 let touched = d != u32::MAX && d <= (l + 1) as u32;
@@ -268,6 +636,7 @@ impl ShardEngine {
 mod tests {
     use super::*;
     use crate::datasets::SyntheticSpec;
+    use crate::graph::candidate_replication_nodes;
     use crate::partition::{partition, PartitionConfig};
     use crate::rng::Rng;
 
@@ -286,7 +655,7 @@ mod tests {
         let expect = candidate_replication_nodes(&ds.graph, &assign, 0, 2);
         assert_eq!(sh.replicas, expect);
         assert_eq!(sh.len(), sh.base_len() + expect.len());
-        assert!(sh.sub.csr.validate().is_ok());
+        assert!(sh.local.validate().is_ok());
     }
 
     #[test]
@@ -364,5 +733,35 @@ mod tests {
         assert_eq!(b.cached_hits, 0);
         assert_eq!(a.rows_recomputed, b.rows_recomputed);
         assert_eq!(a.preds, b.preds);
+    }
+
+    #[test]
+    fn cache_budget_keeps_important_rows_under_cap() {
+        let (ds, assign, inv) = fixture();
+        let mut rng = Rng::seed_from_u64(8);
+        let params = GcnParams::init(ds.feature_dim(), 8, ds.num_classes, 2, &mut rng);
+        // budget sized to hold only a few rows
+        let budget = 8 * 4 * 4; // 4 hidden rows' worth
+        let cfg = ServeConfig { shards: 3, cache_budget_bytes: budget as u64, ..Default::default() };
+        let mut sh = ShardEngine::build(&ds.graph, &ds.features, &inv, &assign, 0, 2, &cfg);
+        let q: Vec<u32> = (0..sh.len() as u32).filter(|&v| !sh.is_replica[v as usize]).collect();
+        let out = sh.serve(&params, &q, true);
+        assert!(out.rows_recomputed > 0);
+        assert!(sh.cache.cached_bytes() <= budget as u64, "budget enforced after the batch");
+        assert!(sh.cache.rows_evicted > 0, "something had to go");
+        // answers stay correct: evicted rows just recompute next time
+        let mut unbounded =
+            ShardEngine::build(&ds.graph, &ds.features, &inv, &assign, 0, 2, &ServeConfig {
+                shards: 3,
+                ..Default::default()
+            });
+        let reference = unbounded.serve(&params, &q, true);
+        let again = sh.serve(&params, &q, true);
+        assert_eq!(again.preds, reference.preds);
+        assert_eq!(
+            again.probs.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            reference.probs.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "eviction may cost recomputes, never answers"
+        );
     }
 }

@@ -11,7 +11,7 @@ use gad::model::{checkpoint, GcnParams};
 use gad::proptest_util::forall;
 use gad::rng::Rng;
 use gad::serve::{
-    run_serving_bench, GraphDelta, HaloPolicy, ServeConfig, Server, ServingBenchConfig,
+    run_serving_bench, GraphDelta, HaloPolicy, NewNode, ServeConfig, Server, ServingBenchConfig,
 };
 
 /// The training-time full-graph forward — the oracle every serving
@@ -172,6 +172,7 @@ fn delta_invalidation_matches_from_scratch_recompute() {
             added_edges: added,
             removed_edges: removed,
             updated_features: updated,
+            ..Default::default()
         };
 
         // cached server: warm on the old graph, then mutate
@@ -214,6 +215,111 @@ fn delta_invalidation_matches_from_scratch_recompute() {
         }
         Ok(())
     });
+}
+
+/// Elastic membership round-trip: insert a node online, serve it
+/// bit-identically to the full-graph oracle on the extended graph,
+/// then remove it and get the original graph's answers back — shard,
+/// halo and cache state updated incrementally, replication bytes
+/// visible in the serving ledger, no offline reshard anywhere.
+#[test]
+fn elastic_add_remove_node_round_trip() {
+    let (ds, params) = fixture(14, 2);
+    let fdim = ds.feature_dim();
+    let mut srv = Server::for_dataset(&ds, params.clone(), ServeConfig::default()).unwrap();
+    srv.query_batch(&all_nodes(&ds)).unwrap(); // warm
+    let bytes_before = srv.stats().comm.serving_bytes;
+    let version_before = srv.graph_version();
+
+    // ---- insert, attached to two existing nodes ---------------------
+    let new_id = ds.num_nodes() as u32;
+    let new_row: Vec<f32> = (0..fdim).map(|i| 0.1 * (i as f32 + 1.0)).collect();
+    let rep = srv
+        .apply_delta(&GraphDelta {
+            added_nodes: vec![NewNode { features: new_row.clone(), edges: vec![0, 5] }],
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(rep.nodes_added, 1);
+    assert!(rep.graph_version > version_before);
+
+    // oracle: the training-time forward on the extended graph
+    let mut ds2 = ds.clone();
+    ds2.graph = GraphDelta {
+        added_nodes: vec![NewNode { features: new_row.clone(), edges: vec![0, 5] }],
+        ..Default::default()
+    }
+    .apply_to(&ds.graph);
+    ds2.features.push_row(&new_row);
+    let oracle2 = native_preds(&ds2, &params);
+    let q2: Vec<u32> = (0..ds2.num_nodes() as u32).collect();
+    let res2 = srv.query_batch(&q2).unwrap();
+    for (r, want) in res2.iter().zip(&oracle2) {
+        assert_eq!(r.pred, *want, "node {} after elastic insert", r.node);
+    }
+    assert_eq!(srv.shard_of(new_id), srv.query(new_id).unwrap().shard);
+    let bytes_mid = srv.stats().comm.serving_bytes;
+    assert!(bytes_mid > bytes_before, "membership churn must cost visible bytes");
+
+    // ---- remove the node again --------------------------------------
+    let rep = srv
+        .apply_delta(&GraphDelta { removed_nodes: vec![new_id], ..Default::default() })
+        .unwrap();
+    assert_eq!(rep.nodes_removed, 1);
+    assert!(srv.query(new_id).is_err(), "retired id must reject queries");
+    // surviving nodes answer exactly as on the original graph
+    let oracle = native_preds(&ds, &params);
+    let res = srv.query_batch(&all_nodes(&ds)).unwrap();
+    for (r, want) in res.iter().zip(&oracle) {
+        assert_eq!(r.pred, *want, "node {} after elastic remove", r.node);
+    }
+    let st = srv.stats();
+    assert_eq!(st.nodes_added, 1);
+    assert_eq!(st.nodes_removed, 1);
+}
+
+/// Budgeted halos + gather: answers become bit-identical to the
+/// full-graph forward — the halo's missing rows are fetched from their
+/// home shards instead of approximated, and every fetch lands in the
+/// serving traffic class.
+#[test]
+fn budgeted_gather_is_exact_and_accounted() {
+    let (ds, params) = fixture(16, 2);
+    let oracle = native_preds(&ds, &params);
+    let cfg = ServeConfig {
+        shards: 4,
+        halo: HaloPolicy::Budgeted { alpha: 0.02 },
+        gather_missing: true,
+        ..Default::default()
+    };
+    let mut srv = Server::for_dataset(&ds, params.clone(), cfg).unwrap();
+    let build_bytes = srv.stats().comm.serving_bytes;
+    let res = srv.query_batch(&all_nodes(&ds)).unwrap();
+    let preds: Vec<u32> = res.iter().map(|r| r.pred).collect();
+    assert_eq!(preds, oracle, "gather mode must erase the budgeted approximation");
+    let st = srv.stats();
+    assert!(
+        st.comm.serving_bytes > build_bytes,
+        "missing-row fetches must be accounted"
+    );
+    assert_eq!(st.queries as usize, ds.num_nodes());
+
+    // a single-shard deployment holds everything: gather fetches nothing
+    let cfg1 = ServeConfig {
+        shards: 1,
+        halo: HaloPolicy::Budgeted { alpha: 0.02 },
+        gather_missing: true,
+        ..Default::default()
+    };
+    let mut one = Server::for_dataset(&ds, params, cfg1).unwrap();
+    let before = one.stats().comm.serving_bytes;
+    let res1 = one.query_batch(&all_nodes(&ds)).unwrap();
+    assert_eq!(res1.iter().map(|r| r.pred).collect::<Vec<_>>(), oracle);
+    assert_eq!(
+        one.stats().comm.serving_bytes,
+        before,
+        "one shard owns every row — zero gather bytes"
+    );
 }
 
 #[test]

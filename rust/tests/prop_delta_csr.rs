@@ -1,0 +1,227 @@
+//! Property tests for the versioned graph core: any random sequence of
+//! online mutations applied through the `DeltaCsr` overlay — including
+//! across compactions — must yield a graph, and serve answers,
+//! bit-identical to a from-scratch rebuild.
+
+use gad::datasets::SyntheticSpec;
+use gad::graph::{DeltaCsr, GraphBuilder};
+use gad::model::GcnParams;
+use gad::proptest_util::{arb_graph, forall};
+use gad::rng::Rng;
+use gad::serve::{DeltaMode, GraphDelta, NewNode, ServeConfig, Server};
+use std::collections::HashSet;
+
+fn canon(u: u32, v: u32) -> (u32, u32) {
+    if u < v {
+        (u, v)
+    } else {
+        (v, u)
+    }
+}
+
+/// Graph level: DeltaCsr under random add/remove-edge, add-node and
+/// isolate ops, with a tiny compaction threshold so sequences cross
+/// multiple compactions, always equals the GraphBuilder rebuild of the
+/// mirrored edge set.
+#[test]
+fn delta_csr_sequences_match_builder_rebuild() {
+    forall("delta-csr == rebuild", 40, |rng| {
+        let (n0, edges) = arb_graph(rng, 4, 20, 0.25);
+        let base = GraphBuilder::new(n0).edges(&edges).build();
+        let mut dc = DeltaCsr::with_threshold(base.clone(), 6);
+        let mut mirror: HashSet<(u32, u32)> = base.edges().collect();
+        let mut n = n0;
+        for step in 0..15 {
+            match rng.gen_range(4) {
+                0 => {
+                    let u = rng.gen_range(n) as u32;
+                    let v = rng.gen_range(n) as u32;
+                    if u != v {
+                        let applied = dc.add_edge(u, v);
+                        let fresh = mirror.insert(canon(u, v));
+                        if applied != fresh {
+                            return Err(format!(
+                                "step {step}: add_edge({u},{v}) applied={applied} mirror={fresh}"
+                            ));
+                        }
+                    }
+                }
+                1 => {
+                    let mut es: Vec<(u32, u32)> = mirror.iter().copied().collect();
+                    es.sort_unstable();
+                    if !es.is_empty() {
+                        let e = es[rng.gen_range(es.len())];
+                        if !dc.remove_edge(e.0, e.1) {
+                            return Err(format!("step {step}: remove of present edge no-opped"));
+                        }
+                        mirror.remove(&e);
+                    }
+                }
+                2 => {
+                    let id = dc.add_node();
+                    if id as usize != n {
+                        return Err(format!("step {step}: new id {id}, expected {n}"));
+                    }
+                    n += 1;
+                    let t = rng.gen_range(n - 1) as u32;
+                    if dc.add_edge(id, t) {
+                        mirror.insert(canon(id, t));
+                    }
+                }
+                _ => {
+                    let v = rng.gen_range(n) as u32;
+                    for t in dc.isolate(v) {
+                        mirror.remove(&canon(v, t));
+                    }
+                }
+            }
+            if rng.gen_bool(0.3) {
+                dc.maybe_compact();
+            }
+            let mut es: Vec<(u32, u32)> = mirror.iter().copied().collect();
+            es.sort_unstable();
+            let want = GraphBuilder::new(n).edges(&es).build();
+            let got = dc.to_csr();
+            if got != want {
+                return Err(format!(
+                    "step {step}: overlay diverged from rebuild ({} vs {} edges, {} compactions)",
+                    got.num_edges(),
+                    want.num_edges(),
+                    dc.compactions()
+                ));
+            }
+            dc.validate().map_err(|e| format!("step {step}: invariants: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Serving level: a random sequence of deltas — edge churn, feature
+/// rewrites, **elastic node insert/remove** — applied to (a) the
+/// incremental overlay server and (b) the rebuild-mode server must
+/// answer bit-identically to (c) a fresh server that never saw the old
+/// graph, on every alive node, after every delta.
+#[test]
+fn serve_answers_match_across_delta_modes_and_fresh_rebuild() {
+    forall("incremental == rebuild == fresh", 4, |rng| {
+        let seed = rng.next_u64() % 1_000;
+        let ds = SyntheticSpec::tiny().generate(seed);
+        let fdim = ds.feature_dim();
+        let mut prng = Rng::seed_from_u64(seed ^ 0xD2);
+        let params = GcnParams::init(fdim, 10, ds.num_classes, 2, &mut prng);
+        let cfg = ServeConfig { shards: 3, seed: 7, ..Default::default() };
+        let rcfg = ServeConfig { delta_mode: DeltaMode::Rebuild, ..cfg.clone() };
+        let mut inc = Server::for_dataset(&ds, params.clone(), cfg.clone())
+            .map_err(|e| format!("build inc: {e:#}"))?;
+        let mut reb = Server::for_dataset(&ds, params.clone(), rcfg)
+            .map_err(|e| format!("build reb: {e:#}"))?;
+        let warm: Vec<u32> = (0..ds.num_nodes() as u32).collect();
+        inc.query_batch(&warm).map_err(|e| format!("warm inc: {e:#}"))?;
+        reb.query_batch(&warm).map_err(|e| format!("warm reb: {e:#}"))?;
+
+        // mirror of the evolving deployment, for the fresh oracle
+        let mut graph = ds.graph.clone();
+        let mut features = ds.features.clone();
+        let mut dead: HashSet<u32> = HashSet::new();
+
+        for round in 0..3 {
+            let n = graph.num_nodes();
+            let alive: Vec<u32> = (0..n as u32).filter(|v| !dead.contains(v)).collect();
+            let mut d = GraphDelta::default();
+            for _ in 0..1 + rng.gen_range(3) {
+                let u = *rng.choose(&alive);
+                let v = *rng.choose(&alive);
+                if u != v {
+                    d.added_edges.push((u, v));
+                }
+            }
+            let live_edges: Vec<(u32, u32)> = graph.edges().collect();
+            if !live_edges.is_empty() {
+                for _ in 0..rng.gen_range(3) {
+                    d.removed_edges.push(*rng.choose(&live_edges));
+                }
+            }
+            if rng.gen_bool(0.7) {
+                let v = *rng.choose(&alive);
+                let row: Vec<f32> = (0..fdim).map(|_| (rng.gen_f32() - 0.5) * 2.0).collect();
+                d.updated_features.push((v, row));
+            }
+            if rng.gen_bool(0.8) {
+                let mut attach = vec![*rng.choose(&alive)];
+                if rng.gen_bool(0.5) {
+                    let other = *rng.choose(&alive);
+                    if other != attach[0] {
+                        attach.push(other);
+                    }
+                }
+                let row: Vec<f32> = (0..fdim).map(|_| (rng.gen_f32() - 0.5) * 2.0).collect();
+                d.added_nodes.push(NewNode { features: row, edges: attach });
+            }
+            if rng.gen_bool(0.5) && alive.len() > 4 {
+                let v = *rng.choose(&alive);
+                // a delta may not touch the node it removes
+                d.added_edges.retain(|&(a, b)| a != v && b != v);
+                d.removed_edges.retain(|&(a, b)| a != v && b != v);
+                d.updated_features.retain(|(a, _)| *a != v);
+                for nn in &mut d.added_nodes {
+                    nn.edges.retain(|&e| e != v);
+                }
+                d.removed_nodes.push(v);
+            }
+
+            let ri = inc.apply_delta(&d).map_err(|e| format!("round {round} inc: {e:#}"))?;
+            let rr = reb.apply_delta(&d).map_err(|e| format!("round {round} reb: {e:#}"))?;
+            if ri.graph_version != rr.graph_version {
+                return Err("modes disagree on version".into());
+            }
+
+            // evolve the mirror through the O(E) oracle
+            graph = d.apply_to(&graph);
+            for (v, row) in &d.updated_features {
+                features.row_mut(*v as usize).copy_from_slice(row);
+            }
+            for nn in &d.added_nodes {
+                features.push_row(&nn.features);
+            }
+            for &v in &d.removed_nodes {
+                dead.insert(v);
+            }
+
+            let mut ds2 = ds.clone();
+            ds2.graph = graph.clone();
+            ds2.features = features.clone();
+            let mut fresh = Server::for_dataset(&ds2, params.clone(), cfg.clone())
+                .map_err(|e| format!("round {round} fresh: {e:#}"))?;
+
+            let q: Vec<u32> =
+                (0..graph.num_nodes() as u32).filter(|v| !dead.contains(v)).collect();
+            let a = inc.query_batch(&q).map_err(|e| format!("round {round} q inc: {e:#}"))?;
+            let b = reb.query_batch(&q).map_err(|e| format!("round {round} q reb: {e:#}"))?;
+            let c = fresh.query_batch(&q).map_err(|e| format!("round {round} q fresh: {e:#}"))?;
+            for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+                let bits =
+                    |r: &gad::serve::QueryResult| -> Vec<u32> { r.probs.iter().map(|p| p.to_bits()).collect() };
+                if x.pred != z.pred || bits(x) != bits(z) {
+                    return Err(format!(
+                        "round {round}: incremental diverged from fresh at node {} \
+                         ({} rebuilt, {} invalidated)",
+                        x.node, ri.shards_rebuilt, ri.rows_invalidated
+                    ));
+                }
+                if y.pred != z.pred || bits(y) != bits(z) {
+                    return Err(format!(
+                        "round {round}: rebuild-mode diverged from fresh at node {}",
+                        y.node
+                    ));
+                }
+            }
+            // retired ids must reject queries in both modes
+            if let Some(&v) = d.removed_nodes.first() {
+                if inc.query(v).is_ok() || reb.query(v).is_ok() {
+                    return Err(format!("round {round}: retired node {v} still answers"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
