@@ -35,11 +35,12 @@ fn main() -> anyhow::Result<()> {
     let params = checkpoint::load_validated(&path, dataset.feature_dim(), dataset.num_classes)?;
     println!("checkpoint reloaded from {}", path.display());
 
-    // 3. stand up the sharded server (exact L-hop halos)
+    // 3. stand up the sharded server (exact L-hop halos; the online
+    //    rebalancer defends a 1.5x max/min part-size ratio)
     let mut server = Server::for_dataset(
         &dataset,
         params,
-        ServeConfig { shards: 4, seed: 42, ..ServeConfig::default() },
+        ServeConfig { shards: 4, seed: 42, rebalance: true, ..ServeConfig::default() },
     )?;
     println!(
         "serving {} nodes over {} shards, resident {:.2} MB",
@@ -109,16 +110,37 @@ fn main() -> anyhow::Result<()> {
     server.apply_delta(&GraphDelta { removed_nodes: vec![new_id], ..GraphDelta::default() })?;
     println!("node {new_id} retired online: query now errors = {}", server.query(new_id).is_err());
 
+    // 8. skewed growth: every newcomer attaches next to node 0, so
+    //    plurality homing would pile them all onto one shard — the
+    //    rebalancer migrates boundary nodes to hold the balance
+    let mut grow = GraphDelta::default();
+    for i in 0..32 {
+        grow.added_nodes.push(gad::serve::NewNode {
+            features: vec![0.02 * (i as f32 + 1.0); dataset.feature_dim()],
+            edges: vec![0],
+        });
+    }
+    let rep = server.apply_delta(&grow)?;
+    println!(
+        "skewed growth: +{} nodes, rebalancer migrated {} ({} bytes); max/min part ratio {:.2}",
+        rep.nodes_added,
+        rep.rebalance_moves,
+        rep.rebalance_bytes,
+        server.imbalance_ratio()
+    );
+
     let st = server.stats();
     println!(
-        "totals: {} queries / {} micro-batches, {} cache hits, {} rows recomputed, +{} / -{} nodes, serving traffic {:.2} MB",
+        "totals: {} queries / {} micro-batches, {} cache hits, {} rows recomputed, +{} / -{} nodes, {} migrated, serving {:.2} MB + rebalance {:.2} MB",
         st.queries,
         st.micro_batches,
         st.cache_hits,
         st.rows_recomputed,
         st.nodes_added,
         st.nodes_removed,
-        st.comm.serving_mb()
+        st.nodes_migrated,
+        st.comm.serving_mb(),
+        st.comm.rebalance_mb()
     );
     std::fs::remove_file(&path).ok();
     Ok(())

@@ -538,7 +538,8 @@ pub fn ablation(args: &Args, opts: &RunOpts) -> Result<()> {
 pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
     use crate::model::checkpoint;
     use crate::serve::{
-        run_churn_bench, run_serving_bench, ChurnBenchConfig, HaloPolicy, ServingBenchConfig,
+        run_churn_bench, run_rebalance_bench, run_serving_bench, ChurnBenchConfig, HaloPolicy,
+        RebalanceBenchConfig, ServingBenchConfig,
     };
 
     let name = args.get("dataset", "cora");
@@ -574,6 +575,7 @@ pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
         },
         cache_budget_bytes: (args.get_f64("cache-budget-mb", 0.0)? * 1e6) as u64,
         gather_missing: args.has("gather"),
+        gather_cache_budget_bytes: (args.get_f64("gather-cache-mb", 0.0)? * 1e6) as u64,
         seed: opts.seed,
     };
     let rep = run_serving_bench(&ds, &params, &bcfg)?;
@@ -595,6 +597,7 @@ pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
         rounds: args.get_usize("churn-rounds", if opts.fast { 3 } else { 6 })?,
         queries_per_round: args.get_usize("churn-queries", if opts.fast { 64 } else { 192 })?,
         batch: bcfg.batch,
+        adaptive_compaction: args.has("adaptive-compaction"),
         seed: opts.seed,
         ..Default::default()
     };
@@ -609,6 +612,30 @@ pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
     println!("{md}");
     write_result_file(&format!("{}/fig12_churn.md", opts.out_dir), &md)?;
     write_result_file(&format!("{}/fig12_churn.csv", opts.out_dir), &crep.to_csv())?;
+
+    // 5. skewed-insert scenario: imbalance ratio + p99 per round, the
+    //    online rebalancer on vs off (Fig 13)
+    let rcfg = RebalanceBenchConfig {
+        shards: bcfg.shards,
+        rounds: args.get_usize("rebalance-rounds", if opts.fast { 4 } else { 8 })?,
+        inserts_per_round: args.get_usize("rebalance-inserts", if opts.fast { 12 } else { 24 })?,
+        queries_per_round: args.get_usize("churn-queries", if opts.fast { 64 } else { 128 })?,
+        batch: bcfg.batch,
+        rebalance_ratio: args.get_f64("rebalance-ratio", 1.5)?,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let rrep = run_rebalance_bench(&ds, &params, &rcfg)?;
+    let md = format!(
+        "## Fig 13 — skewed elastic inserts, rebalancer on/off ({name}, k={}, {} rounds x {} inserts)\n\n{}",
+        rcfg.shards,
+        rcfg.rounds,
+        rcfg.inserts_per_round,
+        rrep.to_markdown()
+    );
+    println!("{md}");
+    write_result_file(&format!("{}/fig13_rebalance.md", opts.out_dir), &md)?;
+    write_result_file(&format!("{}/fig13_rebalance.csv", opts.out_dir), &rrep.to_csv())?;
     Ok(())
 }
 

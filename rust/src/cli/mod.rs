@@ -165,7 +165,8 @@ commands
   serve-bench train -> checkpoint -> serve: p50/p99 latency + QPS for
               cached / cold / unsharded serving (Fig 11, ours), then
               deltas/sec + p99 under churn, incremental vs rebuild
-              (Fig 12, ours)
+              (Fig 12, ours), then skewed elastic inserts with the
+              online rebalancer on/off (Fig 13, ours)
   ablate      design-choice ablations (+ crash-fault run)
   all         everything above into --out-dir
 
@@ -198,8 +199,15 @@ serve-bench flags
                  rows from their home shards (bytes accounted)
   --cache-budget-mb F  per-shard cap on retained cache rows; evicts
                  lowest Monte-Carlo importance I(v) first (0 = off)
+  --gather-cache-mb F  cross-request gathered-row cache budget (gather
+                 mode; same I(v) admission; 0 = off)
+  --adaptive-compaction  tune the overlay compaction threshold from
+                 observed splice-vs-flat read latency (Fig 12)
   --churn-rounds N   Fig 12 rounds per churn rate (default 6; 3 fast)
-  --churn-queries N  Fig 12 queries per round (default 192; 64 fast)
+  --churn-queries N  Fig 12/13 queries per round (default 192; 64 fast)
+  --rebalance-rounds N   Fig 13 skewed-insert rounds (default 8; 4 fast)
+  --rebalance-inserts N  Fig 13 inserts per round (default 24; 12 fast)
+  --rebalance-ratio F    Fig 13 max/min part-size trigger (default 1.5)
 ";
 
 #[cfg(test)]

@@ -45,6 +45,12 @@ pub struct CommLedger {
     /// the augmented-subgraph win applied to serving), so this class is
     /// the *entire* cross-shard cost of the serving tier.
     serving_bytes: AtomicU64,
+    /// Online shard-rebalancing traffic: boundary-node migrations
+    /// (feature rows, cache rows, halo joins) moved between shards to
+    /// restore load balance after elastic-membership skew. Accounted
+    /// separately from the serving class so the bench can compare the
+    /// rebalancer's cost against a full repartition's replication bill.
+    rebalance_bytes: AtomicU64,
 }
 
 impl CommLedger {
@@ -68,6 +74,10 @@ impl CommLedger {
         self.serving_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    pub fn record_rebalance(&self, bytes: u64) {
+        self.rebalance_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     pub fn feature_bytes(&self) -> u64 {
         self.feature_bytes.load(Ordering::Relaxed)
     }
@@ -84,8 +94,16 @@ impl CommLedger {
         self.serving_bytes.load(Ordering::Relaxed)
     }
 
+    pub fn rebalance_bytes(&self) -> u64 {
+        self.rebalance_bytes.load(Ordering::Relaxed)
+    }
+
     pub fn total_bytes(&self) -> u64 {
-        self.feature_bytes() + self.gradient_bytes() + self.resync_bytes() + self.serving_bytes()
+        self.feature_bytes()
+            + self.gradient_bytes()
+            + self.resync_bytes()
+            + self.serving_bytes()
+            + self.rebalance_bytes()
     }
 }
 
@@ -96,6 +114,7 @@ pub struct CommStats {
     pub gradient_bytes: u64,
     pub resync_bytes: u64,
     pub serving_bytes: u64,
+    pub rebalance_bytes: u64,
 }
 
 impl CommStats {
@@ -105,12 +124,16 @@ impl CommStats {
             gradient_bytes: l.gradient_bytes(),
             resync_bytes: l.resync_bytes(),
             serving_bytes: l.serving_bytes(),
+            rebalance_bytes: l.rebalance_bytes(),
         }
     }
 
     pub fn total_mb(&self) -> f64 {
-        (self.feature_bytes + self.gradient_bytes + self.resync_bytes + self.serving_bytes)
-            as f64
+        (self.feature_bytes
+            + self.gradient_bytes
+            + self.resync_bytes
+            + self.serving_bytes
+            + self.rebalance_bytes) as f64
             / 1e6
     }
 
@@ -124,6 +147,10 @@ impl CommStats {
 
     pub fn serving_mb(&self) -> f64 {
         self.serving_bytes as f64 / 1e6
+    }
+
+    pub fn rebalance_mb(&self) -> f64 {
+        self.rebalance_bytes as f64 / 1e6
     }
 }
 
@@ -234,6 +261,7 @@ mod tests {
                         ledger.record_gradient(5);
                         ledger.record_resync(2);
                         ledger.record_serving(7);
+                        ledger.record_rebalance(1);
                     }
                 });
             }
@@ -242,6 +270,8 @@ mod tests {
         assert_eq!(ledger.gradient_bytes(), 2000);
         assert_eq!(ledger.resync_bytes(), 800);
         assert_eq!(ledger.serving_bytes(), 2800);
-        assert_eq!(CommStats::from_ledger(&ledger).total_mb(), 6800.0 / 1e6);
+        assert_eq!(ledger.rebalance_bytes(), 400);
+        assert_eq!(ledger.total_bytes(), 7200);
+        assert_eq!(CommStats::from_ledger(&ledger).total_mb(), 7200.0 / 1e6);
     }
 }

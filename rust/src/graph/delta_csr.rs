@@ -19,6 +19,61 @@
 
 use super::{Csr, GraphView};
 use std::collections::HashMap;
+use std::time::Instant;
+
+/// Self-tuning compaction state: the threshold chases an observed
+/// splice-vs-flat read-latency ratio instead of staying at the static
+/// quarter-of-base-arcs default. Flat latency is measured right after
+/// each compaction (the freshest flat snapshot), overlay latency right
+/// before each compaction decision; when overlay reads run more than
+/// `target_slowdown` times slower than the flat baseline the threshold
+/// halves (compact sooner), and when they stay within budget it grows
+/// (compact less often, amortising the O(V+E) fold over more deltas).
+#[derive(Clone, Debug)]
+struct AdaptiveCompaction {
+    /// Tolerated overlay/flat read-latency ratio (> 1.0).
+    target_slowdown: f64,
+    /// EWMA ns-per-arc measured on the flat base after compactions
+    /// (0.0 until the first measurement).
+    flat_ns_per_arc: f64,
+    /// EWMA ns-per-arc measured through the overlay before compaction
+    /// decisions (0.0 until the first measurement).
+    overlay_ns_per_arc: f64,
+    /// Threshold bounds the tuner may move within.
+    min_threshold: usize,
+    max_threshold: usize,
+}
+
+/// EWMA blend factor for latency observations: recent probes dominate
+/// but one noisy measurement cannot whipsaw the threshold.
+const ADAPTIVE_EWMA: f64 = 0.5;
+
+/// Pure retuning rule, factored out so tests can drive it with
+/// synthetic latencies instead of wall-clock probes. Returns the new
+/// threshold given the current one and the observed ns-per-arc pair.
+fn retune_threshold(
+    threshold: usize,
+    overlay_ns_per_arc: f64,
+    flat_ns_per_arc: f64,
+    target_slowdown: f64,
+    min_threshold: usize,
+    max_threshold: usize,
+) -> usize {
+    if flat_ns_per_arc <= 0.0 || overlay_ns_per_arc <= 0.0 {
+        return threshold.clamp(min_threshold, max_threshold);
+    }
+    let ratio = overlay_ns_per_arc / flat_ns_per_arc;
+    let next = if ratio > target_slowdown {
+        // overlay reads have become too slow: compact sooner
+        threshold / 2
+    } else if ratio < 0.5 * target_slowdown + 0.5 {
+        // comfortably within budget: let the overlay grow longer
+        threshold.saturating_mul(2)
+    } else {
+        threshold
+    };
+    next.clamp(min_threshold, max_threshold)
+}
 
 /// See module docs.
 #[derive(Clone, Debug)]
@@ -40,6 +95,8 @@ pub struct DeltaCsr {
     version: u64,
     /// Lifetime compaction count (diagnostics / benches).
     compactions: u64,
+    /// Self-tuning threshold state; `None` keeps the static policy.
+    adaptive: Option<AdaptiveCompaction>,
 }
 
 impl DeltaCsr {
@@ -63,7 +120,70 @@ impl DeltaCsr {
             threshold: threshold.max(1),
             version: 0,
             compactions: 0,
+            adaptive: None,
         }
+    }
+
+    /// Switch [`maybe_compact`](Self::maybe_compact) to the self-tuning
+    /// policy: before each compaction decision the overlay read latency
+    /// is probed and the threshold retuned against the flat baseline
+    /// measured after the last compaction. `target_slowdown` is the
+    /// tolerated overlay/flat ratio (values ≤ 1.0 are clamped to 1.1).
+    pub fn enable_adaptive_compaction(&mut self, target_slowdown: f64) {
+        let max = (self.base.num_arcs() / 2).max(4096);
+        self.adaptive = Some(AdaptiveCompaction {
+            target_slowdown: target_slowdown.max(1.1),
+            flat_ns_per_arc: 0.0,
+            overlay_ns_per_arc: 0.0,
+            min_threshold: 64,
+            max_threshold: max,
+        });
+    }
+
+    /// Current compaction threshold (diagnostics; moves under the
+    /// adaptive policy).
+    pub fn compaction_threshold(&self) -> usize {
+        self.threshold
+    }
+
+    /// Last observed `(overlay, flat)` ns-per-arc pair, when adaptive
+    /// compaction is enabled and both sides have been probed.
+    pub fn adaptive_latencies(&self) -> Option<(f64, f64)> {
+        self.adaptive
+            .as_ref()
+            .filter(|a| a.flat_ns_per_arc > 0.0 && a.overlay_ns_per_arc > 0.0)
+            .map(|a| (a.overlay_ns_per_arc, a.flat_ns_per_arc))
+    }
+
+    /// Time a deterministic sample of row reads through the current
+    /// representation; returns ns per traversed arc. Sampling strides
+    /// over the id space so overlay and base rows are both hit, and the
+    /// neighbour sum is returned through `std::hint::black_box` so the
+    /// traversal cannot be optimised away.
+    fn probe_read_ns_per_arc(&self, sample_rows: usize) -> f64 {
+        let n = self.num_nodes();
+        if n == 0 {
+            return 0.0;
+        }
+        let sample = sample_rows.clamp(1, n);
+        let stride = (n / sample).max(1);
+        let start = Instant::now();
+        let mut arcs = 0usize;
+        let mut checksum = 0u64;
+        let mut v = 0usize;
+        while v < n {
+            let row = self.neighbors(v);
+            arcs += row.len();
+            for &t in row {
+                checksum = checksum.wrapping_add(t as u64);
+            }
+            v += stride;
+        }
+        std::hint::black_box(checksum);
+        if arcs == 0 {
+            return 0.0;
+        }
+        start.elapsed().as_nanos() as f64 / arcs as f64
     }
 
     /// Current graph version (bumped by [`bump_version`](Self::bump_version)).
@@ -172,8 +292,36 @@ impl DeltaCsr {
 
     /// Fold the overlay into a fresh flat base when it has outgrown the
     /// threshold (appended isolated nodes alone never trigger — they
-    /// carry no arcs). Returns whether a compaction ran.
+    /// carry no arcs). Under the adaptive policy the threshold is
+    /// retuned first from a fresh overlay-latency probe. Returns
+    /// whether a compaction ran.
     pub fn maybe_compact(&mut self) -> bool {
+        // probe only when a compaction decision is actually near (the
+        // overlay past half the threshold) — a timed read walk on every
+        // delta would tax the hot path more than splicing costs
+        if self.adaptive.is_some() && !self.overlay.is_empty() && self.overlay_arcs * 2 > self.threshold
+        {
+            // observe the overlay before deciding; the flat side of the
+            // ratio was captured right after the last compaction
+            let sample = (self.overlay.len() * 4).max(64);
+            let probe = self.probe_read_ns_per_arc(sample);
+            let a = self.adaptive.as_mut().expect("checked above");
+            if probe > 0.0 {
+                a.overlay_ns_per_arc = if a.overlay_ns_per_arc > 0.0 {
+                    ADAPTIVE_EWMA * probe + (1.0 - ADAPTIVE_EWMA) * a.overlay_ns_per_arc
+                } else {
+                    probe
+                };
+            }
+            self.threshold = retune_threshold(
+                self.threshold,
+                a.overlay_ns_per_arc,
+                a.flat_ns_per_arc,
+                a.target_slowdown,
+                a.min_threshold,
+                a.max_threshold,
+            );
+        }
         if self.overlay_arcs <= self.threshold {
             return false;
         }
@@ -192,6 +340,19 @@ impl DeltaCsr {
         self.overlay_arcs = 0;
         self.compactions += 1;
         debug_assert_eq!(self.base.num_arcs(), self.arcs);
+        if self.adaptive.is_some() {
+            // freshly flat: (re)measure the baseline the tuner compares
+            // overlay probes against
+            let probe = self.probe_read_ns_per_arc(256);
+            let a = self.adaptive.as_mut().expect("checked above");
+            if probe > 0.0 {
+                a.flat_ns_per_arc = if a.flat_ns_per_arc > 0.0 {
+                    ADAPTIVE_EWMA * probe + (1.0 - ADAPTIVE_EWMA) * a.flat_ns_per_arc
+                } else {
+                    probe
+                };
+            }
+        }
     }
 
     /// Flatten into a standalone [`Csr`] (does not mutate; the oracle
@@ -342,6 +503,48 @@ mod tests {
         d.remove_edge(0, 1);
         let want = GraphBuilder::new(5).edges(&[(1, 2), (2, 3), (3, 4), (0, 2)]).build();
         assert_eq!(d.to_csr(), want);
+    }
+
+    #[test]
+    fn retune_rule_moves_threshold_both_ways() {
+        // overlay 3x slower than flat with a 1.5x budget: compact sooner
+        assert_eq!(retune_threshold(1000, 30.0, 10.0, 1.5, 64, 4096), 500);
+        // overlay as fast as flat: let the overlay grow
+        assert_eq!(retune_threshold(1000, 10.0, 10.0, 1.5, 64, 4096), 2000);
+        // in the comfort band: hold steady
+        assert_eq!(retune_threshold(1000, 13.0, 10.0, 1.5, 64, 4096), 1000);
+        // clamped at both ends
+        assert_eq!(retune_threshold(100, 30.0, 10.0, 1.5, 64, 4096), 64);
+        assert_eq!(retune_threshold(4000, 10.0, 10.0, 1.5, 64, 4096), 4096);
+        // no measurements yet: threshold only clamps
+        assert_eq!(retune_threshold(1000, 0.0, 0.0, 1.5, 64, 4096), 1000);
+    }
+
+    #[test]
+    fn adaptive_compaction_preserves_graph_and_stays_bounded() {
+        let mut d = DeltaCsr::new(path5());
+        d.enable_adaptive_compaction(1.5);
+        let (min_t, max_t) = {
+            let a = d.adaptive.as_ref().unwrap();
+            (a.min_threshold, a.max_threshold)
+        };
+        for i in 0..4u32 {
+            d.add_edge(i, (i + 2) % 5);
+            d.maybe_compact();
+            assert!(d.threshold >= min_t && d.threshold <= max_t);
+        }
+        d.compact();
+        // flat baseline measured after an adaptive compaction
+        assert!(d.adaptive.as_ref().unwrap().flat_ns_per_arc >= 0.0);
+        assert!(d.validate().is_ok());
+        let want = {
+            let mut m = DeltaCsr::new(path5());
+            for i in 0..4u32 {
+                m.add_edge(i, (i + 2) % 5);
+            }
+            m.to_csr()
+        };
+        assert_eq!(d.to_csr(), want, "adaptive policy must not change the graph");
     }
 
     #[test]

@@ -19,7 +19,7 @@
 //! Shared by the CLI `serve-bench` command and
 //! `benches/fig11_serving_latency.rs` / `benches/fig12_churn.rs`.
 
-use super::{DeltaMode, GraphDelta, HaloPolicy, ServeConfig, Server};
+use super::{DeltaMode, GraphDelta, HaloPolicy, NewNode, ServeConfig, Server};
 use crate::datasets::Dataset;
 use crate::model::GcnParams;
 use crate::rng::Rng;
@@ -43,6 +43,8 @@ pub struct ServingBenchConfig {
     pub cache_budget_bytes: u64,
     /// Budgeted halos answer exactly via cross-shard row gathers.
     pub gather_missing: bool,
+    /// Cross-request gathered-row cache budget (gather mode; 0 = off).
+    pub gather_cache_budget_bytes: u64,
     pub seed: u64,
 }
 
@@ -55,6 +57,7 @@ impl Default for ServingBenchConfig {
             halo: HaloPolicy::Exact,
             cache_budget_bytes: 0,
             gather_missing: false,
+            gather_cache_budget_bytes: 0,
             seed: 0,
         }
     }
@@ -204,6 +207,7 @@ pub fn run_serving_bench(
         cache_budget_bytes: cfg.cache_budget_bytes,
         pruned: true,
         gather_missing: cfg.gather_missing,
+        gather_cache_budget_bytes: cfg.gather_cache_budget_bytes,
         seed: cfg.seed,
         ..Default::default()
     };
@@ -238,6 +242,9 @@ pub struct ChurnBenchConfig {
     pub queries_per_round: usize,
     /// Micro-batch size for the query blocks.
     pub batch: usize,
+    /// Tune the overlay compaction threshold from observed
+    /// splice-vs-flat read latency (incremental mode).
+    pub adaptive_compaction: bool,
     pub seed: u64,
 }
 
@@ -250,6 +257,7 @@ impl Default for ChurnBenchConfig {
             edges_per_delta: 4,
             queries_per_round: 192,
             batch: 32,
+            adaptive_compaction: false,
             seed: 0,
         }
     }
@@ -408,6 +416,7 @@ fn run_churn_mode(
     let scfg = ServeConfig {
         shards: cfg.shards,
         delta_mode: mode,
+        adaptive_compaction: cfg.adaptive_compaction && mode == DeltaMode::Incremental,
         seed: cfg.seed,
         ..Default::default()
     };
@@ -475,6 +484,268 @@ pub fn run_churn_bench(
     Ok(ChurnBenchReport { rows })
 }
 
+// --------------------------------------------------------------------
+// Fig 13 (ours): skewed elastic inserts — rebalancer on vs off
+// --------------------------------------------------------------------
+
+/// Bench dimensions (Fig. 13).
+#[derive(Clone, Debug)]
+pub struct RebalanceBenchConfig {
+    /// Serving shards (Exact halo).
+    pub shards: usize,
+    /// Insert rounds; each round applies one skewed-insert delta and
+    /// then answers a query block.
+    pub rounds: usize,
+    /// Nodes inserted per round, all attached inside one part's
+    /// neighbourhood so plurality homing piles them onto one shard.
+    pub inserts_per_round: usize,
+    /// Attachment edges per inserted node.
+    pub attach_edges: usize,
+    /// Queries answered per round.
+    pub queries_per_round: usize,
+    /// Micro-batch size for the query blocks.
+    pub batch: usize,
+    /// Imbalance trigger/target for the rebalancing deployment.
+    pub rebalance_ratio: f64,
+    /// Per-pass migration cap.
+    pub rebalance_max_moves: usize,
+    pub seed: u64,
+}
+
+impl Default for RebalanceBenchConfig {
+    fn default() -> Self {
+        RebalanceBenchConfig {
+            shards: 4,
+            rounds: 8,
+            inserts_per_round: 24,
+            attach_edges: 2,
+            queries_per_round: 128,
+            batch: 32,
+            rebalance_ratio: 1.5,
+            rebalance_max_moves: 64,
+            seed: 0,
+        }
+    }
+}
+
+/// One `(mode, round)` row.
+#[derive(Clone, Debug)]
+pub struct RebalanceRound {
+    /// `rebalance-on` or `rebalance-off`.
+    pub mode: String,
+    pub round: usize,
+    /// Max/min base-node ratio after the round (post-rebalance for the
+    /// on mode).
+    pub imbalance_ratio: f64,
+    pub query_p50_us: f64,
+    pub query_p99_us: f64,
+    /// Nodes migrated this round (on mode only).
+    pub moves: usize,
+    /// Cumulative rebalance-class bytes so far.
+    pub rebalance_bytes: u64,
+}
+
+/// The whole scenario.
+#[derive(Clone, Debug)]
+pub struct RebalanceBenchReport {
+    pub rows: Vec<RebalanceRound>,
+    /// The configured ratio the rebalancer defends.
+    pub ratio_threshold: f64,
+    /// Replication bill of standing the post-churn deployment up from
+    /// scratch (every shard's halo feature rows shipped again) — the
+    /// cost a full repartition would at minimum pay.
+    pub full_repartition_bytes: u64,
+}
+
+impl RebalanceBenchReport {
+    fn rows_of<'a>(&'a self, mode: &'a str) -> impl Iterator<Item = &'a RebalanceRound> + 'a {
+        self.rows.iter().filter(move |r| r.mode == mode)
+    }
+
+    /// Worst post-round ratio the rebalancing deployment showed.
+    pub fn max_ratio_on(&self) -> f64 {
+        self.rows_of("rebalance-on").map(|r| r.imbalance_ratio).fold(0.0, f64::max)
+    }
+
+    /// Worst ratio the drifting deployment reached.
+    pub fn max_ratio_off(&self) -> f64 {
+        self.rows_of("rebalance-off").map(|r| r.imbalance_ratio).fold(0.0, f64::max)
+    }
+
+    /// Total bytes the rebalancer spent across the run.
+    pub fn total_rebalance_bytes(&self) -> u64 {
+        self.rows_of("rebalance-on").map(|r| r.rebalance_bytes).max().unwrap_or(0)
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::from(
+            "| mode | round | max/min ratio | query p50 (µs) | query p99 (µs) | moves | rebalance bytes (cum.) |\n\
+             |---|---|---|---|---|---|---|\n",
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "| {} | {} | {:.3} | {:.1} | {:.1} | {} | {} |",
+                r.mode, r.round, r.imbalance_ratio, r.query_p50_us, r.query_p99_us, r.moves,
+                r.rebalance_bytes
+            );
+        }
+        let _ = writeln!(
+            s,
+            "\nrebalancer held max/min ≤ **{:.3}** (target {:.2}); without it the ratio drifted to **{:.3}**",
+            self.max_ratio_on(),
+            self.ratio_threshold,
+            self.max_ratio_off()
+        );
+        let _ = writeln!(
+            s,
+            "rebalance traffic **{}** bytes vs ≥ **{}** bytes for one full repartition",
+            self.total_rebalance_bytes(),
+            self.full_repartition_bytes
+        );
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "mode,round,imbalance_ratio,query_p50_us,query_p99_us,moves,rebalance_bytes\n",
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{},{},{:.4},{:.2},{:.2},{},{}",
+                r.mode, r.round, r.imbalance_ratio, r.query_p50_us, r.query_p99_us, r.moves,
+                r.rebalance_bytes
+            );
+        }
+        s
+    }
+}
+
+/// Deterministic skewed-insert schedule: every inserted node attaches
+/// to the *initial* membership of one hot part (or to earlier inserts),
+/// so plurality homing keeps piling base nodes onto that part's shard.
+/// The schedule never reads live server state, so the on/off
+/// deployments replay identical mutations.
+fn skewed_insert_schedule(
+    ds: &Dataset,
+    cfg: &RebalanceBenchConfig,
+    hot: &[u32],
+) -> Vec<GraphDelta> {
+    let fdim = ds.feature_dim();
+    let n0 = ds.num_nodes() as u32;
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0xF13);
+    let mut inserted: Vec<u32> = Vec::new();
+    (0..cfg.rounds)
+        .map(|_| {
+            let mut d = GraphDelta::default();
+            for _ in 0..cfg.inserts_per_round {
+                let mut edges: Vec<u32> = Vec::with_capacity(cfg.attach_edges);
+                for _ in 0..cfg.attach_edges.max(1) {
+                    // mostly the fixed hot set, occasionally an earlier
+                    // insert (they live on the hot shard too)
+                    let t = if !inserted.is_empty() && rng.gen_bool(0.25) {
+                        inserted[rng.gen_range(inserted.len())]
+                    } else {
+                        hot[rng.gen_range(hot.len())]
+                    };
+                    if !edges.contains(&t) {
+                        edges.push(t);
+                    }
+                }
+                let features: Vec<f32> = (0..fdim).map(|_| rng.gen_f32() - 0.5).collect();
+                d.added_nodes.push(NewNode { features, edges });
+            }
+            let base = n0 + inserted.len() as u32;
+            inserted.extend((0..cfg.inserts_per_round as u32).map(|i| base + i));
+            d
+        })
+        .collect()
+}
+
+/// Run the Fig-13 scenario: identical skewed-insert + query schedules
+/// against a rebalancing deployment and a drifting one.
+pub fn run_rebalance_bench(
+    ds: &Dataset,
+    params: &GcnParams,
+    cfg: &RebalanceBenchConfig,
+) -> Result<RebalanceBenchReport> {
+    let scfg_off = ServeConfig {
+        shards: cfg.shards,
+        halo: HaloPolicy::Exact,
+        rebalance: false,
+        rebalance_ratio: cfg.rebalance_ratio,
+        rebalance_max_moves: cfg.rebalance_max_moves,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let scfg_on = ServeConfig { rebalance: true, ..scfg_off.clone() };
+    let mut on = Server::for_dataset(ds, params.clone(), scfg_on)?;
+    let mut off = Server::for_dataset(ds, params.clone(), scfg_off)?;
+
+    // the hot part's initial membership — identical in both servers
+    // (same partition seed), so the schedule is shared
+    let hot: Vec<u32> =
+        (0..ds.num_nodes() as u32).filter(|&v| on.shard_of(v) == 0).collect();
+    if hot.is_empty() {
+        return Err(anyhow::anyhow!("hot part is empty; cannot build a skewed schedule"));
+    }
+    let schedule = skewed_insert_schedule(ds, cfg, &hot);
+
+    let warm: Vec<u32> = (0..ds.num_nodes() as u32).collect();
+    for chunk in warm.chunks(256) {
+        on.query_batch(chunk)?;
+        off.query_batch(chunk)?;
+    }
+
+    let mut qrng = Rng::seed_from_u64(cfg.seed ^ 0x13F1);
+    let mut rows = Vec::new();
+    for (round, delta) in schedule.iter().enumerate() {
+        let rep_on = on.apply_delta(delta)?;
+        off.apply_delta(delta)?;
+        let n_alive = on.num_nodes();
+        let stream: Vec<u32> =
+            (0..cfg.queries_per_round).map(|_| qrng.gen_range(n_alive) as u32).collect();
+        let lat = |srv: &mut Server| -> Result<(f64, f64)> {
+            let mut us = Vec::new();
+            for chunk in stream.chunks(cfg.batch.max(1)) {
+                let t = Instant::now();
+                srv.query_batch(chunk)?;
+                us.push(t.elapsed().as_secs_f64() * 1e6);
+            }
+            us.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+            Ok((percentile(&us, 0.50), percentile(&us, 0.99)))
+        };
+        let (on_p50, on_p99) = lat(&mut on)?;
+        let (off_p50, off_p99) = lat(&mut off)?;
+        rows.push(RebalanceRound {
+            mode: "rebalance-on".into(),
+            round,
+            imbalance_ratio: on.imbalance_ratio(),
+            query_p50_us: on_p50,
+            query_p99_us: on_p99,
+            moves: rep_on.rebalance_moves,
+            rebalance_bytes: on.stats().comm.rebalance_bytes,
+        });
+        rows.push(RebalanceRound {
+            mode: "rebalance-off".into(),
+            round,
+            imbalance_ratio: off.imbalance_ratio(),
+            query_p50_us: off_p50,
+            query_p99_us: off_p99,
+            moves: 0,
+            rebalance_bytes: 0,
+        });
+    }
+
+    // a full repartition would at minimum re-ship every halo feature
+    // row of the post-churn deployment
+    let frow = ds.feature_dim() as u64 * 4;
+    let full_repartition_bytes: u64 =
+        off.shards.iter().map(|s| s.replicas.len() as u64 * frow).sum();
+    Ok(RebalanceBenchReport { rows, ratio_threshold: cfg.rebalance_ratio, full_repartition_bytes })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -509,6 +780,37 @@ mod tests {
         assert!(rep.to_markdown().contains("unsharded-pernode"));
         assert!(rep.to_csv().lines().count() == 4);
         assert!(rep.cached_speedup_vs_baseline().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn rebalance_bench_holds_ratio_where_drift_breaks_it() {
+        let ds = SyntheticSpec::tiny().generate(3);
+        let mut rng = crate::rng::Rng::seed_from_u64(3);
+        let params = GcnParams::init(ds.feature_dim(), 8, ds.num_classes, 2, &mut rng);
+        let cfg = RebalanceBenchConfig {
+            rounds: 4,
+            inserts_per_round: 16,
+            queries_per_round: 32,
+            batch: 8,
+            ..Default::default()
+        };
+        let rep = run_rebalance_bench(&ds, &params, &cfg).unwrap();
+        assert_eq!(rep.rows.len(), 2 * cfg.rounds, "one row per mode per round");
+        assert!(
+            rep.max_ratio_on() <= cfg.rebalance_ratio + 1e-9,
+            "rebalancer must defend the ratio (got {:.3})",
+            rep.max_ratio_on()
+        );
+        assert!(
+            rep.max_ratio_off() > cfg.rebalance_ratio,
+            "the skewed schedule must actually break balance without it (got {:.3})",
+            rep.max_ratio_off()
+        );
+        assert!(rep.total_rebalance_bytes() > 0, "migrations must be accounted");
+        assert!(rep.full_repartition_bytes > 0);
+        let md = rep.to_markdown();
+        assert!(md.contains("rebalance-on") && md.contains("rebalance-off"));
+        assert_eq!(rep.to_csv().lines().count(), 1 + 2 * cfg.rounds);
     }
 
     #[test]

@@ -1,29 +1,49 @@
-//! Exact answers on budgeted halos: cross-shard row gathering.
+//! Exact answers on budgeted halos: cross-shard row gathering, with an
+//! optional cross-request gathered-row cache.
 //!
 //! A [`HaloPolicy::Budgeted`](super::HaloPolicy::Budgeted) shard lacks
 //! part of its L-hop candidate set, so its local forward approximates
 //! boundary neighbourhoods. With
 //! [`ServeConfig::gather_missing`](super::ServeConfig::gather_missing)
 //! the server answers such queries **exactly** instead: it walks the
-//! queried nodes' true L-hop dependency cone over the *global* overlay
-//! graph, computes each layer's rows grouped by the owning home shard
-//! (one GEMM per layer — per-row results are independent of grouping,
-//! so this is bit-identical to the full-graph forward), and accounts
-//! every row a consumer shard needs but does not hold:
+//! queried nodes' true dependency cone over the *global* overlay graph,
+//! computes each level's rows (one GEMM per layer — per-row results are
+//! independent of grouping, so this is bit-identical to the full-graph
+//! forward), and accounts every row a consumer shard needs but does not
+//! hold. Row *levels* are uniform here: level 0 is the feature row,
+//! level `r ≥ 1` is the embedding `H_r` (the output of GEMM `r-1`).
 //!
-//! * layer 0 — a feature row is free when the consumer's shard already
-//!   replicates the node (base or sampled halo member); otherwise it is
-//!   fetched from the node's home shard at `feature_dim × 4` bytes.
-//!   This is where a bigger sampled halo buys fewer fetches.
-//! * layer `l > 0` — an embedding row is computed by its node's home
-//!   shard and is free only there; any other consumer pays
-//!   `dim_l × 4` bytes.
+//! Billing rules, applied per `(level, row, consumer shard)` within a
+//! request (deduplicated):
 //!
-//! Fetches are deduplicated per `(layer, row, consumer shard)` within a
-//! request. All bytes land in the [`CommLedger`](crate::comm::CommLedger)
-//! serving class. Results are transient per request — mixing exact
-//! gathered rows into the shards' (approximate) local caches would
-//! poison them, so the caches are bypassed entirely on this path.
+//! * level 0 — free when the consumer's shard already replicates the
+//!   node (base or sampled halo member); otherwise fetched from the
+//!   node's home shard at `feature_dim × 4` bytes. **A halo-replicated
+//!   row is never billed**, cached or not — replication already paid
+//!   for it in the serving class.
+//! * level `r ≥ 1` — computed by the node's home shard and free there;
+//!   any other consumer pays `dim_r × 4` bytes.
+//! * either level — free when the consumer fetched the row in an
+//!   earlier request and the **gathered-row cache**
+//!   ([`ServeConfig::gather_cache_budget_bytes`]) still retains that
+//!   copy. Cached embedding values are also reused across requests, so
+//!   a hot boundary query skips both the re-fetch *and* the recompute
+//!   of its cached sub-cone.
+//!
+//! Cache entries model per-consumer retained copies: admission and
+//! eviction order is the same Monte-Carlo importance `I(v)` the
+//! embedding cache uses (the consumer shard's candidate score for the
+//! row's node), budget enforced once per request. Any applied
+//! [`GraphDelta`](super::GraphDelta) clears the cache wholesale —
+//! matching the budgeted shards' own restart-cold conservatism — while
+//! a rebalance migration (membership-only, values unchanged) leaves it
+//! intact. All billed bytes land in the
+//! [`CommLedger`](crate::comm::CommLedger) serving class. The shards'
+//! embedding caches are still bypassed on this path — mixing exact
+//! gathered rows into their (approximate) local caches would poison
+//! them.
+//!
+//! [`ServeConfig::gather_cache_budget_bytes`]: super::ServeConfig::gather_cache_budget_bytes
 
 use super::server::{QueryResult, Server};
 use crate::graph::GraphView;
@@ -31,13 +51,115 @@ use crate::tensor::{gemm, relu, softmax_rows, Matrix};
 use anyhow::Result;
 use std::collections::{HashMap, HashSet};
 
-/// One input row's contribution to the aggregation of `(v, layer l)`,
+/// Cross-request gathered-row cache (see module docs).
+pub(crate) struct GatherRowCache {
+    budget: u64,
+    bytes: u64,
+    /// `(level, node, consumer shard)` → (entry bytes, admission score).
+    entries: HashMap<(usize, u32, u32), (u64, f32)>,
+    /// Embedding values retained for reuse (level ≥ 1 only; feature
+    /// rows are globally resident and need no copy here). A value lives
+    /// as long as at least one consumer entry for it does.
+    values: HashMap<(usize, u32), Vec<f32>>,
+    /// Embedding rows whose recompute was skipped via a cached value.
+    pub rows_reused: u64,
+    /// Cross-shard fetches skipped because the consumer held a copy.
+    pub fetches_avoided: u64,
+    /// Entries dropped by the byte budget.
+    pub rows_evicted: u64,
+}
+
+impl GatherRowCache {
+    pub fn new(budget: u64) -> Self {
+        GatherRowCache {
+            budget,
+            bytes: 0,
+            entries: HashMap::new(),
+            values: HashMap::new(),
+            rows_reused: 0,
+            fetches_avoided: 0,
+            rows_evicted: 0,
+        }
+    }
+
+    /// Bytes currently retained.
+    pub fn resident_bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Drop every entry (counters survive). The server calls this on
+    /// every applied graph delta.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.values.clear();
+        self.bytes = 0;
+    }
+
+    /// Does `consumer` hold a copy of `(level, node)`?
+    fn holds(&self, level: usize, node: u32, consumer: u32) -> bool {
+        self.entries.contains_key(&(level, node, consumer))
+    }
+
+    /// Retained embedding value, if any (level ≥ 1).
+    fn value(&self, level: usize, node: u32) -> Option<&[f32]> {
+        self.values.get(&(level, node)).map(|v| v.as_slice())
+    }
+
+    /// Record that `consumer` fetched `(level, node)`; retains the
+    /// embedding value for levels ≥ 1. Budget enforcement is deferred
+    /// to [`enforce_budget`](Self::enforce_budget) (once per request).
+    fn admit(&mut self, level: usize, node: u32, consumer: u32, bytes: u64, score: f32, value: Option<&[f32]>) {
+        if self.entries.insert((level, node, consumer), (bytes, score)).is_none() {
+            self.bytes += bytes;
+        }
+        if level > 0 {
+            if let Some(v) = value {
+                self.values.entry((level, node)).or_insert_with(|| v.to_vec());
+            }
+        }
+    }
+
+    /// Evict lowest-score entries (ties toward higher level, then
+    /// higher node/consumer id — fully deterministic) until the budget
+    /// holds. A value whose last consumer entry goes is dropped too.
+    pub fn enforce_budget(&mut self) {
+        if self.budget == 0 || self.bytes <= self.budget {
+            return;
+        }
+        let mut order: Vec<((usize, u32, u32), u64, f32)> =
+            self.entries.iter().map(|(&k, &(b, s))| (k, b, s)).collect();
+        order.sort_by(|a, b| {
+            a.2.partial_cmp(&b.2)
+                .expect("scores are finite")
+                .then(b.0 .0.cmp(&a.0 .0))
+                .then(b.0 .1.cmp(&a.0 .1))
+                .then(b.0 .2.cmp(&a.0 .2))
+        });
+        for (key, bytes, _) in order {
+            if self.bytes <= self.budget {
+                break;
+            }
+            self.entries.remove(&key);
+            self.bytes -= bytes;
+            self.rows_evicted += 1;
+        }
+        // one pass over the survivors: a value whose every consumer
+        // entry was evicted goes with them
+        let live: HashSet<(usize, u32)> =
+            self.entries.keys().map(|&(l, n, _)| (l, n)).collect();
+        self.values.retain(|k, _| live.contains(k));
+    }
+}
+
+/// One input row's contribution to the aggregation of `(v, GEMM l)`,
 /// replayed in `NormAdj` row order so the result is bit-identical to
-/// the full-graph forward; cross-shard fetches are tallied as they
-/// happen.
+/// the full-graph forward; cross-shard fetches are tallied (and cached
+/// copies recorded) as they happen. `level = l` is the consumed row's
+/// level: features at 0, `H_l` otherwise.
 #[allow(clippy::too_many_arguments)]
 fn accumulate(
     srv: &Server,
+    cache: &mut Option<GatherRowCache>,
     prev: &HashMap<u32, Vec<f32>>,
     l: usize,
     v: u32,
@@ -58,14 +180,27 @@ fn accumulate(
     if t == v {
         return; // self loop: the consumer owns its own row
     }
+    // replication first: a halo-resident feature row (or a home-shard
+    // embedding) is free and never enters the fetch cache
     let missing = if l == 0 {
-        // feature rows are replicated wherever the halo sampled them
         srv.shards[consumer as usize].local_of(t).is_none()
     } else {
-        // embedding rows live only on their home shard this request
         srv.assignment[t as usize] != consumer
     };
-    if missing && fetched.insert((l, t, consumer)) {
+    if !missing || !fetched.insert((l, t, consumer)) {
+        return;
+    }
+    if let Some(c) = cache {
+        if c.holds(l, t, consumer) {
+            c.fetches_avoided += 1;
+            return; // fetched in an earlier request; copy retained
+        }
+        let cost = if l == 0 { frow_bytes } else { row_bytes };
+        let score = srv.shards[consumer as usize].candidate_score(t);
+        let value = if l == 0 { None } else { Some(row) };
+        c.admit(l, t, consumer, cost, score, value);
+        *bytes += cost;
+    } else {
         *bytes += if l == 0 { frow_bytes } else { row_bytes };
     }
 }
@@ -74,29 +209,50 @@ fn accumulate(
 /// node ids (in range, not retired).
 pub(crate) fn query_batch_gather(srv: &mut Server, nodes: &[u32]) -> Result<Vec<QueryResult>> {
     let layers = srv.params.layers();
+    // the cache moves out of the server for the request so the borrow
+    // checker lets it mutate alongside reads of the graph/shards
+    let mut cache = srv.gather_cache.take();
 
-    // ---- the true dependency cone, layer by layer (global ids) ------
-    let mut need: Vec<Vec<u32>> = vec![Vec::new(); layers];
+    // ---- the dependency cone, level by level (global ids), skipping
+    //      sub-cones whose embedding value the cache retains ----------
+    let mut need: Vec<Vec<u32>> = vec![Vec::new(); layers]; // per GEMM
+    let mut reused: Vec<Vec<u32>> = vec![Vec::new(); layers + 1]; // per level
     let mut top: Vec<u32> = nodes.to_vec();
     top.sort_unstable();
     top.dedup();
-    need[layers - 1] = top;
-    for l in (0..layers.saturating_sub(1)).rev() {
-        let mut s: Vec<u32> = need[l + 1].clone();
-        for &v in &need[l + 1] {
-            s.extend_from_slice(srv.graph.neighbors(v as usize));
+    let mut required = top; // rows of level `l+1` required at GEMM l
+    for l in (0..layers).rev() {
+        let mut compute = Vec::with_capacity(required.len());
+        for &u in &required {
+            let cached = cache
+                .as_ref()
+                .map(|c| c.value(l + 1, u).is_some())
+                .unwrap_or(false);
+            if cached {
+                reused[l + 1].push(u);
+            } else {
+                compute.push(u);
+            }
         }
-        s.sort_unstable();
-        s.dedup();
-        need[l] = s;
+        // inputs at level l: the closed neighbourhood of what GEMM l
+        // actually computes
+        let mut inputs: Vec<u32> = compute.clone();
+        for &u in &compute {
+            inputs.extend_from_slice(srv.graph.neighbors(u as usize));
+        }
+        inputs.sort_unstable();
+        inputs.dedup();
+        need[l] = compute;
+        required = inputs;
     }
 
-    // ---- per-layer: aggregate over global adjacency, one GEMM -------
+    // ---- per level: aggregate over global adjacency, one GEMM -------
     let frow_bytes = (srv.features.cols * 4) as u64;
     let mut bytes = 0u64;
     let mut fetched: HashSet<(usize, u32, u32)> = HashSet::new();
     let mut prev: HashMap<u32, Vec<f32>> = HashMap::new();
     let mut rows_recomputed = 0usize;
+    let mut rows_reused = 0u64;
     for l in 0..layers {
         let sel = std::mem::take(&mut need[l]);
         let in_dim = srv.params.ws[l].rows;
@@ -111,29 +267,49 @@ pub(crate) fn query_batch_gather(srv: &mut Server, nodes: &[u32]) -> Result<Vec<
             for &t in srv.graph.neighbors(vu) {
                 if !self_done && t > v {
                     accumulate(
-                        srv, &prev, l, v, v, iv, consumer, orow, &mut bytes, &mut fetched,
-                        frow_bytes, row_bytes,
+                        srv, &mut cache, &prev, l, v, v, iv, consumer, orow, &mut bytes,
+                        &mut fetched, frow_bytes, row_bytes,
                     );
                     self_done = true;
                 }
                 accumulate(
-                    srv, &prev, l, v, t, iv, consumer, orow, &mut bytes, &mut fetched,
-                    frow_bytes, row_bytes,
+                    srv, &mut cache, &prev, l, v, t, iv, consumer, orow, &mut bytes,
+                    &mut fetched, frow_bytes, row_bytes,
                 );
             }
             if !self_done {
                 accumulate(
-                    srv, &prev, l, v, v, iv, consumer, orow, &mut bytes, &mut fetched,
-                    frow_bytes, row_bytes,
+                    srv, &mut cache, &prev, l, v, v, iv, consumer, orow, &mut bytes,
+                    &mut fetched, frow_bytes, row_bytes,
                 );
             }
         }
         let mut z = gemm(&agg, &srv.params.ws[l]);
         if l + 1 < layers {
             relu(&mut z);
+        } else if let Some(c) = &mut cache {
+            // retain the freshly computed output rows too (home-owned,
+            // so no fetch is billed; score 1.0 keeps hot query outputs
+            // resident) — a repeat query then skips its whole cone
+            let out_bytes = (srv.params.ws[l].cols * 4) as u64;
+            for (i, &v) in sel.iter().enumerate() {
+                c.admit(layers, v, srv.assignment[v as usize], out_bytes, 1.0, Some(z.row(i)));
+            }
         }
-        prev = sel.iter().enumerate().map(|(i, &v)| (v, z.row(i).to_vec())).collect();
+        let mut next: HashMap<u32, Vec<f32>> =
+            sel.iter().enumerate().map(|(i, &v)| (v, z.row(i).to_vec())).collect();
+        // splice in the level-(l+1) rows the cache already held
+        for &u in &reused[l + 1] {
+            let row = cache
+                .as_ref()
+                .and_then(|c| c.value(l + 1, u))
+                .expect("reused rows were planned against the cache")
+                .to_vec();
+            next.insert(u, row);
+            rows_reused += 1;
+        }
         rows_recomputed += sel.len();
+        prev = next;
     }
 
     // ---- answer ------------------------------------------------------
@@ -145,7 +321,13 @@ pub(crate) fn query_batch_gather(srv: &mut Server, nodes: &[u32]) -> Result<Vec<
     let probs = softmax_rows(&logits);
     let preds = probs.argmax_rows();
     let version = srv.graph.version();
+    let output_reused: HashSet<u32> = reused[layers].iter().copied().collect();
 
+    if let Some(c) = &mut cache {
+        c.rows_reused += rows_reused;
+        c.enforce_budget();
+    }
+    srv.gather_cache = cache;
     srv.queries += nodes.len() as u64;
     srv.micro_batches += 1;
     srv.rows_recomputed += rows_recomputed as u64;
@@ -160,8 +342,54 @@ pub(crate) fn query_batch_gather(srv: &mut Server, nodes: &[u32]) -> Result<Vec<
             probs: probs.row(i).to_vec(),
             shard: srv.assignment[v as usize],
             graph_version: version,
-            cache_hit: false,
+            cache_hit: output_reused.contains(&v),
             rows_recomputed,
         })
         .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_admits_holds_and_clears() {
+        let mut c = GatherRowCache::new(1024);
+        assert!(!c.holds(1, 7, 0));
+        c.admit(1, 7, 0, 16, 0.5, Some(&[1.0, 2.0, 3.0, 4.0]));
+        assert!(c.holds(1, 7, 0));
+        assert!(!c.holds(1, 7, 1), "copies are per consumer");
+        assert_eq!(c.value(1, 7), Some(&[1.0, 2.0, 3.0, 4.0][..]));
+        assert_eq!(c.resident_bytes(), 16);
+        // re-admitting the same key does not double count
+        c.admit(1, 7, 0, 16, 0.5, Some(&[1.0, 2.0, 3.0, 4.0]));
+        assert_eq!(c.resident_bytes(), 16);
+        // feature entries carry no value
+        c.admit(0, 3, 1, 8, 0.1, None);
+        assert!(c.holds(0, 3, 1));
+        assert!(c.value(0, 3).is_none());
+        c.clear();
+        assert!(!c.holds(1, 7, 0));
+        assert_eq!(c.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn budget_evicts_lowest_score_and_drops_orphaned_values() {
+        let mut c = GatherRowCache::new(32);
+        c.admit(1, 1, 0, 16, 0.9, Some(&[1.0; 4]));
+        c.admit(1, 2, 0, 16, 0.1, Some(&[2.0; 4]));
+        c.enforce_budget();
+        assert_eq!(c.resident_bytes(), 32, "at budget: nothing goes");
+        c.admit(1, 3, 0, 16, 0.5, Some(&[3.0; 4]));
+        c.enforce_budget();
+        assert_eq!(c.resident_bytes(), 32);
+        assert!(!c.holds(1, 2, 0), "lowest score evicted first");
+        assert!(c.value(1, 2).is_none(), "orphaned value dropped");
+        assert!(c.holds(1, 1, 0) && c.holds(1, 3, 0));
+        assert_eq!(c.rows_evicted, 1);
+        // a value with a surviving consumer stays
+        c.admit(1, 1, 1, 16, 0.8, Some(&[1.0; 4]));
+        c.enforce_budget();
+        assert!(c.value(1, 1).is_some());
+    }
 }

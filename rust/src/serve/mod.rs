@@ -40,6 +40,11 @@
 //!   and halo churn at mutation, missing-row gathers in budgeted mode —
 //!   land in the [`CommLedger`](crate::comm::CommLedger)'s serving
 //!   traffic class; the Exact-halo query path itself moves zero bytes.
+//!   When elastic churn skews the per-part load, an optional **online
+//!   rebalancer** ([`ServeConfig::rebalance`]) migrates boundary nodes
+//!   from overloaded to underloaded parts by minimum edge-cut delta —
+//!   bit-identical answers, bytes in a dedicated rebalance traffic
+//!   class (see [`rebalance`](RebalanceReport)).
 //!
 //! [`NormAdj::with_inv_sqrt`]: crate::model::NormAdj::with_inv_sqrt
 
@@ -47,15 +52,18 @@ pub mod bench;
 mod cache;
 mod delta;
 mod gather;
+mod rebalance;
 mod server;
 mod shard;
 
 pub use bench::{
-    run_churn_bench, run_serving_bench, ChurnBenchConfig, ChurnBenchReport, ChurnSummary,
-    LatencySummary, ServingBenchConfig, ServingBenchReport,
+    run_churn_bench, run_rebalance_bench, run_serving_bench, ChurnBenchConfig, ChurnBenchReport,
+    ChurnSummary, LatencySummary, RebalanceBenchConfig, RebalanceBenchReport, RebalanceRound,
+    ServingBenchConfig, ServingBenchReport,
 };
 pub use cache::EmbeddingCache;
 pub use delta::{EdgeChurn, GraphDelta, NewNode};
+pub use rebalance::RebalanceReport;
 pub use server::{DeltaReport, QueryResult, Server, ServeStats};
 pub use shard::{ShardEngine, ShardServeOutcome};
 
@@ -109,8 +117,33 @@ pub struct ServeConfig {
     /// truncated halo lacks from their home shards (fetched bytes land
     /// in the serving traffic class) instead of approximating.
     pub gather_missing: bool,
+    /// Byte budget for the cross-request gathered-row cache (gather
+    /// mode only; 0 = recompute + re-bill the full dependency cone per
+    /// request, the pre-cache behaviour). Cached rows are admitted and
+    /// evicted by the same Monte-Carlo importance `I(v)` the embedding
+    /// cache uses, and a row already replicated in a consumer's halo is
+    /// never billed — cached or not.
+    pub gather_cache_budget_bytes: u64,
     /// Delta application strategy (see [`DeltaMode`]).
     pub delta_mode: DeltaMode,
+    /// Tune the overlay-CSR compaction threshold from observed
+    /// splice-vs-flat read latency instead of the static
+    /// quarter-of-base-arcs default
+    /// (see [`DeltaCsr::enable_adaptive_compaction`]).
+    ///
+    /// [`DeltaCsr::enable_adaptive_compaction`]: crate::graph::DeltaCsr::enable_adaptive_compaction
+    pub adaptive_compaction: bool,
+    /// Enable the online load rebalancer: after each applied delta,
+    /// when the max/min base-node ratio across parts exceeds
+    /// [`rebalance_ratio`](Self::rebalance_ratio), boundary nodes
+    /// migrate from overloaded to underloaded parts (lowest edge-cut
+    /// delta first), bytes accounted in the rebalance traffic class.
+    pub rebalance: bool,
+    /// Imbalance trigger/target: the rebalancer runs while
+    /// `max_part/min_part > rebalance_ratio` (must be > 1.0).
+    pub rebalance_ratio: f64,
+    /// Migration cap per rebalance pass (bounds post-delta latency).
+    pub rebalance_max_moves: usize,
     /// Partitioner / halo-sampling seed.
     pub seed: u64,
 }
@@ -124,7 +157,12 @@ impl Default for ServeConfig {
             cache_budget_bytes: 0,
             pruned: true,
             gather_missing: false,
+            gather_cache_budget_bytes: 0,
             delta_mode: DeltaMode::Incremental,
+            adaptive_compaction: false,
+            rebalance: false,
+            rebalance_ratio: 1.5,
+            rebalance_max_moves: 32,
             seed: 0,
         }
     }

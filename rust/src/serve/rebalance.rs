@@ -1,0 +1,335 @@
+//! Online shard load rebalancing.
+//!
+//! PR 4's elastic membership homes inserted nodes by neighbour
+//! plurality, so sustained insert skew piles base nodes onto one shard
+//! — the serving-tier analogue of the partition imbalance GAD-Partition
+//! avoids offline. This module restores balance *online*: when the
+//! max/min base-node ratio across parts exceeds
+//! [`ServeConfig::rebalance_ratio`], boundary nodes migrate from the
+//! most loaded part to the least loaded one, candidates chosen by
+//! **minimum edge-cut delta** (fewest new cross-part arcs), in the
+//! spirit of CuSP-style streaming repartitioners.
+//!
+//! A migration changes *membership only* — no edge, feature or degree
+//! changes — so the graph version does not move and no cached embedding
+//! value becomes numerically stale. Each affected shard folds the
+//! membership change through the same incremental machinery a
+//! [`GraphDelta`](super::GraphDelta) uses (boundary refresh → bounded
+//! BFS halo recompute → shard-local re-induction with cache-row
+//! migration; never a global rebuild), and the moved nodes' feature
+//! rows plus their still-valid cache rows ship donor → recipient. Every
+//! migrated byte lands in the [`CommLedger`](crate::comm::CommLedger)'s
+//! **rebalance** traffic class so the bench can weigh the rebalancer
+//! against the replication bill of a full repartition.
+//!
+//! One correctness subtlety: a shard may hold cache rows for a halo
+//! replica at depths its truncated neighbourhood cannot compute
+//! exactly (harmless while the node stays a replica — the dependency
+//! cone never reads beyond the valid envelope, which is set by the
+//! node's distance to the shard's boundary). A migration moves the
+//! donor's and recipient's boundaries, so envelopes near the moved
+//! nodes can *grow*, making previously unreadable truncated rows
+//! readable. The fold therefore invalidates every cached row within
+//! the moved nodes' L-hop cone on the two affected shards (the same
+//! bounded-BFS rule deltas use; third-party shards keep their boundary
+//! and need nothing), and the recipient then adopts the donor's rows
+//! for each moved-in node — the donor computed them while the node was
+//! base there, i.e. bit-identical to the full-graph forward at every
+//! depth. The property tests pin this down.
+
+use super::delta::EdgeChurn;
+use super::server::Server;
+use super::shard::{ShardDeltaCtx, ShardEngine};
+use super::HaloPolicy;
+use crate::graph::{bounded_bfs_distances_sparse, GraphView};
+use std::collections::{HashMap, HashSet};
+
+/// What one rebalance pass did.
+#[derive(Clone, Debug, Default)]
+pub struct RebalanceReport {
+    /// The pass moved at least one node.
+    pub triggered: bool,
+    /// Nodes migrated between parts.
+    pub moves: usize,
+    /// Bytes shipped (feature rows + cache rows + halo joins), also
+    /// recorded in the ledger's rebalance class.
+    pub bytes: u64,
+    /// Max/min base-node ratio before the pass.
+    pub ratio_before: f64,
+    /// Max/min base-node ratio after the pass.
+    pub ratio_after: f64,
+    /// Shards that re-induced their subgraph to absorb the migrations.
+    pub shards_rebuilt: usize,
+}
+
+/// One planned migration plus the pre-fold state the byte accounting
+/// and cache adoption need.
+struct Move {
+    node: u32,
+    from: u32,
+    to: u32,
+    /// The recipient already replicated the node's feature row in its
+    /// halo — migration ships no feature bytes.
+    feature_resident: bool,
+    /// The donor's still-valid cache rows for the node, captured before
+    /// the donor shard is rebuilt: `(layer, row)`.
+    cache_rows: Vec<(usize, Vec<f32>)>,
+}
+
+/// Max/min ratio over per-part base counts; empty parts count as 1 so
+/// a starved part reads as a large finite ratio instead of dividing by
+/// zero.
+pub(crate) fn imbalance_ratio(base_counts: &[usize]) -> f64 {
+    let max = base_counts.iter().copied().max().unwrap_or(0);
+    let min = base_counts.iter().copied().min().unwrap_or(0);
+    max as f64 / min.max(1) as f64
+}
+
+/// Edge-cut delta of moving `node` from `from` to `to`: each neighbour
+/// still in `from` becomes a new cross-part arc (+1), each neighbour
+/// already in `to` stops being one (-1). Lower is better.
+fn cut_delta<G: GraphView>(graph: &G, assignment: &[u32], node: u32, from: u32, to: u32) -> i64 {
+    let mut d = 0i64;
+    for &t in graph.neighbors(node as usize) {
+        let p = assignment[t as usize];
+        if p == from {
+            d += 1;
+        } else if p == to {
+            d -= 1;
+        }
+    }
+    d
+}
+
+/// Choose the donor node whose migration to `to` perturbs the edge cut
+/// least: boundary nodes first (they already have cross-part arcs, so
+/// candidates are cheap to enumerate and usually contain the winner),
+/// falling back to a full scan of the donor's pre-pass membership when
+/// the boundary yields nothing. Deterministic: ties break toward lower
+/// degree, then lower id.
+fn pick_candidate(
+    srv: &Server,
+    owned: &[u32],
+    boundary: &[u32],
+    moved: &HashSet<u32>,
+    from: u32,
+    to: u32,
+) -> Option<u32> {
+    let score_of = |v: u32| -> Option<(i64, usize, u32)> {
+        if moved.contains(&v) || srv.assignment[v as usize] != from {
+            return None;
+        }
+        let score = cut_delta(&srv.graph, &srv.assignment, v, from, to);
+        Some((score, srv.graph.degree(v as usize), v))
+    };
+    boundary
+        .iter()
+        .filter_map(|&v| score_of(v))
+        .min()
+        .or_else(|| owned.iter().filter_map(|&v| score_of(v)).min())
+        .map(|(_, _, v)| v)
+}
+
+/// Run one bounded rebalance pass over `srv` (see module docs). Caller
+/// decides the trigger; the pass itself re-checks the ratio before
+/// every move and stops as soon as the target holds, the move cap is
+/// reached, or no move can help.
+pub(crate) fn run(srv: &mut Server) -> RebalanceReport {
+    let k = srv.shards.len();
+    let ratio_before = imbalance_ratio(&srv.base_counts);
+    let mut report = RebalanceReport {
+        ratio_before,
+        ratio_after: ratio_before,
+        ..RebalanceReport::default()
+    };
+    if k < 2 {
+        return report;
+    }
+    let layers = srv.params.layers();
+    let dims: Vec<usize> = srv.params.ws.iter().map(|w| w.cols).collect();
+
+    // shards are built one per part, but index defensively by part id
+    let part_index: HashMap<u32, usize> =
+        srv.shards.iter().enumerate().map(|(i, s)| (s.part, i)).collect();
+    // pre-pass membership and boundary snapshots per part (the plan is
+    // computed against these; assignment/base_counts update per move so
+    // cut-delta scoring sees earlier moves)
+    let owned: HashMap<u32, Vec<u32>> = srv
+        .shards
+        .iter()
+        .map(|s| {
+            let base: Vec<u32> = s
+                .global_ids
+                .iter()
+                .zip(&s.is_replica)
+                .filter(|&(_, &r)| !r)
+                .map(|(&g, _)| g)
+                .collect();
+            (s.part, base)
+        })
+        .collect();
+
+    // ---- plan: greedy max->min moves by minimum edge-cut delta ------
+    let mut moves: Vec<Move> = Vec::new();
+    let mut moved: HashSet<u32> = HashSet::new();
+    while moves.len() < srv.cfg.rebalance_max_moves {
+        let (max_p, &max_c) = srv
+            .base_counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(p, &c)| (c, std::cmp::Reverse(p)))
+            .expect("k >= 2");
+        let (min_p, &min_c) = srv
+            .base_counts
+            .iter()
+            .enumerate()
+            .min_by_key(|&(p, &c)| (c, p))
+            .expect("k >= 2");
+        if imbalance_ratio(&srv.base_counts) <= srv.cfg.rebalance_ratio || max_c - min_c < 2 {
+            break;
+        }
+        let (from, to) = (max_p as u32, min_p as u32);
+        let Some(v) = pick_candidate(
+            srv,
+            owned.get(&from).map(|o| o.as_slice()).unwrap_or(&[]),
+            srv.shards[part_index[&from]].boundary_set(),
+            &moved,
+            from,
+            to,
+        ) else {
+            break;
+        };
+        // pre-fold state the accounting needs
+        let feature_resident = srv.shards[part_index[&to]].local_of(v).is_some();
+        let donor = &srv.shards[part_index[&from]];
+        let mut cache_rows = Vec::new();
+        if donor.cache.is_allocated(layers) {
+            let local = donor.local_of(v).expect("donor owns its base node") as usize;
+            for l in 0..dims.len() {
+                if donor.cache.is_valid(l, local) {
+                    cache_rows.push((l, donor.cache.row(l, local).to_vec()));
+                }
+            }
+        }
+        srv.assignment[v as usize] = to;
+        srv.base_counts[from as usize] -= 1;
+        srv.base_counts[to as usize] += 1;
+        moved.insert(v);
+        moves.push(Move { node: v, from, to, feature_resident, cache_rows });
+    }
+    if moves.is_empty() {
+        return report;
+    }
+
+    // ---- fold: only donor/recipient shards change membership (a
+    //      third part's boundary, and therefore halo, cannot move) ----
+    let mut degree_changed: Vec<u32> = Vec::new();
+    for m in &moves {
+        degree_changed.push(m.node);
+        degree_changed.extend_from_slice(srv.graph.neighbors(m.node as usize));
+    }
+    degree_changed.sort_unstable();
+    degree_changed.dedup();
+    // membership-only churn: no edges moved, but these nodes' boundary
+    // status must be re-derived from the new assignment
+    let churn = EdgeChurn { added: Vec::new(), removed: Vec::new(), degree_changed };
+    // boundary movement can grow replica envelopes near the moved
+    // nodes, so the affected shards drop every cached row within the
+    // moves' L-hop cone (see module docs) — values elsewhere survive
+    let moved_ids: Vec<u32> = moves.iter().map(|m| m.node).collect();
+    let dist = bounded_bfs_distances_sparse(&srv.graph, &moved_ids, layers);
+    let affected: Vec<u32> = {
+        let mut p: Vec<u32> = moves.iter().flat_map(|m| [m.from, m.to]).collect();
+        p.sort_unstable();
+        p.dedup();
+        p
+    };
+    let mut bytes = 0u64;
+    let frow = (srv.features.cols * 4) as u64;
+    for &part in &affected {
+        let si = part_index[&part];
+        let base_added: Vec<u32> =
+            moves.iter().filter(|m| m.to == part).map(|m| m.node).collect();
+        let base_removed: Vec<u32> =
+            moves.iter().filter(|m| m.from == part).map(|m| m.node).collect();
+        match srv.cfg.halo {
+            HaloPolicy::Exact => {
+                // membership-only deltas splice through the same
+                // incremental path graph deltas use, in either
+                // DeltaMode — nothing structural changed, so the
+                // rebuild-mode oracle semantics are unaffected
+                let ctx = ShardDeltaCtx {
+                    graph: &srv.graph,
+                    global_features: &srv.features,
+                    inv_sqrt: &srv.inv_sqrt,
+                    assignment: &srv.assignment,
+                    churn: &churn,
+                    updated_features: &[],
+                    base_added: &base_added,
+                    base_removed: &base_removed,
+                    dist: &dist,
+                    layers,
+                    dims: &dims,
+                    multi_shard: k > 1,
+                };
+                let out = srv.shards[si].apply_delta(&srv.cfg, &ctx);
+                bytes += out.bytes;
+                if out.rebuilt {
+                    report.shards_rebuilt += 1;
+                }
+            }
+            HaloPolicy::Budgeted { .. } => {
+                // budgeted halos are re-sampled on the new membership
+                // and restart cold, matching their delta semantics
+                let mut fresh = ShardEngine::build(
+                    &srv.graph,
+                    &srv.features,
+                    &srv.inv_sqrt,
+                    &srv.assignment,
+                    part,
+                    layers,
+                    &srv.cfg,
+                );
+                fresh.cache.carry_counters_discarding(&srv.shards[si].cache);
+                if k > 1 {
+                    bytes += fresh.halo_join_bytes(&srv.shards[si], frow);
+                }
+                srv.shards[si] = fresh;
+                report.shards_rebuilt += 1;
+            }
+        }
+    }
+
+    // ---- migration payload: feature rows + donor cache rows ---------
+    for m in &moves {
+        if !m.feature_resident {
+            bytes += frow;
+        }
+        if !matches!(srv.cfg.halo, HaloPolicy::Exact) {
+            continue; // budgeted recipients start cold
+        }
+        let rsh = &mut srv.shards[part_index[&m.to]];
+        if !rsh.cache.is_allocated(layers) {
+            continue; // never queried — rows will recompute lazily
+        }
+        let local = rsh.local_of(m.node).expect("recipient owns the moved node") as usize;
+        // drop the recipient's own (possibly fringe-truncated) rows for
+        // the newly based node, then adopt the donor's exact ones
+        for l in 0..layers {
+            rsh.cache.invalidate(l, local);
+        }
+        for (l, row) in &m.cache_rows {
+            rsh.cache.adopt(*l, local, row);
+            bytes += (row.len() * 4) as u64;
+        }
+    }
+
+    srv.ledger.record_rebalance(bytes);
+    srv.rebalances += 1;
+    srv.nodes_migrated += moves.len() as u64;
+    report.triggered = true;
+    report.moves = moves.len();
+    report.bytes = bytes;
+    report.ratio_after = imbalance_ratio(&srv.base_counts);
+    report
+}

@@ -4,6 +4,7 @@
 
 use super::delta::{EdgeChurn, GraphDelta};
 use super::gather;
+use super::rebalance::{self, RebalanceReport};
 use super::shard::{ShardDeltaCtx, ShardEngine};
 use super::{DeltaMode, HaloPolicy, ServeConfig};
 use crate::comm::{CommLedger, CommStats};
@@ -50,6 +51,10 @@ pub struct ServeStats {
     pub rows_recomputed: u64,
     /// Cache rows dropped by the byte-budget admission policy.
     pub rows_evicted: u64,
+    /// Gathered-row cache: embedding recomputes skipped cross-request.
+    pub gather_rows_reused: u64,
+    /// Gathered-row cache: cross-shard fetches skipped cross-request.
+    pub gather_fetches_avoided: u64,
     pub deltas_applied: u64,
     /// Nodes inserted online over the deployment's lifetime.
     pub nodes_added: u64,
@@ -60,10 +65,20 @@ pub struct ServeStats {
     pub shard_rebuilds: u64,
     /// Overlay-CSR compactions (batched O(V+E) folds).
     pub graph_compactions: u64,
+    /// Current overlay compaction threshold (moves under the adaptive
+    /// policy, static otherwise).
+    pub compaction_threshold: usize,
+    /// Rebalance passes that migrated at least one node.
+    pub rebalances: u64,
+    /// Nodes migrated between parts by the online rebalancer.
+    pub nodes_migrated: u64,
+    /// Current max/min base-node ratio across parts.
+    pub imbalance_ratio: f64,
     pub graph_version: u64,
     /// Cross-shard serving traffic (halo replication + delta
     /// propagation + budgeted-mode row gathers; the Exact-halo query
-    /// path moves nothing).
+    /// path moves nothing). Rebalance migrations land in their own
+    /// class (`comm.rebalance_bytes`).
     pub comm: CommStats,
 }
 
@@ -88,6 +103,11 @@ pub struct DeltaReport {
     pub shards_rebuilt: usize,
     /// This delta's application folded the overlay into a flat CSR.
     pub compacted: bool,
+    /// Nodes the post-delta rebalance pass migrated (0 when the
+    /// rebalancer is off or balance held).
+    pub rebalance_moves: usize,
+    /// Bytes that pass shipped (also in the ledger's rebalance class).
+    pub rebalance_bytes: u64,
 }
 
 /// See module docs ([`crate::serve`]).
@@ -106,6 +126,9 @@ pub struct Server {
     /// part for isolated inserts).
     pub(crate) base_counts: Vec<usize>,
     pub(crate) shards: Vec<ShardEngine>,
+    /// Cross-request gathered-row cache (budgeted-gather mode with a
+    /// byte budget configured; see [`ServeConfig::gather_cache_budget_bytes`]).
+    pub(crate) gather_cache: Option<gather::GatherRowCache>,
     pub(crate) ledger: CommLedger,
     pub(crate) queries: u64,
     pub(crate) micro_batches: u64,
@@ -115,6 +138,8 @@ pub struct Server {
     nodes_added: u64,
     nodes_removed: u64,
     shard_rebuilds: u64,
+    pub(crate) rebalances: u64,
+    pub(crate) nodes_migrated: u64,
 }
 
 impl Server {
@@ -157,15 +182,22 @@ impl Server {
         let base_counts = (0..k as u32)
             .map(|p| part.assignment.iter().filter(|&&a| a == p).count())
             .collect();
+        let mut overlay = DeltaCsr::new(graph);
+        if cfg.adaptive_compaction {
+            overlay.enable_adaptive_compaction(1.5);
+        }
+        let gather_cache = (cfg.gather_missing && cfg.gather_cache_budget_bytes > 0)
+            .then(|| gather::GatherRowCache::new(cfg.gather_cache_budget_bytes));
         Ok(Server {
             cfg,
-            graph: DeltaCsr::new(graph),
+            graph: overlay,
             features,
             params,
             assignment: part.assignment,
             inv_sqrt: inv,
             base_counts,
             shards,
+            gather_cache,
             ledger,
             queries: 0,
             micro_batches: 0,
@@ -175,6 +207,8 @@ impl Server {
             nodes_added: 0,
             nodes_removed: 0,
             shard_rebuilds: 0,
+            rebalances: 0,
+            nodes_migrated: 0,
         })
     }
 
@@ -216,9 +250,11 @@ impl Server {
         (node as usize) < self.assignment.len() && self.assignment[node as usize] != RETIRED
     }
 
-    /// Resident bytes across shards (features + adjacency + cache).
+    /// Resident bytes across shards (features + adjacency + cache),
+    /// plus the gathered-row cache when configured.
     pub fn resident_bytes(&self) -> usize {
-        self.shards.iter().map(|s| s.nbytes()).sum()
+        self.shards.iter().map(|s| s.nbytes()).sum::<usize>()
+            + self.gather_cache.as_ref().map(|c| c.resident_bytes() as usize).unwrap_or(0)
     }
 
     /// Classify one node.
@@ -353,6 +389,8 @@ impl Server {
                 nodes_removed: 0,
                 shards_rebuilt: 0,
                 compacted: false,
+                rebalance_moves: 0,
+                rebalance_bytes: 0,
             });
         }
         let layers = self.params.layers();
@@ -406,6 +444,11 @@ impl Server {
         }
         churn.finish();
         self.graph.bump_version();
+        if let Some(c) = &mut self.gather_cache {
+            // structural/feature change: gathered rows restart cold,
+            // matching the budgeted shards' own conservatism
+            c.clear();
+        }
         let compactions_before = self.graph.compactions();
         match self.cfg.delta_mode {
             DeltaMode::Rebuild => self.graph.compact(),
@@ -531,6 +574,15 @@ impl Server {
         self.nodes_added += added_ids.len() as u64;
         self.nodes_removed += delta.removed_nodes.len() as u64;
         self.shard_rebuilds += rebuilds as u64;
+
+        // post-delta trigger: elastic churn is what drifts the base
+        // counts, so balance is re-checked exactly when it can break
+        let reb = if self.cfg.rebalance && self.imbalance_ratio() > self.cfg.rebalance_ratio {
+            rebalance::run(self)
+        } else {
+            RebalanceReport::default()
+        };
+        self.debug_assert_counts_consistent();
         Ok(DeltaReport {
             graph_version: version,
             seeds: seeds_all.len(),
@@ -540,7 +592,53 @@ impl Server {
             nodes_removed: delta.removed_nodes.len(),
             shards_rebuilt: rebuilds,
             compacted,
+            rebalance_moves: reb.moves,
+            rebalance_bytes: reb.bytes,
         })
+    }
+
+    /// Current max/min base-node ratio across parts (empty parts count
+    /// as size 1 so the ratio stays finite).
+    pub fn imbalance_ratio(&self) -> f64 {
+        rebalance::imbalance_ratio(&self.base_counts)
+    }
+
+    /// Run one bounded rebalance pass now, regardless of the configured
+    /// trigger (benchmarks and tests; [`apply_delta`](Self::apply_delta)
+    /// calls the same pass automatically when
+    /// [`ServeConfig::rebalance`] is on and the ratio exceeds
+    /// [`ServeConfig::rebalance_ratio`]).
+    pub fn rebalance(&mut self) -> RebalanceReport {
+        let rep = rebalance::run(self);
+        self.debug_assert_counts_consistent();
+        rep
+    }
+
+    /// Reconcile `base_counts` against both the assignment vector and
+    /// every shard's owned-node count — the accounting that elastic
+    /// homing and the rebalancer lean on. Debug builds run this after
+    /// every delta and rebalance pass; release builds skip it.
+    pub(crate) fn debug_assert_counts_consistent(&self) {
+        if cfg!(debug_assertions) {
+            let mut from_assignment = vec![0usize; self.base_counts.len()];
+            for &p in &self.assignment {
+                if p != RETIRED {
+                    from_assignment[p as usize] += 1;
+                }
+            }
+            assert_eq!(
+                self.base_counts, from_assignment,
+                "base_counts diverged from the assignment vector"
+            );
+            for sh in &self.shards {
+                assert_eq!(
+                    sh.base_len(),
+                    self.base_counts[sh.part as usize],
+                    "shard {} owns a different node count than base_counts",
+                    sh.part
+                );
+            }
+        }
     }
 
     /// Lifetime counters + traffic snapshot.
@@ -551,11 +649,21 @@ impl Server {
             cache_hits: self.cache_hits,
             rows_recomputed: self.rows_recomputed,
             rows_evicted: self.shards.iter().map(|s| s.cache.rows_evicted).sum(),
+            gather_rows_reused: self.gather_cache.as_ref().map(|c| c.rows_reused).unwrap_or(0),
+            gather_fetches_avoided: self
+                .gather_cache
+                .as_ref()
+                .map(|c| c.fetches_avoided)
+                .unwrap_or(0),
             deltas_applied: self.deltas_applied,
             nodes_added: self.nodes_added,
             nodes_removed: self.nodes_removed,
             shard_rebuilds: self.shard_rebuilds,
             graph_compactions: self.graph.compactions(),
+            compaction_threshold: self.graph.compaction_threshold(),
+            rebalances: self.rebalances,
+            nodes_migrated: self.nodes_migrated,
+            imbalance_ratio: self.imbalance_ratio(),
             graph_version: self.graph.version(),
             comm: CommStats::from_ledger(&self.ledger),
         }
@@ -769,6 +877,30 @@ mod tests {
         assert!(srv
             .apply_delta(&GraphDelta { removed_nodes: vec![victim], ..Default::default() })
             .is_err());
+    }
+
+    #[test]
+    fn manual_rebalance_is_a_noop_on_a_balanced_deployment() {
+        let (ds, params) = fixture();
+        let cfg = ServeConfig { rebalance_ratio: 4.0, ..Default::default() };
+        let mut srv = Server::for_dataset(&ds, params, cfg).unwrap();
+        assert!(srv.imbalance_ratio() >= 1.0);
+        let rep = srv.rebalance();
+        assert!(!rep.triggered, "a balanced deployment must not migrate");
+        assert_eq!(rep.moves, 0);
+        assert_eq!(rep.ratio_before, rep.ratio_after);
+        assert_eq!(srv.stats().comm.rebalance_bytes, 0);
+        assert_eq!(srv.stats().rebalances, 0);
+    }
+
+    #[test]
+    fn rebalance_report_rides_the_delta_report() {
+        let (ds, params) = fixture();
+        let mut srv = Server::for_dataset(&ds, params, ServeConfig::default()).unwrap();
+        let delta = GraphDelta { added_edges: vec![(0, 9)], ..Default::default() };
+        let rep = srv.apply_delta(&delta).unwrap();
+        assert_eq!(rep.rebalance_moves, 0, "rebalancer is off by default");
+        assert_eq!(rep.rebalance_bytes, 0);
     }
 
     #[test]

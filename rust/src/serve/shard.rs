@@ -112,6 +112,10 @@ pub struct ShardEngine {
     /// replicas, 1.0 for base nodes. Only populated when a cache byte
     /// budget is set (or the halo itself was importance-sampled).
     scores: Vec<f32>,
+    /// `I(v)` over the *full* candidate set (members or not) — the
+    /// gathered-row cache's admission scores for rows this shard
+    /// fetches from elsewhere. Keyed by global id.
+    candidate_scores: HashMap<u32, f32>,
     /// Retained-row byte budget (0 = unbounded), from [`ServeConfig`].
     cache_budget: u64,
     pub cache: EmbeddingCache,
@@ -224,6 +228,8 @@ impl ShardEngine {
             .zip(&is_replica)
             .map(|(&g, &r)| if r { imp.get(&g).copied().unwrap_or(0.0) as f32 } else { 1.0 })
             .collect();
+        let candidate_scores: HashMap<u32, f32> =
+            imp.iter().map(|(&g, &s)| (g, s as f32)).collect();
         ShardEngine {
             part,
             global_ids,
@@ -235,14 +241,29 @@ impl ShardEngine {
             inv_local,
             features,
             scores,
+            candidate_scores,
             cache_budget: cfg.cache_budget_bytes,
             cache: EmbeddingCache::new(cfg.cache),
         }
     }
 
+    /// `I(v)` of a global node as seen from this shard (candidate score
+    /// when known, 0.0 otherwise) — the gathered-row cache's admission
+    /// key for rows this shard fetches.
+    pub(crate) fn candidate_score(&self, global: u32) -> f32 {
+        self.candidate_scores.get(&global).copied().unwrap_or(0.0)
+    }
+
     /// Local id of a global node, if a member (binary search).
     pub fn local_of(&self, global: u32) -> Option<u32> {
         self.global_ids.binary_search(&global).ok().map(|i| i as u32)
+    }
+
+    /// The incrementally maintained boundary (base nodes with ≥1
+    /// cross-part edge, global ids, sorted) — the rebalancer's
+    /// candidate pool.
+    pub(crate) fn boundary_set(&self) -> &[u32] {
+        &self.boundary
     }
 
     /// Node count (base + halo).

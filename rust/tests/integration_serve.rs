@@ -7,12 +7,14 @@ use gad::augment::plain_part;
 use gad::backend::{Backend, NativeBackend};
 use gad::coordinator::{batch_from_subgraph, train_gad, TrainConfig};
 use gad::datasets::{Dataset, SyntheticSpec};
+use gad::graph::GraphBuilder;
 use gad::model::{checkpoint, GcnParams};
 use gad::proptest_util::forall;
 use gad::rng::Rng;
 use gad::serve::{
     run_serving_bench, GraphDelta, HaloPolicy, NewNode, ServeConfig, Server, ServingBenchConfig,
 };
+use gad::tensor::Matrix;
 
 /// The training-time full-graph forward — the oracle every serving
 /// configuration is measured against.
@@ -32,6 +34,21 @@ fn fixture(seed: u64, layers: usize) -> (Dataset, GcnParams) {
 
 fn all_nodes(ds: &Dataset) -> Vec<u32> {
     (0..ds.num_nodes() as u32).collect()
+}
+
+/// Extend a dataset mirror for nodes inserted online. The serving tier
+/// never sees labels or splits, but the training-forward oracle
+/// (`native_preds` → `batch_from_subgraph`) indexes both per node, so
+/// the mirror must stay rectangular. (PR 4's elastic round-trip test
+/// grew only graph+features — a latent out-of-bounds panic this sweep
+/// fixed.)
+fn extend_mirror(ds: &mut Dataset, added: usize) {
+    for _ in 0..added {
+        ds.labels.push(0);
+        ds.split.train.push(false);
+        ds.split.val.push(false);
+        ds.split.test.push(true);
+    }
 }
 
 #[test]
@@ -251,6 +268,7 @@ fn elastic_add_remove_node_round_trip() {
     }
     .apply_to(&ds.graph);
     ds2.features.push_row(&new_row);
+    extend_mirror(&mut ds2, 1);
     let oracle2 = native_preds(&ds2, &params);
     let q2: Vec<u32> = (0..ds2.num_nodes() as u32).collect();
     let res2 = srv.query_batch(&q2).unwrap();
@@ -320,6 +338,224 @@ fn budgeted_gather_is_exact_and_accounted() {
         before,
         "one shard owns every row — zero gather bytes"
     );
+}
+
+/// Satellite regression: gather-mode byte accounting on a hand-built
+/// two-clique graph, asserted EXACTLY against the documented rule —
+/// a row already replicated in the consumer's halo is never billed,
+/// every other input row of the cone is billed once per consumer, and
+/// with the cross-request gathered-row cache a repeat query bills zero.
+#[test]
+fn gather_bytes_are_exact_and_halo_replicas_are_never_billed() {
+    // two 6-cliques bridged by (3,6),(4,7),(5,8): the 2-partition
+    // splits the cliques, and the tiny replication budget (alpha 0.01
+    // -> one replica per part) cannot cover the three bridge
+    // candidates, so cross-shard fetches must happen
+    let mut edges = vec![(3u32, 6u32), (4, 7), (5, 8)];
+    for base in [0u32, 6] {
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                edges.push((base + i, base + j));
+            }
+        }
+    }
+    let graph = GraphBuilder::new(12).edges(&edges).build();
+    let fdim = 5usize;
+    let mut features = Matrix::zeros(12, fdim);
+    for v in 0..12 {
+        for c in 0..fdim {
+            features[(v, c)] = (v * fdim + c) as f32 * 0.1;
+        }
+    }
+    let mut rng = Rng::seed_from_u64(77);
+    // one layer: the cone of a query is exactly its closed neighbourhood
+    let params = GcnParams::init(fdim, 8, 3, 1, &mut rng);
+    let cfg = ServeConfig {
+        shards: 2,
+        halo: HaloPolicy::Budgeted { alpha: 0.01 },
+        gather_missing: true,
+        gather_cache_budget_bytes: 1 << 20,
+        ..Default::default()
+    };
+    let mut srv =
+        Server::build(graph.clone(), features.clone(), params.clone(), cfg.clone()).unwrap();
+    assert_ne!(srv.shard_of(0), srv.shard_of(11), "partitioner must split the cliques");
+
+    // the documented rule, recomputed independently: one feature row
+    // per distinct (neighbour, consumer shard) pair the consumer does
+    // not already replicate; replicated rows (base or sampled halo
+    // member) are free
+    let frow = (fdim * 4) as u64;
+    let batch = vec![3u32, 4, 5];
+    let mut billed: std::collections::HashSet<(u32, u32)> = std::collections::HashSet::new();
+    for &q in &batch {
+        let consumer = srv.shard_of(q);
+        for &t in graph.neighbors(q as usize) {
+            if t != q && srv.shard(consumer as usize).local_of(t).is_none() {
+                billed.insert((t, consumer));
+            }
+        }
+    }
+    let expected = billed.len() as u64 * frow;
+    assert!(expected > 0, "the fixture must force at least one fetch");
+
+    let before = srv.stats().comm.serving_bytes;
+    srv.query_batch(&batch).unwrap();
+    let first = srv.stats().comm.serving_bytes - before;
+    assert_eq!(first, expected, "gather must bill exactly the non-replicated cone rows");
+
+    // repeat request: the retained output rows short-circuit the whole
+    // cone (and any re-walked row is covered by the fetched copies), so
+    // the bill is zero
+    let mid = srv.stats().comm.serving_bytes;
+    let repeat = srv.query_batch(&batch).unwrap();
+    assert_eq!(srv.stats().comm.serving_bytes - mid, 0, "cached copies must not re-bill");
+    assert!(srv.stats().gather_rows_reused > 0, "repeat request must reuse cached rows");
+    assert!(repeat.iter().all(|r| r.cache_hit), "reused outputs must show in provenance");
+
+    // without the cache the same request re-bills the same exact amount
+    let cfg_nc = ServeConfig { gather_cache_budget_bytes: 0, ..cfg };
+    let mut nc = Server::build(graph.clone(), features, params, cfg_nc).unwrap();
+    let b0 = nc.stats().comm.serving_bytes;
+    nc.query_batch(&batch).unwrap();
+    let n1 = nc.stats().comm.serving_bytes - b0;
+    nc.query_batch(&batch).unwrap();
+    let n2 = nc.stats().comm.serving_bytes - b0 - n1;
+    assert_eq!(n1, expected);
+    assert_eq!(n2, expected, "per-request accounting is stateless without the cache");
+}
+
+/// The gathered-row cache may change bytes and latency, never answers:
+/// cached and uncached gather deployments must agree bit-for-bit with
+/// each other and with the full-graph oracle, across repeat queries and
+/// a delta (which clears the cache).
+#[test]
+fn gather_cache_never_changes_answers() {
+    let (ds, params) = fixture(23, 2);
+    let oracle = native_preds(&ds, &params);
+    let base = ServeConfig {
+        shards: 4,
+        halo: HaloPolicy::Budgeted { alpha: 0.02 },
+        gather_missing: true,
+        ..Default::default()
+    };
+    let cached_cfg = ServeConfig { gather_cache_budget_bytes: 1 << 20, ..base.clone() };
+    let mut plain = Server::for_dataset(&ds, params.clone(), base).unwrap();
+    let mut cached = Server::for_dataset(&ds, params.clone(), cached_cfg).unwrap();
+    let nodes = all_nodes(&ds);
+    for pass in 0..2 {
+        let a = plain.query_batch(&nodes).unwrap();
+        let b = cached.query_batch(&nodes).unwrap();
+        for ((x, y), want) in a.iter().zip(&b).zip(&oracle) {
+            assert_eq!(x.pred, *want, "pass {pass} node {}", x.node);
+            assert_eq!(y.pred, *want, "pass {pass} node {}", y.node);
+            assert_eq!(
+                x.probs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y.probs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "pass {pass} node {}: cache changed the numerics",
+                x.node
+            );
+        }
+    }
+    let st = cached.stats();
+    assert!(st.gather_rows_reused > 0, "second pass must reuse cached rows");
+    assert!(
+        cached.stats().comm.serving_bytes < plain.stats().comm.serving_bytes,
+        "the cache must save bytes across requests"
+    );
+    // a delta clears the cache; answers track the mutated oracle
+    let delta = GraphDelta { added_edges: vec![(0, 9)], ..Default::default() };
+    plain.apply_delta(&delta).unwrap();
+    cached.apply_delta(&delta).unwrap();
+    let a = plain.query_batch(&nodes).unwrap();
+    let b = cached.query_batch(&nodes).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.pred, y.pred);
+        assert_eq!(
+            x.probs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y.probs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "post-delta node {}: stale cached row served",
+            x.node
+        );
+    }
+}
+
+/// Skewed elastic inserts drift the base counts; the rebalancer must
+/// pull the ratio back under the threshold while every answer stays
+/// bit-identical to the full-graph forward on the evolved graph.
+#[test]
+fn rebalancer_converges_and_preserves_answers_under_skewed_inserts() {
+    let (ds, params) = fixture(31, 2);
+    let fdim = ds.feature_dim();
+    let ratio = 1.5f64;
+    let cfg = ServeConfig {
+        shards: 4,
+        rebalance: true,
+        rebalance_ratio: ratio,
+        rebalance_max_moves: 64,
+        ..Default::default()
+    };
+    let cfg_off = ServeConfig { rebalance: false, ..cfg.clone() };
+    let mut on = Server::for_dataset(&ds, params.clone(), cfg).unwrap();
+    let mut off = Server::for_dataset(&ds, params.clone(), cfg_off).unwrap();
+    on.query_batch(&all_nodes(&ds)).unwrap(); // warm caches before churn
+    let hot: Vec<u32> = (0..ds.num_nodes() as u32).filter(|&v| on.shard_of(v) == 0).collect();
+    assert!(!hot.is_empty());
+
+    // evolving mirror for the oracle
+    let mut ds2 = ds.clone();
+    let mut migrated_total = 0u64;
+    for round in 0..6 {
+        let delta = GraphDelta {
+            added_nodes: (0..12)
+                .map(|i| NewNode {
+                    features: vec![0.05 * (i as f32 + 1.0); fdim],
+                    edges: vec![hot[(round * 12 + i) % hot.len()]],
+                })
+                .collect(),
+            ..Default::default()
+        };
+        let rep_on = on.apply_delta(&delta).unwrap();
+        off.apply_delta(&delta).unwrap();
+        migrated_total += rep_on.rebalance_moves as u64;
+        assert!(
+            on.imbalance_ratio() <= ratio + 1e-9,
+            "round {round}: rebalancer left ratio {:.3}",
+            on.imbalance_ratio()
+        );
+        ds2.graph = delta.apply_to(&ds2.graph);
+        let added = delta.added_nodes.len();
+        for nn in &delta.added_nodes {
+            ds2.features.push_row(&nn.features);
+        }
+        extend_mirror(&mut ds2, added);
+    }
+    assert!(
+        off.imbalance_ratio() > ratio,
+        "the skew must actually break balance without the rebalancer (got {:.3})",
+        off.imbalance_ratio()
+    );
+    assert!(migrated_total > 0, "convergence must come from real migrations");
+    let st = on.stats();
+    assert!(st.rebalances > 0);
+    assert_eq!(st.nodes_migrated, migrated_total);
+    assert!(st.comm.rebalance_bytes > 0, "migrated bytes must be accounted");
+    assert_eq!(off.stats().comm.rebalance_bytes, 0);
+
+    // bit-identity after all that migration
+    let oracle = native_preds(&ds2, &params);
+    let q: Vec<u32> = (0..ds2.num_nodes() as u32).collect();
+    let res_on = on.query_batch(&q).unwrap();
+    let res_off = off.query_batch(&q).unwrap();
+    for ((a, b), want) in res_on.iter().zip(&res_off).zip(&oracle) {
+        assert_eq!(a.pred, *want, "node {} diverged after migrations", a.node);
+        assert_eq!(
+            a.probs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.probs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "node {}: rebalanced and drifting deployments must agree bit-for-bit",
+            a.node
+        );
+    }
 }
 
 #[test]

@@ -98,12 +98,16 @@ fn delta_csr_sequences_match_builder_rebuild() {
 
 /// Serving level: a random sequence of deltas — edge churn, feature
 /// rewrites, **elastic node insert/remove** — applied to (a) the
-/// incremental overlay server and (b) the rebuild-mode server must
-/// answer bit-identically to (c) a fresh server that never saw the old
-/// graph, on every alive node, after every delta.
+/// incremental overlay server, (b) the rebuild-mode server and (c) an
+/// incremental server with the online rebalancer forced aggressive
+/// (every delta triggers migrations, plus an explicit pass per round)
+/// must answer bit-identically to (d) a fresh server that never saw the
+/// old graph, on every alive node, after every delta. (c) is the
+/// migration-sequence property the rebalancer's bit-identity contract
+/// rests on.
 #[test]
 fn serve_answers_match_across_delta_modes_and_fresh_rebuild() {
-    forall("incremental == rebuild == fresh", 4, |rng| {
+    forall("incremental == rebuild == rebalanced == fresh", 4, |rng| {
         let seed = rng.next_u64() % 1_000;
         let ds = SyntheticSpec::tiny().generate(seed);
         let fdim = ds.feature_dim();
@@ -111,13 +115,22 @@ fn serve_answers_match_across_delta_modes_and_fresh_rebuild() {
         let params = GcnParams::init(fdim, 10, ds.num_classes, 2, &mut prng);
         let cfg = ServeConfig { shards: 3, seed: 7, ..Default::default() };
         let rcfg = ServeConfig { delta_mode: DeltaMode::Rebuild, ..cfg.clone() };
+        let bcfg = ServeConfig {
+            rebalance: true,
+            rebalance_ratio: 1.05,
+            rebalance_max_moves: 128,
+            ..cfg.clone()
+        };
         let mut inc = Server::for_dataset(&ds, params.clone(), cfg.clone())
             .map_err(|e| format!("build inc: {e:#}"))?;
         let mut reb = Server::for_dataset(&ds, params.clone(), rcfg)
             .map_err(|e| format!("build reb: {e:#}"))?;
+        let mut bal = Server::for_dataset(&ds, params.clone(), bcfg)
+            .map_err(|e| format!("build bal: {e:#}"))?;
         let warm: Vec<u32> = (0..ds.num_nodes() as u32).collect();
         inc.query_batch(&warm).map_err(|e| format!("warm inc: {e:#}"))?;
         reb.query_batch(&warm).map_err(|e| format!("warm reb: {e:#}"))?;
+        bal.query_batch(&warm).map_err(|e| format!("warm bal: {e:#}"))?;
 
         // mirror of the evolving deployment, for the fresh oracle
         let mut graph = ds.graph.clone();
@@ -174,6 +187,10 @@ fn serve_answers_match_across_delta_modes_and_fresh_rebuild() {
             if ri.graph_version != rr.graph_version {
                 return Err("modes disagree on version".into());
             }
+            bal.apply_delta(&d).map_err(|e| format!("round {round} bal: {e:#}"))?;
+            // force an extra migration pass beyond the automatic
+            // trigger: rebalancing must never move an answer
+            bal.rebalance();
 
             // evolve the mirror through the O(E) oracle
             graph = d.apply_to(&graph);
@@ -197,8 +214,9 @@ fn serve_answers_match_across_delta_modes_and_fresh_rebuild() {
                 (0..graph.num_nodes() as u32).filter(|v| !dead.contains(v)).collect();
             let a = inc.query_batch(&q).map_err(|e| format!("round {round} q inc: {e:#}"))?;
             let b = reb.query_batch(&q).map_err(|e| format!("round {round} q reb: {e:#}"))?;
+            let m = bal.query_batch(&q).map_err(|e| format!("round {round} q bal: {e:#}"))?;
             let c = fresh.query_batch(&q).map_err(|e| format!("round {round} q fresh: {e:#}"))?;
-            for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+            for (((x, y), w), z) in a.iter().zip(&b).zip(&m).zip(&c) {
                 let bits =
                     |r: &gad::serve::QueryResult| -> Vec<u32> { r.probs.iter().map(|p| p.to_bits()).collect() };
                 if x.pred != z.pred || bits(x) != bits(z) {
@@ -214,10 +232,18 @@ fn serve_answers_match_across_delta_modes_and_fresh_rebuild() {
                         y.node
                     ));
                 }
+                if w.pred != z.pred || bits(w) != bits(z) {
+                    return Err(format!(
+                        "round {round}: rebalanced server diverged from fresh at node {} \
+                         ({} nodes migrated so far)",
+                        w.node,
+                        bal.stats().nodes_migrated
+                    ));
+                }
             }
-            // retired ids must reject queries in both modes
+            // retired ids must reject queries in every mode
             if let Some(&v) = d.removed_nodes.first() {
-                if inc.query(v).is_ok() || reb.query(v).is_ok() {
+                if inc.query(v).is_ok() || reb.query(v).is_ok() || bal.query(v).is_ok() {
                     return Err(format!("round {round}: retired node {v} still answers"));
                 }
             }
