@@ -1,0 +1,86 @@
+//! Serving under load: drive the sharded server with the open-loop
+//! workload generator and compare FIFO against SLO-aware micro-batch
+//! scheduling on the same seeded arrival schedule.
+//!
+//! ```bash
+//! cargo run --release --example serving_under_load
+//! ```
+//!
+//! The generator never waits for the server — arrivals keep landing at
+//! the offered rate whether or not the backlog is draining, which is
+//! what exposes the queueing collapse a closed-loop bench structurally
+//! cannot see. Both schedulers replay byte-identical arrivals, Zipfian
+//! popularity, and interleaved graph churn.
+
+use gad::loadgen::{generate_schedule, run_open_loop, SimOptions};
+use gad::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. train a small model to serve
+    let dataset = SyntheticSpec::tiny().generate(42);
+    let cfg = TrainConfig {
+        partitions: 8,
+        workers: 4,
+        layers: 2,
+        hidden: 64,
+        lr: 0.02,
+        epochs: 20,
+        seed: 42,
+        ..TrainConfig::default()
+    };
+    let report = gad::coordinator::train_gad(&dataset, &cfg)?;
+    let params = report.final_params.expect("training yields parameters");
+    println!("trained: test accuracy {:.4}", report.test_accuracy);
+
+    // 2. one seeded open-loop schedule: Poisson arrivals, Zipf-skewed
+    //    query popularity, 3% of arrivals are graph deltas
+    let wcfg = WorkloadConfig {
+        rate_qps: 30_000.0,
+        events: 3_000,
+        zipf_s: 0.9,
+        churn_frac: 0.03,
+        seed: 42,
+        ..WorkloadConfig::default()
+    };
+    let schedule = generate_schedule(&dataset.graph, dataset.feature_dim(), &wcfg);
+    println!(
+        "schedule: {} arrivals over {:.1} virtual ms at {:.0} offered qps",
+        schedule.len(),
+        schedule.last().map(|a| a.at_us as f64 / 1e3).unwrap_or(0.0),
+        wcfg.rate_qps
+    );
+
+    // 3. replay it under both schedulers on fresh servers
+    let opts = SimOptions { slo_us: 5_000, record_probs: false };
+    for mode in ["fifo", "slo-batch"] {
+        let scfg = ServeConfig { shards: 4, seed: 42, ..ServeConfig::default() };
+        let mut server = Server::for_dataset(&dataset, params.clone(), scfg)?;
+        let mut fifo = FifoScheduler::new();
+        let mut batch = SloBatchScheduler::new(server.num_shards(), 16, opts.slo_us / 4);
+        let sched: &mut dyn Scheduler = if mode == "fifo" { &mut fifo } else { &mut batch };
+        let sim = run_open_loop(&mut server, &schedule, sched, &opts)?;
+
+        let answered = sim.outcomes.len().max(1);
+        let within = sim.outcomes.iter().filter(|o| o.within_slo).count();
+        let mean_wait: f64 =
+            sim.outcomes.iter().map(|o| o.queueing_us() as f64).sum::<f64>() / answered as f64;
+        println!(
+            "[{mode}] {} answers ({} deltas applied), {:.1}% within the {:.0} ms SLO, \
+             mean wait {:.0} µs, {} flushes, queue depth max {}",
+            sim.outcomes.len(),
+            sim.deltas_applied,
+            within as f64 / answered as f64 * 100.0,
+            opts.slo_us as f64 / 1e3,
+            mean_wait,
+            sim.flushes,
+            sim.queue_depth_max
+        );
+        let st = server.stats();
+        println!(
+            "       server saw {} queries / {} micro-batches; SLO counters: {} in / {} late",
+            st.queries, st.micro_batches, st.slo_answers, st.late_answers
+        );
+    }
+    println!("(for the full offered-rate sweep and the knee: `gad load-bench` → fig14)");
+    Ok(())
+}

@@ -639,6 +639,55 @@ pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
     Ok(())
 }
 
+// --------------------------------------------------------------------
+// Fig 14 (ours): open-loop load, the latency-vs-throughput knee
+// --------------------------------------------------------------------
+
+/// Train briefly, then drive the serving tier with the open-loop
+/// generator: one seeded arrival schedule per offered-rate step,
+/// replayed under FIFO and the SLO-aware micro-batcher, sweeping the
+/// rate until both collapse past the knee (Fig 14).
+pub fn load_bench(args: &Args, opts: &RunOpts) -> Result<()> {
+    use crate::loadgen::{run_load_bench, LoadBenchConfig};
+
+    let name = args.get("dataset", "cora");
+    let ds = load(name, opts)?;
+
+    let mut cfg = config(args, opts, name)?;
+    cfg.epochs = opts.epochs(args.get_usize("epochs", 20)?);
+    eprintln!("training {name} for {} epochs...", cfg.epochs);
+    let report = train_gad(&ds, &cfg)?;
+    let params = report
+        .final_params
+        .ok_or_else(|| anyhow!("training returned no parameters"))?;
+
+    let lcfg = LoadBenchConfig {
+        shards: args.get_usize("shards", 4)?,
+        slo_us: (args.get_f64("slo-ms", 5.0)? * 1e3) as u64,
+        batch_k: args.get_usize("batch-k", 16)?,
+        zipf_s: args.get_f64("zipf-s", 0.9)?,
+        churn_frac: args.get_f64("churn-frac", 0.02)?,
+        events_per_step: args
+            .get_usize("load-events", if opts.fast { 400 } else { 2000 })?,
+        rate_start_qps: args.get_f64("rate-qps", 0.0)?,
+        rate_steps: args.get_usize("rate-steps", if opts.fast { 4 } else { 6 })?,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let rep = run_load_bench(&ds, &params, &lcfg)?;
+    let md = format!(
+        "## Fig 14 — open-loop load knee ({name}, k={}, {} events/step, SLO {:.1} ms)\n\n{}",
+        lcfg.shards,
+        lcfg.events_per_step,
+        lcfg.slo_us as f64 / 1e3,
+        rep.to_markdown()
+    );
+    println!("{md}");
+    write_result_file(&format!("{}/fig14_load_knee.md", opts.out_dir), &md)?;
+    write_result_file(&format!("{}/fig14_load_knee.csv", opts.out_dir), &rep.to_csv())?;
+    Ok(())
+}
+
 /// Everything, in order. Table 2 / Fig 5 / Fig 6 share one sweep and
 /// Table 3 / Fig 7 share another (the paper derives them from the same
 /// runs too).
@@ -704,5 +753,6 @@ pub fn run_all(args: &Args, opts: &RunOpts) -> Result<()> {
     fig8_partitions(args, opts)?;
     fig9_consensus(args, opts)?;
     serve_bench(args, opts)?;
+    load_bench(args, opts)?;
     Ok(())
 }

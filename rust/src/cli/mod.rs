@@ -134,6 +134,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "fig8" => experiments::fig8_partitions(&args, &opts),
         "fig9" => experiments::fig9_consensus(&args, &opts),
         "serve-bench" => experiments::serve_bench(&args, &opts),
+        "load-bench" => experiments::load_bench(&args, &opts),
         "ablate" => experiments::ablation(&args, &opts),
         "all" => experiments::run_all(&args, &opts),
         "" | "help" => {
@@ -167,6 +168,10 @@ commands
               deltas/sec + p99 under churn, incremental vs rebuild
               (Fig 12, ours), then skewed elastic inserts with the
               online rebalancer on/off (Fig 13, ours)
+  load-bench  open-loop load generator vs the serving tier: sweep the
+              offered rate, fifo vs SLO-aware micro-batch scheduling,
+              goodput + latency percentiles until the knee (Fig 14,
+              ours)
   ablate      design-choice ablations (+ crash-fault run)
   all         everything above into --out-dir
 
@@ -202,12 +207,25 @@ serve-bench flags
   --gather-cache-mb F  cross-request gathered-row cache budget (gather
                  mode; same I(v) admission; 0 = off)
   --adaptive-compaction  tune the overlay compaction threshold from
-                 observed splice-vs-flat read latency (Fig 12)
+                 the modelled splice-vs-flat read cost (Fig 12)
   --churn-rounds N   Fig 12 rounds per churn rate (default 6; 3 fast)
   --churn-queries N  Fig 12/13 queries per round (default 192; 64 fast)
   --rebalance-rounds N   Fig 13 skewed-insert rounds (default 8; 4 fast)
   --rebalance-inserts N  Fig 13 inserts per round (default 24; 12 fast)
   --rebalance-ratio F    Fig 13 max/min part-size trigger (default 1.5)
+
+load-bench flags
+  --shards N     serving shards (default 4)
+  --slo-ms F     answer deadline in milliseconds (default 5.0)
+  --batch-k N    SLO batcher's per-shard flush size (default 16)
+  --zipf-s F     query popularity skew exponent (default 0.9)
+  --churn-frac F fraction of arrivals that are graph deltas
+                 (default 0.02)
+  --load-events N  arrivals per offered-rate step (default 2000;
+                 400 with --fast)
+  --rate-qps F   first offered rate of the sweep; 0 = auto-calibrate
+                 to 1/4 of the closed-loop capacity (default 0)
+  --rate-steps N doublings to sweep (default 6; 4 with --fast)
 ";
 
 #[cfg(test)]

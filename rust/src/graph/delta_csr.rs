@@ -19,50 +19,62 @@
 
 use super::{Csr, GraphView};
 use std::collections::HashMap;
-use std::time::Instant;
 
-/// Self-tuning compaction state: the threshold chases an observed
-/// splice-vs-flat read-latency ratio instead of staying at the static
-/// quarter-of-base-arcs default. Flat latency is measured right after
-/// each compaction (the freshest flat snapshot), overlay latency right
-/// before each compaction decision; when overlay reads run more than
-/// `target_slowdown` times slower than the flat baseline the threshold
-/// halves (compact sooner), and when they stay within budget it grows
+/// Self-tuning compaction state: the threshold chases a modelled
+/// splice-vs-flat read-cost ratio instead of staying at the static
+/// quarter-of-base-arcs default. The flat cost is probed right after
+/// each compaction (the freshest flat snapshot), the overlay cost
+/// right before each compaction decision; when overlay reads cost more
+/// than `target_slowdown` times the flat baseline the threshold halves
+/// (compact sooner), and when they stay within budget it grows
 /// (compact less often, amortising the O(V+E) fold over more deltas).
+/// Costs come from [`DeltaCsr::probe_cost_per_arc`] — a deterministic
+/// arc-visit-count model, not wall-clock timing — so the threshold
+/// trajectory is bit-reproducible and immune to shared-box noise.
 #[derive(Clone, Debug)]
 struct AdaptiveCompaction {
-    /// Tolerated overlay/flat read-latency ratio (> 1.0).
+    /// Tolerated overlay/flat read-cost ratio (> 1.0).
     target_slowdown: f64,
-    /// EWMA ns-per-arc measured on the flat base after compactions
-    /// (0.0 until the first measurement).
-    flat_ns_per_arc: f64,
-    /// EWMA ns-per-arc measured through the overlay before compaction
-    /// decisions (0.0 until the first measurement).
-    overlay_ns_per_arc: f64,
+    /// EWMA cost-per-arc probed on the flat base after compactions
+    /// (0.0 until the first probe).
+    flat_cost_per_arc: f64,
+    /// EWMA cost-per-arc probed through the overlay before compaction
+    /// decisions (0.0 until the first probe).
+    overlay_cost_per_arc: f64,
     /// Threshold bounds the tuner may move within.
     min_threshold: usize,
     max_threshold: usize,
 }
 
-/// EWMA blend factor for latency observations: recent probes dominate
-/// but one noisy measurement cannot whipsaw the threshold.
+/// EWMA blend factor for cost observations: recent probes dominate but
+/// one unrepresentative sample (the strided probe sees different rows
+/// as the graph grows) cannot whipsaw the threshold.
 const ADAPTIVE_EWMA: f64 = 0.5;
 
+/// Modelled extra cost of reading a row through the overlay, in
+/// arc-equivalents per diverged row: the `HashMap` lookup plus the
+/// pointer chase to a separately allocated `Vec` row, versus the flat
+/// base's contiguous slice. The constant only has to get the *order*
+/// right — the retune rule compares the resulting ratio against
+/// `target_slowdown`, so moderate inaccuracy shifts when the threshold
+/// moves, never correctness.
+const OVERLAY_ROW_SURCHARGE: f64 = 8.0;
+
 /// Pure retuning rule, factored out so tests can drive it with
-/// synthetic latencies instead of wall-clock probes. Returns the new
-/// threshold given the current one and the observed ns-per-arc pair.
+/// synthetic costs instead of probe output. Returns the new threshold
+/// given the current one and the observed cost-per-arc pair.
 fn retune_threshold(
     threshold: usize,
-    overlay_ns_per_arc: f64,
-    flat_ns_per_arc: f64,
+    overlay_cost_per_arc: f64,
+    flat_cost_per_arc: f64,
     target_slowdown: f64,
     min_threshold: usize,
     max_threshold: usize,
 ) -> usize {
-    if flat_ns_per_arc <= 0.0 || overlay_ns_per_arc <= 0.0 {
+    if flat_cost_per_arc <= 0.0 || overlay_cost_per_arc <= 0.0 {
         return threshold.clamp(min_threshold, max_threshold);
     }
-    let ratio = overlay_ns_per_arc / flat_ns_per_arc;
+    let ratio = overlay_cost_per_arc / flat_cost_per_arc;
     let next = if ratio > target_slowdown {
         // overlay reads have become too slow: compact sooner
         threshold / 2
@@ -125,16 +137,18 @@ impl DeltaCsr {
     }
 
     /// Switch [`maybe_compact`](Self::maybe_compact) to the self-tuning
-    /// policy: before each compaction decision the overlay read latency
-    /// is probed and the threshold retuned against the flat baseline
-    /// measured after the last compaction. `target_slowdown` is the
-    /// tolerated overlay/flat ratio (values ≤ 1.0 are clamped to 1.1).
+    /// policy: before each compaction decision the overlay read cost is
+    /// probed (deterministic arc-visit model, see
+    /// [`probe_cost_per_arc`](Self::probe_cost_per_arc)) and the
+    /// threshold retuned against the flat baseline probed after the
+    /// last compaction. `target_slowdown` is the tolerated overlay/flat
+    /// ratio (values ≤ 1.0 are clamped to 1.1).
     pub fn enable_adaptive_compaction(&mut self, target_slowdown: f64) {
         let max = (self.base.num_arcs() / 2).max(4096);
         self.adaptive = Some(AdaptiveCompaction {
             target_slowdown: target_slowdown.max(1.1),
-            flat_ns_per_arc: 0.0,
-            overlay_ns_per_arc: 0.0,
+            flat_cost_per_arc: 0.0,
+            overlay_cost_per_arc: 0.0,
             min_threshold: 64,
             max_threshold: max,
         });
@@ -146,44 +160,46 @@ impl DeltaCsr {
         self.threshold
     }
 
-    /// Last observed `(overlay, flat)` ns-per-arc pair, when adaptive
+    /// Last observed `(overlay, flat)` cost-per-arc pair, when adaptive
     /// compaction is enabled and both sides have been probed.
-    pub fn adaptive_latencies(&self) -> Option<(f64, f64)> {
+    pub fn adaptive_costs(&self) -> Option<(f64, f64)> {
         self.adaptive
             .as_ref()
-            .filter(|a| a.flat_ns_per_arc > 0.0 && a.overlay_ns_per_arc > 0.0)
-            .map(|a| (a.overlay_ns_per_arc, a.flat_ns_per_arc))
+            .filter(|a| a.flat_cost_per_arc > 0.0 && a.overlay_cost_per_arc > 0.0)
+            .map(|a| (a.overlay_cost_per_arc, a.flat_cost_per_arc))
     }
 
-    /// Time a deterministic sample of row reads through the current
-    /// representation; returns ns per traversed arc. Sampling strides
-    /// over the id space so overlay and base rows are both hit, and the
-    /// neighbour sum is returned through `std::hint::black_box` so the
-    /// traversal cannot be optimised away.
-    fn probe_read_ns_per_arc(&self, sample_rows: usize) -> f64 {
+    /// Modelled read cost per traversed arc over a deterministic
+    /// strided row sample: an arc read through the flat base costs 1
+    /// unit, and each sampled row resident in the overlay adds
+    /// [`OVERLAY_ROW_SURCHARGE`] units on top. A freshly compacted
+    /// graph therefore probes at exactly 1.0 and the value rises with
+    /// overlay density. This replaces an earlier wall-clock ns-per-arc
+    /// probe: arc-visit counts depend only on the structure, so the
+    /// adaptive threshold now moves identically on every machine and
+    /// every run — no shared-box timing noise, no black-box read walk
+    /// on the delta path.
+    fn probe_cost_per_arc(&self, sample_rows: usize) -> f64 {
         let n = self.num_nodes();
         if n == 0 {
             return 0.0;
         }
         let sample = sample_rows.clamp(1, n);
         let stride = (n / sample).max(1);
-        let start = Instant::now();
         let mut arcs = 0usize;
-        let mut checksum = 0u64;
+        let mut overlay_rows = 0usize;
         let mut v = 0usize;
         while v < n {
-            let row = self.neighbors(v);
-            arcs += row.len();
-            for &t in row {
-                checksum = checksum.wrapping_add(t as u64);
+            arcs += GraphView::degree(self, v);
+            if self.overlay.contains_key(&(v as u32)) {
+                overlay_rows += 1;
             }
             v += stride;
         }
-        std::hint::black_box(checksum);
         if arcs == 0 {
             return 0.0;
         }
-        start.elapsed().as_nanos() as f64 / arcs as f64
+        (arcs as f64 + overlay_rows as f64 * OVERLAY_ROW_SURCHARGE) / arcs as f64
     }
 
     /// Current graph version (bumped by [`bump_version`](Self::bump_version)).
@@ -293,30 +309,31 @@ impl DeltaCsr {
     /// Fold the overlay into a fresh flat base when it has outgrown the
     /// threshold (appended isolated nodes alone never trigger — they
     /// carry no arcs). Under the adaptive policy the threshold is
-    /// retuned first from a fresh overlay-latency probe. Returns
-    /// whether a compaction ran.
+    /// retuned first from a fresh overlay-cost probe. Returns whether a
+    /// compaction ran.
     pub fn maybe_compact(&mut self) -> bool {
         // probe only when a compaction decision is actually near (the
-        // overlay past half the threshold) — a timed read walk on every
-        // delta would tax the hot path more than splicing costs
+        // overlay past half the threshold) — even the cheap counting
+        // walk on every delta would tax the hot path more than splicing
+        // costs
         if self.adaptive.is_some() && !self.overlay.is_empty() && self.overlay_arcs * 2 > self.threshold
         {
             // observe the overlay before deciding; the flat side of the
             // ratio was captured right after the last compaction
             let sample = (self.overlay.len() * 4).max(64);
-            let probe = self.probe_read_ns_per_arc(sample);
+            let probe = self.probe_cost_per_arc(sample);
             let a = self.adaptive.as_mut().expect("checked above");
             if probe > 0.0 {
-                a.overlay_ns_per_arc = if a.overlay_ns_per_arc > 0.0 {
-                    ADAPTIVE_EWMA * probe + (1.0 - ADAPTIVE_EWMA) * a.overlay_ns_per_arc
+                a.overlay_cost_per_arc = if a.overlay_cost_per_arc > 0.0 {
+                    ADAPTIVE_EWMA * probe + (1.0 - ADAPTIVE_EWMA) * a.overlay_cost_per_arc
                 } else {
                     probe
                 };
             }
             self.threshold = retune_threshold(
                 self.threshold,
-                a.overlay_ns_per_arc,
-                a.flat_ns_per_arc,
+                a.overlay_cost_per_arc,
+                a.flat_cost_per_arc,
                 a.target_slowdown,
                 a.min_threshold,
                 a.max_threshold,
@@ -341,13 +358,14 @@ impl DeltaCsr {
         self.compactions += 1;
         debug_assert_eq!(self.base.num_arcs(), self.arcs);
         if self.adaptive.is_some() {
-            // freshly flat: (re)measure the baseline the tuner compares
-            // overlay probes against
-            let probe = self.probe_read_ns_per_arc(256);
+            // freshly flat: (re)probe the baseline the tuner compares
+            // overlay probes against (always exactly 1.0 under the
+            // arc-visit model, kept as a probe so the model can evolve)
+            let probe = self.probe_cost_per_arc(256);
             let a = self.adaptive.as_mut().expect("checked above");
             if probe > 0.0 {
-                a.flat_ns_per_arc = if a.flat_ns_per_arc > 0.0 {
-                    ADAPTIVE_EWMA * probe + (1.0 - ADAPTIVE_EWMA) * a.flat_ns_per_arc
+                a.flat_cost_per_arc = if a.flat_cost_per_arc > 0.0 {
+                    ADAPTIVE_EWMA * probe + (1.0 - ADAPTIVE_EWMA) * a.flat_cost_per_arc
                 } else {
                     probe
                 };
@@ -534,8 +552,9 @@ mod tests {
             assert!(d.threshold >= min_t && d.threshold <= max_t);
         }
         d.compact();
-        // flat baseline measured after an adaptive compaction
-        assert!(d.adaptive.as_ref().unwrap().flat_ns_per_arc >= 0.0);
+        // flat baseline probed after an adaptive compaction: exactly
+        // 1.0 under the arc-visit model (no overlay rows remain)
+        assert_eq!(d.adaptive.as_ref().unwrap().flat_cost_per_arc, 1.0);
         assert!(d.validate().is_ok());
         let want = {
             let mut m = DeltaCsr::new(path5());
@@ -545,6 +564,36 @@ mod tests {
             m.to_csr()
         };
         assert_eq!(d.to_csr(), want, "adaptive policy must not change the graph");
+    }
+
+    #[test]
+    fn adaptive_probe_is_deterministic() {
+        // the whole point of the arc-visit cost model: two identical
+        // edit sequences leave identical tuner state, bit for bit
+        let run = || {
+            let mut d = DeltaCsr::new(path5());
+            d.enable_adaptive_compaction(1.5);
+            for i in 0..4u32 {
+                d.add_edge(i, (i + 2) % 5);
+                d.maybe_compact();
+            }
+            d.compact();
+            let a = d.adaptive.as_ref().unwrap();
+            (d.threshold, a.overlay_cost_per_arc.to_bits(), a.flat_cost_per_arc.to_bits())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn cost_probe_charges_overlay_surcharge() {
+        let mut d = DeltaCsr::new(path5());
+        // fully flat: every arc costs exactly one unit
+        assert_eq!(d.probe_cost_per_arc(64), 1.0);
+        d.add_edge(0, 3);
+        let spliced = d.probe_cost_per_arc(64);
+        assert!(spliced > 1.0, "overlay rows must carry a surcharge, got {spliced}");
+        d.compact();
+        assert_eq!(d.probe_cost_per_arc(64), 1.0, "compaction restores the flat cost");
     }
 
     #[test]

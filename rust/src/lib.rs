@@ -29,7 +29,11 @@
 //! ([`graph::DeltaCsr`] behind the [`graph::GraphView`] trait):
 //! online edge churn and elastic node insertion/removal splice through
 //! a per-node overlay in O(Δ) with batched compaction — no O(E)
-//! rebuild, no offline reshard.
+//! rebuild, no offline reshard. [`loadgen`] closes the loop on the
+//! serving story: a deterministic open-loop workload generator drives
+//! the server through a virtual-time event loop (Poisson arrivals,
+//! Zipfian popularity, interleaved churn) under pluggable schedulers,
+//! measuring the goodput knee that closed-loop benches cannot see.
 //!
 //! ## Quickstart
 //!
@@ -58,6 +62,7 @@ pub mod comm;
 pub mod coordinator;
 pub mod datasets;
 pub mod graph;
+pub mod loadgen;
 pub mod metrics;
 pub mod model;
 pub mod partition;
@@ -76,6 +81,9 @@ pub mod prelude {
     pub use crate::coordinator::{AsyncConfig, ConsensusMode, TrainConfig, TrainReport};
     pub use crate::datasets::{Dataset, SyntheticSpec};
     pub use crate::graph::{Csr, DeltaCsr, GraphView, Subgraph};
+    pub use crate::loadgen::{
+        FifoScheduler, Scheduler, SloBatchScheduler, WorkloadConfig,
+    };
     pub use crate::model::GcnParams;
     pub use crate::partition::{PartitionConfig, Partitioning};
     pub use crate::rng::Rng;

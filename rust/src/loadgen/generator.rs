@@ -1,0 +1,199 @@
+//! Deterministic open-loop workload schedules.
+//!
+//! The schedule is generated **up front** from a seed and the initial
+//! graph alone — it never observes server state, so the same config
+//! replays byte-identically no matter which scheduler consumes it or
+//! how slowly the server runs. That is the defining property of an
+//! open-loop generator (arrivals keep coming whether or not the server
+//! keeps up) and what makes FIFO-vs-batcher comparisons apples to
+//! apples.
+
+use crate::graph::Csr;
+use crate::rng::{Rng, Zipf};
+use crate::serve::GraphDelta;
+use std::collections::HashSet;
+
+/// Workload shape for one offered-rate step.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Offered arrival rate in events per *virtual* second. The
+    /// inter-arrival gaps are exponential with this rate (a Poisson
+    /// process), so bursts occur naturally.
+    pub rate_qps: f64,
+    /// Total arrivals (queries + deltas) in the schedule.
+    pub events: usize,
+    /// Zipf popularity skew over query nodes; 0 = uniform.
+    pub zipf_s: f64,
+    /// Fraction of arrivals that are [`GraphDelta`] churn instead of
+    /// queries.
+    pub churn_frac: f64,
+    /// Edge add/removes per delta (each delta also rewrites one
+    /// feature row).
+    pub edges_per_delta: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            rate_qps: 1_000.0,
+            events: 2_000,
+            zipf_s: 0.9,
+            churn_frac: 0.02,
+            edges_per_delta: 4,
+            seed: 0,
+        }
+    }
+}
+
+/// What arrives: a query for one node, or a graph mutation.
+#[derive(Clone, Debug)]
+pub enum ArrivalKind {
+    Query { node: u32 },
+    Delta(GraphDelta),
+}
+
+/// One schedule event at a virtual instant.
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    /// Virtual arrival time, microseconds from schedule start.
+    /// Non-decreasing across the schedule.
+    pub at_us: u64,
+    pub kind: ArrivalKind,
+}
+
+/// Generate the full time-ordered arrival schedule for `cfg` against
+/// the *initial* graph.
+///
+/// Popularity: Zipf ranks are mapped onto node ids through a seeded
+/// permutation, so the hot set is spread across shards rather than
+/// being the lowest ids (which partitioners tend to co-locate). Churn:
+/// deltas are drawn from an evolving edge pool exactly like the fig12
+/// churn schedule — adds avoid duplicates, removals pick live edges —
+/// plus one feature-row rewrite each. Deltas deliberately never add or
+/// remove *nodes*: the Zipf universe must stay alive for the whole
+/// run so any scheduled query is always answerable.
+pub fn generate_schedule(graph: &Csr, feature_dim: usize, cfg: &WorkloadConfig) -> Vec<Arrival> {
+    let n = graph.num_nodes();
+    assert!(n > 0, "cannot generate load against an empty graph");
+    assert!(cfg.rate_qps > 0.0, "offered rate must be positive");
+    assert!((0.0..=1.0).contains(&cfg.churn_frac), "churn_frac is a fraction");
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x10AD_F00D);
+    let zipf = Zipf::new(n, cfg.zipf_s);
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    let mut edges: Vec<(u32, u32)> = graph.edges().collect();
+    let mut present: HashSet<(u32, u32)> = edges.iter().copied().collect();
+    let mut t_us = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.events);
+    for _ in 0..cfg.events {
+        // exponential inter-arrival by inverse-CDF; the clock advances
+        // regardless of anything the server will later do
+        let u = rng.gen_f64();
+        t_us += -(1.0 - u).ln() / cfg.rate_qps * 1e6;
+        let kind = if rng.gen_bool(cfg.churn_frac) {
+            ArrivalKind::Delta(next_delta(
+                &mut rng,
+                n,
+                feature_dim,
+                cfg.edges_per_delta,
+                &mut edges,
+                &mut present,
+            ))
+        } else {
+            ArrivalKind::Query { node: perm[zipf.sample(&mut rng)] }
+        };
+        out.push(Arrival { at_us: t_us as u64, kind });
+    }
+    out
+}
+
+fn next_delta(
+    rng: &mut Rng,
+    n: usize,
+    feature_dim: usize,
+    edges_per_delta: usize,
+    edges: &mut Vec<(u32, u32)>,
+    present: &mut HashSet<(u32, u32)>,
+) -> GraphDelta {
+    let mut d = GraphDelta::default();
+    for _ in 0..edges_per_delta {
+        if rng.gen_bool(0.5) && edges.len() > 1 {
+            let i = rng.gen_range(edges.len());
+            let e = edges.swap_remove(i);
+            present.remove(&e);
+            d.removed_edges.push(e);
+        } else {
+            // a few attempts to find a non-duplicate edge; give up
+            // quietly on dense luck — the delta just carries one op less
+            for _ in 0..8 {
+                let u = rng.gen_range(n) as u32;
+                let v = rng.gen_range(n) as u32;
+                if u == v {
+                    continue;
+                }
+                let c = if u < v { (u, v) } else { (v, u) };
+                if present.insert(c) {
+                    edges.push(c);
+                    d.added_edges.push(c);
+                    break;
+                }
+            }
+        }
+    }
+    let fv = rng.gen_range(n) as u32;
+    let row: Vec<f32> = (0..feature_dim).map(|_| rng.gen_f32() - 0.5).collect();
+    d.updated_features.push((fv, row));
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn ring(n: usize) -> Csr {
+        let edges: Vec<(u32, u32)> =
+            (0..n as u32).map(|i| (i, (i + 1) % n as u32)).collect();
+        GraphBuilder::new(n).edges(&edges).build()
+    }
+
+    #[test]
+    fn schedule_is_time_ordered_and_mixed() {
+        let g = ring(40);
+        let cfg = WorkloadConfig {
+            rate_qps: 10_000.0,
+            events: 400,
+            churn_frac: 0.1,
+            ..Default::default()
+        };
+        let s = generate_schedule(&g, 3, &cfg);
+        assert_eq!(s.len(), 400);
+        assert!(s.windows(2).all(|w| w[0].at_us <= w[1].at_us), "arrivals must be time-ordered");
+        let deltas = s.iter().filter(|a| matches!(a.kind, ArrivalKind::Delta(_))).count();
+        assert!(deltas > 0 && deltas < 100, "churn mixes in at roughly churn_frac ({deltas})");
+        for a in &s {
+            if let ArrivalKind::Query { node } = a.kind {
+                assert!((node as usize) < 40);
+            }
+        }
+    }
+
+    #[test]
+    fn rate_controls_horizon() {
+        let g = ring(20);
+        let slow = generate_schedule(
+            &g,
+            2,
+            &WorkloadConfig { rate_qps: 100.0, events: 200, ..Default::default() },
+        );
+        let fast = generate_schedule(
+            &g,
+            2,
+            &WorkloadConfig { rate_qps: 10_000.0, events: 200, ..Default::default() },
+        );
+        // 200 events at 100 qps span ~2 s of virtual time; at 10k qps
+        // only ~20 ms — two orders of magnitude apart
+        assert!(slow.last().unwrap().at_us > 10 * fast.last().unwrap().at_us);
+    }
+}

@@ -1,0 +1,45 @@
+//! Open-loop load generation against the serving tier.
+//!
+//! Every serving number up to fig13 is **closed-loop**: the next query
+//! waits for the previous answer, so the harness can never offer more
+//! load than the server absorbs and queueing collapse is invisible by
+//! construction. This subsystem is the open-loop counterpart — the
+//! ROADMAP's "millions-of-users test" — built from four pieces:
+//!
+//! * [`generator`] — a deterministic workload schedule: seeded
+//!   exponential (Poisson-process) inter-arrival times at a
+//!   configurable offered rate, Zipfian query-node popularity with
+//!   configurable skew, and a mixed traffic class that interleaves
+//!   [`GraphDelta`](crate::serve::GraphDelta) churn at a configurable
+//!   fraction. The generator never reads server state, so the same
+//!   seed replays the exact same byte sequence of arrivals against any
+//!   scheduler — the property every A/B comparison below leans on.
+//! * [`scheduler`] — the pluggable dequeue policy behind the
+//!   [`Scheduler`] trait: [`FifoScheduler`] (strict arrival order, one
+//!   query per flush — the baseline every queueing textbook collapses
+//!   first) and [`SloBatchScheduler`] (accumulate per home shard until
+//!   batch size `K` or the oldest request's deadline slack runs out,
+//!   then flush the bucket through the server's micro-batched
+//!   recompute path).
+//! * [`sim`] — a virtual-time event loop on one thread: arrivals
+//!   enqueue at their scheduled virtual instant, the scheduler decides
+//!   flushes, and each flush's **wall-clock** service time is folded
+//!   back into the virtual clock, so queue depth evolves exactly as it
+//!   would against a single-threaded replica of the server. Deltas act
+//!   as barriers (drain, apply, resume), which keeps every answer
+//!   bit-identical to a sequential replay of the same schedule.
+//! * [`report`] — the fig14 sweep: offered rate doubles per step until
+//!   both schedulers are past the knee, each step running FIFO and the
+//!   SLO batcher on the identical seeded schedule, reporting goodput
+//!   (answers within SLO), p50/p99/p999 latency, queueing-vs-service
+//!   split, and queue depth — md + csv like the fig11–13 family.
+
+pub mod generator;
+pub mod report;
+pub mod scheduler;
+pub mod sim;
+
+pub use generator::{generate_schedule, Arrival, ArrivalKind, WorkloadConfig};
+pub use report::{run_load_bench, LoadBenchConfig, LoadBenchReport, RateRow};
+pub use scheduler::{FifoScheduler, PendingQuery, Scheduler, SloBatchScheduler};
+pub use sim::{run_open_loop, RequestOutcome, SimOptions, SimResult};

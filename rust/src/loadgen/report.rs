@@ -1,0 +1,379 @@
+//! Fig 14 (ours): the latency-vs-offered-rate knee.
+//!
+//! The sweep anchors on a closed-loop capacity probe (warm
+//! single-query qps), then doubles the offered rate per step. Each
+//! step generates **one** seeded schedule and replays it against two
+//! fresh servers — FIFO and the SLO-aware micro-batcher — so every
+//! comparison row saw byte-identical arrivals, popularity, and churn.
+//! Below the knee both schedulers answer nearly everything within SLO;
+//! past it FIFO's queue grows without bound while the batcher folds
+//! the backlog into ever-larger per-shard flushes and keeps a strictly
+//! higher goodput. The sweep stops early once both modes are past the
+//! knee — the collapse only deepens from there.
+
+use super::generator::{generate_schedule, WorkloadConfig};
+use super::scheduler::{FifoScheduler, Scheduler, SloBatchScheduler};
+use super::sim::{run_open_loop, SimOptions, SimResult};
+use crate::datasets::Dataset;
+use crate::model::GcnParams;
+use crate::serve::{ServeConfig, Server};
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Fig 14 sweep configuration.
+#[derive(Clone, Debug)]
+pub struct LoadBenchConfig {
+    /// Serving shards.
+    pub shards: usize,
+    /// Per-query deadline (virtual µs).
+    pub slo_us: u64,
+    /// SLO batcher flush size K.
+    pub batch_k: usize,
+    /// Zipf popularity skew (0 = uniform).
+    pub zipf_s: f64,
+    /// Fraction of arrivals that are graph deltas.
+    pub churn_frac: f64,
+    /// Edge churn ops per delta.
+    pub edges_per_delta: usize,
+    /// Arrivals per offered-rate step.
+    pub events_per_step: usize,
+    /// First offered rate in qps; 0 = auto-calibrate (the sweep then
+    /// starts at a quarter of the measured closed-loop capacity, so
+    /// the knee lands inside the sweep on any machine).
+    pub rate_start_qps: f64,
+    /// Geometric rate multiplier between steps.
+    pub rate_mult: f64,
+    /// Offered-rate steps (early-stopped once both schedulers
+    /// collapse).
+    pub rate_steps: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadBenchConfig {
+    fn default() -> Self {
+        LoadBenchConfig {
+            shards: 4,
+            slo_us: 5_000,
+            batch_k: 16,
+            zipf_s: 0.9,
+            churn_frac: 0.02,
+            edges_per_delta: 4,
+            events_per_step: 2_000,
+            rate_start_qps: 0.0,
+            rate_mult: 2.0,
+            rate_steps: 6,
+            seed: 0,
+        }
+    }
+}
+
+/// One `(scheduler, offered rate)` sweep row.
+#[derive(Clone, Debug)]
+pub struct RateRow {
+    pub mode: String,
+    pub offered_qps: f64,
+    /// Answers delivered per virtual second.
+    pub achieved_qps: f64,
+    /// Answers *within SLO* per virtual second — the goodput axis.
+    pub goodput_qps: f64,
+    /// Fraction of answers within SLO.
+    pub goodput_ratio: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    /// Mean time a query waited in the scheduler.
+    pub mean_queue_us: f64,
+    /// Mean flush (service) time per answer.
+    pub mean_service_us: f64,
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: usize,
+    pub answered: usize,
+    pub deltas: usize,
+}
+
+/// Full sweep result; renders the fig14 md + csv.
+#[derive(Clone, Debug)]
+pub struct LoadBenchReport {
+    pub rows: Vec<RateRow>,
+    pub slo_us: u64,
+    /// Closed-loop single-query capacity the sweep anchored on (qps).
+    pub calibrated_qps: f64,
+}
+
+impl LoadBenchReport {
+    /// Highest offered rate at which `mode` still met ≥ 95% of
+    /// deadlines — the operational definition of "before the knee".
+    pub fn knee_qps(&self, mode: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .filter(|r| r.mode == mode && r.goodput_ratio >= 0.95)
+            .map(|r| r.offered_qps)
+            .fold(None, |acc: Option<f64>, q| Some(acc.map_or(q, |a| a.max(q))))
+    }
+
+    /// Goodput comparison at the highest swept rate past FIFO's knee:
+    /// `(offered, fifo goodput, slo-batch goodput)` when such a step
+    /// exists. The acceptance headline: the batcher's entry must be
+    /// strictly higher.
+    pub fn past_knee_goodput(&self) -> Option<(f64, f64, f64)> {
+        let knee = self.knee_qps("fifo").unwrap_or(0.0);
+        let mut best: Option<(f64, f64, f64)> = None;
+        for r in self.rows.iter().filter(|r| r.mode == "fifo" && r.offered_qps > knee) {
+            if let Some(b) =
+                self.rows.iter().find(|b| b.mode == "slo-batch" && b.offered_qps == r.offered_qps)
+            {
+                if best.map_or(true, |(q, _, _)| r.offered_qps > q) {
+                    best = Some((r.offered_qps, r.goodput_qps, b.goodput_qps));
+                }
+            }
+        }
+        best
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str(
+            "| scheduler | offered qps | goodput qps | within SLO | p50 ms | p99 ms | p999 ms \
+             | wait µs | service µs | depth mean | depth max | deltas |\n",
+        );
+        s.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "| {} | {:.0} | {:.0} | {:.1}% | {:.2} | {:.2} | {:.2} | {:.0} | {:.0} | {:.1} | {} | {} |",
+                r.mode,
+                r.offered_qps,
+                r.goodput_qps,
+                r.goodput_ratio * 100.0,
+                r.p50_us / 1e3,
+                r.p99_us / 1e3,
+                r.p999_us / 1e3,
+                r.mean_queue_us,
+                r.mean_service_us,
+                r.queue_depth_mean,
+                r.queue_depth_max,
+                r.deltas,
+            );
+        }
+        let _ = writeln!(
+            s,
+            "\ncalibrated closed-loop capacity ≈ {:.0} qps; SLO = {:.1} ms",
+            self.calibrated_qps,
+            self.slo_us as f64 / 1e3
+        );
+        for mode in ["fifo", "slo-batch"] {
+            match self.knee_qps(mode) {
+                Some(k) => {
+                    let _ = writeln!(s, "{mode} knee: last ≥95%-goodput rate ≈ {k:.0} qps");
+                }
+                None => {
+                    let _ = writeln!(s, "{mode} knee: below the first swept rate");
+                }
+            }
+        }
+        if let Some((rate, fifo, batch)) = self.past_knee_goodput() {
+            let _ = writeln!(
+                s,
+                "past the fifo knee (offered {:.0} qps): slo-batch goodput **{:.0} qps** vs fifo \
+                 **{:.0} qps** ({:.2}x)",
+                rate,
+                batch,
+                fifo,
+                batch / fifo.max(1e-9),
+            );
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "mode,offered_qps,achieved_qps,goodput_qps,goodput_ratio,p50_us,p99_us,p999_us,\
+             mean_queue_us,mean_service_us,queue_depth_mean,queue_depth_max,answered,deltas\n",
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{},{:.2},{:.2},{:.2},{:.4},{:.1},{:.1},{:.1},{:.1},{:.1},{:.2},{},{},{}",
+                r.mode,
+                r.offered_qps,
+                r.achieved_qps,
+                r.goodput_qps,
+                r.goodput_ratio,
+                r.p50_us,
+                r.p99_us,
+                r.p999_us,
+                r.mean_queue_us,
+                r.mean_service_us,
+                r.queue_depth_mean,
+                r.queue_depth_max,
+                r.answered,
+                r.deltas,
+            );
+        }
+        s
+    }
+}
+
+/// Nearest-rank percentile over an ascending slice (same rule the
+/// fig11 latency tables use).
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * p).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+fn build_server(ds: &Dataset, params: &GcnParams, cfg: &LoadBenchConfig) -> Result<Server> {
+    let scfg = ServeConfig { shards: cfg.shards, seed: cfg.seed, ..Default::default() };
+    let mut srv = Server::for_dataset(ds, params.clone(), scfg)?;
+    // warm to steady state first: the open-loop question is about
+    // queueing under load, not cold caches
+    let all: Vec<u32> = (0..ds.graph.num_nodes() as u32).collect();
+    for chunk in all.chunks(256) {
+        srv.query_batch(chunk)?;
+    }
+    Ok(srv)
+}
+
+/// Closed-loop warm single-query capacity (qps) — the sweep's anchor.
+fn calibrate_qps(srv: &mut Server, n: usize) -> Result<f64> {
+    let probes = 256.min(n.max(1));
+    let t = Instant::now();
+    for i in 0..probes {
+        srv.query((i % n) as u32)?;
+    }
+    let mean_s = t.elapsed().as_secs_f64() / probes as f64;
+    Ok(1.0 / mean_s.max(1e-9))
+}
+
+/// Run the full fig14 sweep. Each rate step replays one seeded
+/// schedule under both schedulers on fresh warmed servers.
+pub fn run_load_bench(
+    ds: &Dataset,
+    params: &GcnParams,
+    cfg: &LoadBenchConfig,
+) -> Result<LoadBenchReport> {
+    let calibrated = {
+        let mut srv = build_server(ds, params, cfg)?;
+        calibrate_qps(&mut srv, ds.graph.num_nodes())?
+    };
+    let rate0 = if cfg.rate_start_qps > 0.0 { cfg.rate_start_qps } else { calibrated * 0.25 };
+    let opts = SimOptions { slo_us: cfg.slo_us, record_probs: false };
+    let mut rows: Vec<RateRow> = Vec::new();
+    for step in 0..cfg.rate_steps {
+        let rate = rate0 * cfg.rate_mult.powi(step as i32);
+        let wcfg = WorkloadConfig {
+            rate_qps: rate,
+            events: cfg.events_per_step,
+            zipf_s: cfg.zipf_s,
+            churn_frac: cfg.churn_frac,
+            edges_per_delta: cfg.edges_per_delta,
+            // one seed per step, shared by both schedulers: identical
+            // arrivals, popularity, and churn
+            seed: cfg.seed ^ (step as u64 + 1).wrapping_mul(0x9E37_79B9),
+        };
+        let schedule = generate_schedule(&ds.graph, ds.feature_dim(), &wcfg);
+        for mode in ["fifo", "slo-batch"] {
+            let mut srv = build_server(ds, params, cfg)?;
+            let mut fifo = FifoScheduler::new();
+            let mut batch =
+                SloBatchScheduler::new(srv.num_shards(), cfg.batch_k, cfg.slo_us / 4);
+            let sched: &mut dyn Scheduler =
+                if mode == "fifo" { &mut fifo } else { &mut batch };
+            let sim = run_open_loop(&mut srv, &schedule, sched, &opts)?;
+            rows.push(summarize(mode, rate, &sim));
+        }
+        let past_knee = rows[rows.len() - 2..].iter().all(|r| r.goodput_ratio < 0.5);
+        if past_knee {
+            break;
+        }
+    }
+    Ok(LoadBenchReport { rows, slo_us: cfg.slo_us, calibrated_qps: calibrated })
+}
+
+fn summarize(mode: &str, offered_qps: f64, sim: &SimResult) -> RateRow {
+    let answered = sim.outcomes.len();
+    let denom = answered.max(1) as f64;
+    let mut lat: Vec<f64> = sim.outcomes.iter().map(|o| o.latency_us() as f64).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let dur_s = (sim.end_us as f64 / 1e6).max(1e-9);
+    let within = sim.outcomes.iter().filter(|o| o.within_slo).count();
+    RateRow {
+        mode: mode.to_string(),
+        offered_qps,
+        achieved_qps: answered as f64 / dur_s,
+        goodput_qps: within as f64 / dur_s,
+        goodput_ratio: within as f64 / denom,
+        p50_us: percentile(&lat, 0.50),
+        p99_us: percentile(&lat, 0.99),
+        p999_us: percentile(&lat, 0.999),
+        mean_queue_us: sim.outcomes.iter().map(|o| o.queueing_us() as f64).sum::<f64>() / denom,
+        mean_service_us: sim.outcomes.iter().map(|o| o.service_us() as f64).sum::<f64>() / denom,
+        queue_depth_mean: sim.queue_depth_mean,
+        queue_depth_max: sim.queue_depth_max,
+        answered,
+        deltas: sim.deltas_applied,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(mode: &str, offered: f64, ratio: f64) -> RateRow {
+        RateRow {
+            mode: mode.to_string(),
+            offered_qps: offered,
+            achieved_qps: offered * ratio,
+            goodput_qps: offered * ratio,
+            goodput_ratio: ratio,
+            p50_us: 100.0,
+            p99_us: 400.0,
+            p999_us: 900.0,
+            mean_queue_us: 50.0,
+            mean_service_us: 80.0,
+            queue_depth_mean: 1.5,
+            queue_depth_max: 9,
+            answered: 100,
+            deltas: 2,
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn knee_and_past_knee_headline() {
+        let rep = LoadBenchReport {
+            rows: vec![
+                row("fifo", 100.0, 1.0),
+                row("slo-batch", 100.0, 1.0),
+                row("fifo", 200.0, 0.97),
+                row("slo-batch", 200.0, 0.99),
+                row("fifo", 400.0, 0.30),
+                row("slo-batch", 400.0, 0.90),
+            ],
+            slo_us: 5_000,
+            calibrated_qps: 250.0,
+        };
+        assert_eq!(rep.knee_qps("fifo"), Some(200.0));
+        assert_eq!(rep.knee_qps("slo-batch"), Some(200.0));
+        let (rate, fifo, batch) = rep.past_knee_goodput().expect("a step past the knee");
+        assert_eq!(rate, 400.0);
+        assert!(batch > fifo);
+        let md = rep.to_markdown();
+        assert!(md.contains("past the fifo knee"));
+        assert!(md.contains("slo-batch"));
+        let csv = rep.to_csv();
+        assert_eq!(csv.lines().count(), 1 + rep.rows.len());
+        assert!(csv.starts_with("mode,offered_qps"));
+    }
+}

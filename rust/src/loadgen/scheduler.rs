@@ -1,0 +1,253 @@
+//! Pluggable dequeue policies for the open-loop event loop.
+//!
+//! The scheduler owns every query that has arrived but not yet been
+//! served. The event loop asks it two things: "would you flush a batch
+//! at virtual time `t`?" ([`Scheduler::pop`]) and "when would a held
+//! query next force a flush?" ([`Scheduler::next_flush_at`], so the
+//! loop can advance the clock straight to that instant when idle).
+//! Policies must be deterministic: given the same enqueue/pop call
+//! sequence they must make the same decisions, because answer
+//! bit-identity tests replay schedules against them.
+
+use std::collections::VecDeque;
+
+/// A query waiting in the scheduler.
+#[derive(Clone, Debug)]
+pub struct PendingQuery {
+    /// Position in the arrival schedule — the stable identity that
+    /// ties an outcome back to the generator's event order.
+    pub id: u64,
+    pub node: u32,
+    /// Home shard (the SLO batcher buckets by it; a flush is always
+    /// one shard's micro-batch).
+    pub shard: u32,
+    /// Virtual arrival time (µs).
+    pub arrival_us: u64,
+    /// `arrival + SLO`: an answer completing later counts as late.
+    pub deadline_us: u64,
+}
+
+/// See module docs.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Admit an arrived query.
+    fn enqueue(&mut self, q: PendingQuery);
+
+    /// The next micro-batch to dispatch at virtual time `now_us`, if
+    /// the policy wants to flush one. All returned queries share one
+    /// home shard. `drain = true` overrides the policy's batching
+    /// patience (the event loop drains before a delta barrier and at
+    /// end of schedule); an implementation must return `Some` under
+    /// `drain` whenever it holds anything.
+    fn pop(&mut self, now_us: u64, drain: bool) -> Option<Vec<PendingQuery>>;
+
+    /// Earliest virtual time at which a currently-held query forces a
+    /// flush, if the policy is waiting on one. `None` means "nothing
+    /// held" or "I never flush on time alone" (FIFO).
+    fn next_flush_at(&self) -> Option<u64>;
+
+    /// Queries currently held.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Strict arrival order, one query per flush — the classic baseline.
+/// Its knee is set entirely by per-query service time: once the
+/// offered rate exceeds `1 / service`, the queue grows without bound.
+#[derive(Debug, Default)]
+pub struct FifoScheduler {
+    q: VecDeque<PendingQuery>,
+}
+
+impl FifoScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn enqueue(&mut self, q: PendingQuery) {
+        self.q.push_back(q);
+    }
+
+    fn pop(&mut self, _now_us: u64, _drain: bool) -> Option<Vec<PendingQuery>> {
+        self.q.pop_front().map(|q| vec![q])
+    }
+
+    fn next_flush_at(&self) -> Option<u64> {
+        // FIFO is always willing to serve immediately; the event loop
+        // only consults this when it chose not to pop, i.e. when empty
+        None
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+}
+
+/// SLO-aware per-shard micro-batcher.
+///
+/// Queries accumulate in per-home-shard buckets. A bucket flushes
+/// (whole, through the server's one-GEMM micro-batch path) when either
+///
+/// * it holds `batch_k` or more queries — the amortisation target, or
+/// * its **oldest** query's deadline slack is spent: virtual time has
+///   reached `deadline - reserve_us`, where `reserve_us` is the
+///   service allowance withheld so a slack-triggered flush still has
+///   time to actually execute before the deadline.
+///
+/// Among simultaneously-ready buckets the one with the oldest head
+/// flushes first, shard id breaking ties — fully deterministic.
+pub struct SloBatchScheduler {
+    batch_k: usize,
+    reserve_us: u64,
+    buckets: Vec<VecDeque<PendingQuery>>,
+    held: usize,
+}
+
+impl SloBatchScheduler {
+    /// `shards` must cover every shard id the event loop will route
+    /// (use [`Server::num_shards`](crate::serve::Server::num_shards)).
+    pub fn new(shards: usize, batch_k: usize, reserve_us: u64) -> Self {
+        SloBatchScheduler {
+            batch_k: batch_k.max(1),
+            reserve_us,
+            buckets: vec![VecDeque::new(); shards.max(1)],
+            held: 0,
+        }
+    }
+
+    fn flush_deadline(&self, q: &PendingQuery) -> u64 {
+        q.deadline_us.saturating_sub(self.reserve_us)
+    }
+
+    /// Oldest-head bucket among those `ready` admits; shard id breaks
+    /// ties.
+    fn pick(&self, ready: impl Fn(&VecDeque<PendingQuery>) -> bool) -> Option<usize> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| !b.is_empty() && ready(b))
+            .min_by_key(|(s, b)| (b.front().expect("non-empty").arrival_us, *s))
+            .map(|(s, _)| s)
+    }
+}
+
+impl Scheduler for SloBatchScheduler {
+    fn name(&self) -> &'static str {
+        "slo-batch"
+    }
+
+    fn enqueue(&mut self, q: PendingQuery) {
+        let s = q.shard as usize;
+        assert!(s < self.buckets.len(), "query routed to unknown shard {s}");
+        self.buckets[s].push_back(q);
+        self.held += 1;
+    }
+
+    fn pop(&mut self, now_us: u64, drain: bool) -> Option<Vec<PendingQuery>> {
+        let k = self.batch_k;
+        let s = if drain {
+            self.pick(|_| true)
+        } else {
+            // K first (a full bucket amortises best), deadline second;
+            // a flush takes the whole bucket, so under backlog a batch
+            // can exceed K — that only amortises harder
+            self.pick(|b| b.len() >= k).or_else(|| {
+                self.pick(|b| self.flush_deadline(b.front().expect("non-empty")) <= now_us)
+            })
+        }?;
+        let batch: Vec<PendingQuery> = self.buckets[s].drain(..).collect();
+        self.held -= batch.len();
+        Some(batch)
+    }
+
+    fn next_flush_at(&self) -> Option<u64> {
+        self.buckets.iter().filter_map(|b| b.front()).map(|q| self.flush_deadline(q)).min()
+    }
+
+    fn len(&self) -> usize {
+        self.held
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: u64, shard: u32, arrival_us: u64, deadline_us: u64) -> PendingQuery {
+        PendingQuery { id, node: id as u32, shard, arrival_us, deadline_us }
+    }
+
+    #[test]
+    fn fifo_serves_in_arrival_order_one_at_a_time() {
+        let mut f = FifoScheduler::new();
+        for id in 0..3 {
+            f.enqueue(q(id, (id % 2) as u32, id * 10, 1_000));
+        }
+        assert_eq!(f.len(), 3);
+        for want in 0..3u64 {
+            let batch = f.pop(0, false).expect("non-empty");
+            assert_eq!(batch.len(), 1, "fifo never batches");
+            assert_eq!(batch[0].id, want);
+        }
+        assert!(f.pop(0, false).is_none());
+        assert!(f.next_flush_at().is_none());
+    }
+
+    #[test]
+    fn batcher_flushes_whole_bucket_on_k() {
+        let mut s = SloBatchScheduler::new(2, 2, 0);
+        s.enqueue(q(0, 1, 0, 1_000_000));
+        assert!(s.pop(0, false).is_none(), "below K with slack left: hold");
+        s.enqueue(q(1, 1, 5, 1_000_000));
+        let batch = s.pop(5, false).expect("bucket reached K");
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|p| p.shard == 1));
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn batcher_flushes_on_deadline_slack() {
+        let mut s = SloBatchScheduler::new(1, 100, 10);
+        s.enqueue(q(0, 0, 0, 50));
+        assert_eq!(s.next_flush_at(), Some(40), "deadline minus reserve");
+        assert!(s.pop(39, false).is_none(), "slack remains: hold for more");
+        let batch = s.pop(40, false).expect("slack exhausted");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn batcher_buckets_per_shard_and_prefers_oldest_head() {
+        let mut s = SloBatchScheduler::new(3, 2, 0);
+        s.enqueue(q(0, 2, 0, 1_000));
+        s.enqueue(q(1, 0, 1, 1_000));
+        s.enqueue(q(2, 0, 2, 1_000));
+        s.enqueue(q(3, 2, 3, 1_000));
+        // both shard 0 and shard 2 buckets are at K; shard 2's head is
+        // older so it flushes first
+        let first = s.pop(3, false).expect("two buckets ready");
+        assert!(first.iter().all(|p| p.shard == 2));
+        let second = s.pop(3, false).expect("shard 0 still ready");
+        assert!(second.iter().all(|p| p.shard == 0));
+        assert_eq!(second.iter().map(|p| p.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn drain_overrides_batching_patience() {
+        let mut s = SloBatchScheduler::new(2, 100, 0);
+        s.enqueue(q(0, 0, 0, u64::MAX));
+        assert!(s.pop(0, false).is_none(), "neither K nor deadline reached");
+        let batch = s.pop(0, true).expect("drain must flush");
+        assert_eq!(batch.len(), 1);
+        assert!(s.is_empty());
+    }
+}

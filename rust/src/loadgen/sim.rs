@@ -1,0 +1,200 @@
+//! Virtual-time open-loop event loop.
+//!
+//! One thread, one virtual clock. Arrivals from the pre-generated
+//! schedule are admitted when the clock passes their instant; the
+//! scheduler decides flushes; each flush's service time is measured
+//! **wall-clock** and folded back into the virtual clock, so while the
+//! server is "busy" serving a batch, further scheduled arrivals pile
+//! up — queue depth evolves exactly as it would against a
+//! single-threaded replica of the server under that offered rate.
+//!
+//! Deltas are **barriers**: when the schedule yields a delta, the loop
+//! stops admitting (the schedule is time-ordered, so everything behind
+//! the delta stays out), drains the scheduler, applies the delta, then
+//! resumes. This is precisely the ordering a single mutation queue
+//! would impose, and it is what makes every answer bit-identical to a
+//! sequential replay of the same schedule — the batching itself cannot
+//! change answers (per-row compute is independent; enforced by the
+//! serve tests), and the barrier pins each query to the same graph
+//! version it would see sequentially.
+
+use super::generator::{Arrival, ArrivalKind};
+use super::scheduler::{PendingQuery, Scheduler};
+use crate::serve::Server;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Event-loop knobs.
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    /// End-to-end SLO per query, in µs of virtual time.
+    pub slo_us: u64,
+    /// Keep each answer's probability vector on its outcome (the
+    /// bit-identity tests compare them; benches leave this off to
+    /// avoid the copies).
+    pub record_probs: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { slo_us: 5_000, record_probs: false }
+    }
+}
+
+/// One answered query with its queueing provenance.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    /// Schedule position of the arrival.
+    pub id: u64,
+    pub node: u32,
+    pub shard: u32,
+    pub arrival_us: u64,
+    /// When the scheduler handed the query to the server.
+    pub dispatch_us: u64,
+    /// When its flush finished (virtual clock).
+    pub complete_us: u64,
+    /// Queries sharing the flush (1 under FIFO).
+    pub batch_size: usize,
+    pub within_slo: bool,
+    pub pred: u32,
+    pub graph_version: u64,
+    /// Present when [`SimOptions::record_probs`] is set.
+    pub probs: Option<Vec<f32>>,
+}
+
+impl RequestOutcome {
+    /// Time spent waiting in the scheduler (µs).
+    pub fn queueing_us(&self) -> u64 {
+        self.dispatch_us - self.arrival_us
+    }
+
+    /// Flush execution time (µs; wall-clock folded into virtual time,
+    /// shared by the whole batch).
+    pub fn service_us(&self) -> u64 {
+        self.complete_us - self.dispatch_us
+    }
+
+    /// End-to-end latency (µs).
+    pub fn latency_us(&self) -> u64 {
+        self.complete_us - self.arrival_us
+    }
+}
+
+/// Aggregate result of one schedule replay.
+#[derive(Clone, Debug, Default)]
+pub struct SimResult {
+    /// One entry per scheduled query, sorted by schedule position.
+    pub outcomes: Vec<RequestOutcome>,
+    pub deltas_applied: usize,
+    /// Virtual clock when the last event finished (µs).
+    pub end_us: u64,
+    /// Server flushes issued (batches, not queries).
+    pub flushes: usize,
+    /// Deepest scheduler queue observed (sampled at each admission).
+    pub queue_depth_max: usize,
+    /// Mean queue depth over those samples.
+    pub queue_depth_mean: f64,
+}
+
+/// Replay `schedule` against `srv` under `sched`. See module docs for
+/// the clock and barrier semantics.
+pub fn run_open_loop(
+    srv: &mut Server,
+    schedule: &[Arrival],
+    sched: &mut dyn Scheduler,
+    opts: &SimOptions,
+) -> Result<SimResult> {
+    let mut now_us: u64 = 0;
+    let mut idx = 0usize;
+    let mut armed_delta: Option<&crate::serve::GraphDelta> = None;
+    let mut outcomes: Vec<RequestOutcome> = Vec::new();
+    let mut deltas_applied = 0usize;
+    let mut flushes = 0usize;
+    let mut depth_max = 0usize;
+    let mut depth_sum = 0u64;
+    let mut depth_samples = 0u64;
+    loop {
+        // 1. admit everything the clock has passed — but never past an
+        //    unapplied delta
+        while armed_delta.is_none() && idx < schedule.len() && schedule[idx].at_us <= now_us {
+            match &schedule[idx].kind {
+                ArrivalKind::Query { node } => {
+                    let arrival_us = schedule[idx].at_us;
+                    sched.enqueue(PendingQuery {
+                        id: idx as u64,
+                        node: *node,
+                        shard: srv.shard_of(*node),
+                        arrival_us,
+                        deadline_us: arrival_us.saturating_add(opts.slo_us),
+                    });
+                    let depth = sched.len();
+                    depth_max = depth_max.max(depth);
+                    depth_sum += depth as u64;
+                    depth_samples += 1;
+                    srv.record_queue_depth(depth);
+                }
+                ArrivalKind::Delta(d) => armed_delta = Some(d),
+            }
+            idx += 1;
+        }
+        // 2. the server is free at `now`: flush if the policy will
+        let drain = armed_delta.is_some() || idx >= schedule.len();
+        if let Some(batch) = sched.pop(now_us, drain) {
+            let shard = batch[0].shard;
+            debug_assert!(batch.iter().all(|p| p.shard == shard), "a flush is one shard's batch");
+            let nodes: Vec<u32> = batch.iter().map(|p| p.node).collect();
+            let wall = Instant::now();
+            let results = srv.flush_shard_batch(shard, &nodes)?;
+            let service_us = (wall.elapsed().as_secs_f64() * 1e6).ceil().max(1.0) as u64;
+            let complete_us = now_us + service_us;
+            for (p, r) in batch.iter().zip(results) {
+                let within = complete_us <= p.deadline_us;
+                srv.record_slo_outcome(within);
+                outcomes.push(RequestOutcome {
+                    id: p.id,
+                    node: p.node,
+                    shard,
+                    arrival_us: p.arrival_us,
+                    dispatch_us: now_us,
+                    complete_us,
+                    batch_size: batch.len(),
+                    within_slo: within,
+                    pred: r.pred,
+                    graph_version: r.graph_version,
+                    probs: if opts.record_probs { Some(r.probs.clone()) } else { None },
+                });
+            }
+            flushes += 1;
+            now_us = complete_us;
+            continue;
+        }
+        // 3. queue drained: the armed delta (if any) takes the server
+        if let Some(d) = armed_delta.take() {
+            let wall = Instant::now();
+            srv.apply_delta(d)?;
+            now_us += (wall.elapsed().as_secs_f64() * 1e6).ceil().max(1.0) as u64;
+            deltas_applied += 1;
+            continue;
+        }
+        // 4. idle: jump the clock to the next wake-up, or finish
+        let next_arrival = if idx < schedule.len() { Some(schedule[idx].at_us) } else { None };
+        match next_arrival.into_iter().chain(sched.next_flush_at()).min() {
+            Some(t) => now_us = now_us.max(t),
+            None => break, // schedule exhausted, scheduler drained
+        }
+    }
+    debug_assert!(sched.is_empty(), "drain semantics leave nothing behind");
+    outcomes.sort_by_key(|o| o.id);
+    Ok(SimResult {
+        outcomes,
+        deltas_applied,
+        end_us: now_us,
+        flushes,
+        queue_depth_max: depth_max,
+        queue_depth_mean: if depth_samples > 0 {
+            depth_sum as f64 / depth_samples as f64
+        } else {
+            0.0
+        },
+    })
+}

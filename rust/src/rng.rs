@@ -146,6 +146,51 @@ impl Rng {
     }
 }
 
+/// Zipfian sampler over ranks `0..n`: rank `k` carries probability
+/// mass proportional to `1/(k+1)^s`. `s = 0` degenerates to uniform;
+/// larger `s` concentrates the mass on the first ranks — the standard
+/// model for query-popularity skew. Setup is O(n) (one cumulative
+/// table), each draw O(log n) by binary search, and draws are fully
+/// determined by the driving [`Rng`] stream.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build the cumulative table for `n` ranks with skew `s ≥ 0`.
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n > 0, "Zipf support must be non-empty");
+        assert!(s >= 0.0 && s.is_finite(), "Zipf skew must be finite and non-negative");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        for c in &mut cdf {
+            *c /= acc;
+        }
+        Zipf { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Draw one rank in `0..len()`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.gen_f64();
+        // first rank whose cumulative mass exceeds the uniform draw
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,6 +283,38 @@ mod tests {
         d.sort_unstable();
         d.dedup();
         assert_eq!(d.len(), 10);
+    }
+
+    #[test]
+    fn zipf_prefers_low_ranks() {
+        let mut r = Rng::seed_from_u64(21);
+        let z = Zipf::new(64, 1.1);
+        assert_eq!(z.len(), 64);
+        let mut counts = [0usize; 64];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        assert!(counts[0] > counts[4] && counts[4] > counts[31], "mass must fall with rank");
+        let head: usize = counts[..8].iter().sum();
+        assert!(head * 2 > 20_000, "s=1.1 concentrates over half the mass in the head");
+        // s = 0 degenerates to uniform: the same head gets ~1/8
+        let z0 = Zipf::new(64, 0.0);
+        let mut c0 = [0usize; 64];
+        for _ in 0..20_000 {
+            c0[z0.sample(&mut r)] += 1;
+        }
+        let head0: usize = c0[..8].iter().sum();
+        assert!(head0 < 5_000, "uniform head got {head0}/20000");
+    }
+
+    #[test]
+    fn zipf_deterministic_for_stream() {
+        let z = Zipf::new(10, 0.9);
+        let mut a = Rng::seed_from_u64(9);
+        let mut b = Rng::seed_from_u64(9);
+        for _ in 0..200 {
+            assert_eq!(z.sample(&mut a), z.sample(&mut b));
+        }
     }
 
     #[test]

@@ -242,8 +242,8 @@ pub struct ChurnBenchConfig {
     pub queries_per_round: usize,
     /// Micro-batch size for the query blocks.
     pub batch: usize,
-    /// Tune the overlay compaction threshold from observed
-    /// splice-vs-flat read latency (incremental mode).
+    /// Tune the overlay compaction threshold from the modelled
+    /// splice-vs-flat read cost (incremental mode).
     pub adaptive_compaction: bool,
     pub seed: u64,
 }

@@ -33,11 +33,15 @@
 //! Cache entries model per-consumer retained copies: admission and
 //! eviction order is the same Monte-Carlo importance `I(v)` the
 //! embedding cache uses (the consumer shard's candidate score for the
-//! row's node), budget enforced once per request. Any applied
-//! [`GraphDelta`](super::GraphDelta) clears the cache wholesale —
-//! matching the budgeted shards' own restart-cold conservatism — while
-//! a rebalance migration (membership-only, values unchanged) leaves it
-//! intact. All billed bytes land in the
+//! row's node), budget enforced once per request. An applied
+//! [`GraphDelta`](super::GraphDelta) invalidates **surgically**: since
+//! gathered values are computed over the *global* graph, the same
+//! L-hop cone rule the embedding caches use applies — a level-`r` row
+//! of node `g` is stale iff the delta's influence cone reaches within
+//! `r` hops of `g` ([`GatherRowCache::invalidate_cone`]); everything
+//! outside the cone survives the delta. A rebalance migration
+//! (membership-only, values unchanged) leaves the cache intact. All
+//! billed bytes land in the
 //! [`CommLedger`](crate::comm::CommLedger) serving class. The shards'
 //! embedding caches are still bypassed on this path — mixing exact
 //! gathered rows into their (approximate) local caches would poison
@@ -67,6 +71,8 @@ pub(crate) struct GatherRowCache {
     pub fetches_avoided: u64,
     /// Entries dropped by the byte budget.
     pub rows_evicted: u64,
+    /// Entries dropped by surgical delta-cone invalidation.
+    pub rows_invalidated: u64,
 }
 
 impl GatherRowCache {
@@ -79,6 +85,7 @@ impl GatherRowCache {
             rows_reused: 0,
             fetches_avoided: 0,
             rows_evicted: 0,
+            rows_invalidated: 0,
         }
     }
 
@@ -87,12 +94,45 @@ impl GatherRowCache {
         self.bytes
     }
 
-    /// Drop every entry (counters survive). The server calls this on
-    /// every applied graph delta.
+    /// Drop every entry (counters survive). Kept as the wholesale
+    /// baseline the surgical invalidation is tested against; the
+    /// delta path itself uses [`invalidate_cone`](Self::invalidate_cone).
+    #[cfg(test)]
     pub fn clear(&mut self) {
         self.entries.clear();
         self.values.clear();
         self.bytes = 0;
+    }
+
+    /// Surgical delta invalidation: drop exactly the rows the delta's
+    /// influence cone reaches. `dist` is the sparse
+    /// min-over-old-and-new-graph hop map the server already computes
+    /// per delta, bounded at the layer count (a node absent from the
+    /// map is farther than L hops from every seed). A level-`r` row of
+    /// node `g` is stale iff `dist(g) <= r`: `H_r` depends on `g`'s
+    /// r-hop neighbourhood, and a level-0 feature copy changes only
+    /// when `g` itself is a seed (feature rewrite or retirement; edge
+    /// churn at distance 0 invalidates it too, conservatively).
+    /// Entries and values follow the same rule, so no value can
+    /// outlive its consumers or vice versa. Correctness does not
+    /// depend on any shard's halo membership — gathered values are
+    /// global-graph quantities — which is why this survives the shard
+    /// rebuilds a delta may trigger.
+    pub fn invalidate_cone(&mut self, dist: &HashMap<u32, u32>) {
+        let mut freed = 0u64;
+        let mut dropped = 0u64;
+        self.entries.retain(|&(level, node, _), &mut (bytes, _)| {
+            let stale = dist.get(&node).map(|&d| d as usize <= level).unwrap_or(false);
+            if stale {
+                freed += bytes;
+                dropped += 1;
+            }
+            !stale
+        });
+        self.bytes -= freed;
+        self.rows_invalidated += dropped;
+        self.values
+            .retain(|&(level, node), _| dist.get(&node).map(|&d| d as usize > level).unwrap_or(true));
     }
 
     /// Does `consumer` hold a copy of `(level, node)`?
@@ -371,6 +411,34 @@ mod tests {
         c.clear();
         assert!(!c.holds(1, 7, 0));
         assert_eq!(c.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn cone_invalidation_is_surgical() {
+        let mut c = GatherRowCache::new(0); // unbounded
+        c.admit(0, 5, 0, 8, 0.5, None); // feature copy of node 5
+        c.admit(1, 5, 0, 16, 0.5, Some(&[1.0; 4]));
+        c.admit(2, 5, 0, 16, 0.5, Some(&[2.0; 4]));
+        c.admit(1, 9, 1, 16, 0.9, Some(&[3.0; 4]));
+        let mut dist = HashMap::new();
+        dist.insert(5u32, 1u32); // node 5 is one hop from the epicentre
+        c.invalidate_cone(&dist);
+        // level 0 survives (a feature row only changes at distance 0);
+        // levels >= 1 are inside the cone and go, values with them
+        assert!(c.holds(0, 5, 0));
+        assert!(!c.holds(1, 5, 0) && !c.holds(2, 5, 0));
+        assert!(c.value(1, 5).is_none() && c.value(2, 5).is_none());
+        // node 9 is outside the cone entirely: untouched
+        assert!(c.holds(1, 9, 1) && c.value(1, 9).is_some());
+        assert_eq!(c.rows_invalidated, 2);
+        assert_eq!(c.resident_bytes(), 8 + 16);
+        // distance 0 (a seed) takes every level including features
+        let mut seed = HashMap::new();
+        seed.insert(5u32, 0u32);
+        c.invalidate_cone(&seed);
+        assert!(!c.holds(0, 5, 0));
+        assert_eq!(c.rows_invalidated, 3);
+        assert_eq!(c.resident_bytes(), 16);
     }
 
     #[test]

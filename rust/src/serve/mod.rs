@@ -126,9 +126,9 @@ pub struct ServeConfig {
     pub gather_cache_budget_bytes: u64,
     /// Delta application strategy (see [`DeltaMode`]).
     pub delta_mode: DeltaMode,
-    /// Tune the overlay-CSR compaction threshold from observed
-    /// splice-vs-flat read latency instead of the static
-    /// quarter-of-base-arcs default
+    /// Tune the overlay-CSR compaction threshold from the modelled
+    /// splice-vs-flat read cost (deterministic arc-visit probe) instead
+    /// of the static quarter-of-base-arcs default
     /// (see [`DeltaCsr::enable_adaptive_compaction`]).
     ///
     /// [`DeltaCsr::enable_adaptive_compaction`]: crate::graph::DeltaCsr::enable_adaptive_compaction

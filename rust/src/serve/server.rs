@@ -55,6 +55,20 @@ pub struct ServeStats {
     pub gather_rows_reused: u64,
     /// Gathered-row cache: cross-shard fetches skipped cross-request.
     pub gather_fetches_avoided: u64,
+    /// Gathered-row cache: rows dropped by surgical delta-cone
+    /// invalidation (rows outside the cone survive the delta).
+    pub gather_rows_invalidated: u64,
+    /// Open-loop load harness: answers that met their SLO deadline —
+    /// the goodput numerator. Both SLO counters stay 0 outside
+    /// [`loadgen`](crate::loadgen) runs.
+    pub slo_answers: u64,
+    /// Open-loop load harness: answers that completed past deadline.
+    pub late_answers: u64,
+    /// Deepest scheduler queue the load harness observed (sampled at
+    /// each admission).
+    pub queue_depth_max: u64,
+    /// Mean sampled scheduler queue depth.
+    pub queue_depth_mean: f64,
     pub deltas_applied: u64,
     /// Nodes inserted online over the deployment's lifetime.
     pub nodes_added: u64,
@@ -140,6 +154,11 @@ pub struct Server {
     shard_rebuilds: u64,
     pub(crate) rebalances: u64,
     pub(crate) nodes_migrated: u64,
+    slo_answers: u64,
+    late_answers: u64,
+    queue_depth_max: u64,
+    queue_depth_sum: u64,
+    queue_depth_samples: u64,
 }
 
 impl Server {
@@ -209,6 +228,11 @@ impl Server {
             shard_rebuilds: 0,
             rebalances: 0,
             nodes_migrated: 0,
+            slo_answers: 0,
+            late_answers: 0,
+            queue_depth_max: 0,
+            queue_depth_sum: 0,
+            queue_depth_samples: 0,
         })
     }
 
@@ -316,6 +340,50 @@ impl Server {
         }
         self.queries += nodes.len() as u64;
         Ok(results.into_iter().map(|r| r.expect("every query answered")).collect())
+    }
+
+    /// Serve one micro-batch the caller has already grouped by home
+    /// shard — the open-loop scheduler's flush path
+    /// ([`loadgen`](crate::loadgen)). Every node must be live and
+    /// homed on `shard`; the batch then maps onto exactly one
+    /// per-shard micro-batch group inside
+    /// [`query_batch`](Self::query_batch), so answers are bit-identical
+    /// to routing the same nodes there directly (no duplicated
+    /// compute path to drift).
+    pub fn flush_shard_batch(&mut self, shard: u32, nodes: &[u32]) -> Result<Vec<QueryResult>> {
+        if (shard as usize) >= self.shards.len() {
+            return Err(anyhow!("flush targets unknown shard {shard}"));
+        }
+        for &v in nodes {
+            if !self.is_alive(v) {
+                return Err(anyhow!("flush node {v} is out of range or removed"));
+            }
+            if self.assignment[v as usize] != shard {
+                return Err(anyhow!(
+                    "flush node {v} is homed on shard {}, not {shard}",
+                    self.assignment[v as usize]
+                ));
+            }
+        }
+        self.query_batch(nodes)
+    }
+
+    /// Open-loop harness hook: record one scheduler queue-depth sample
+    /// (max/mean land in [`ServeStats`]).
+    pub fn record_queue_depth(&mut self, depth: usize) {
+        self.queue_depth_max = self.queue_depth_max.max(depth as u64);
+        self.queue_depth_sum += depth as u64;
+        self.queue_depth_samples += 1;
+    }
+
+    /// Open-loop harness hook: record whether an answer met its SLO
+    /// deadline (goodput accounting in [`ServeStats`]).
+    pub fn record_slo_outcome(&mut self, within_slo: bool) {
+        if within_slo {
+            self.slo_answers += 1;
+        } else {
+            self.late_answers += 1;
+        }
     }
 
     /// Home for an online-inserted node: the part owning the plurality
@@ -444,11 +512,6 @@ impl Server {
         }
         churn.finish();
         self.graph.bump_version();
-        if let Some(c) = &mut self.gather_cache {
-            // structural/feature change: gathered rows restart cold,
-            // matching the budgeted shards' own conservatism
-            c.clear();
-        }
         let compactions_before = self.graph.compactions();
         match self.cfg.delta_mode {
             DeltaMode::Rebuild => self.graph.compact(),
@@ -477,6 +540,15 @@ impl Server {
         let mut dist = bounded_bfs_distances_sparse(&self.graph, &seeds_all, layers);
         for (g, d) in dist_old {
             dist.entry(g).and_modify(|cur| *cur = (*cur).min(d)).or_insert(d);
+        }
+        // gathered rows are computed over the *global* graph (that is
+        // what makes gather mode exact), so the same L-hop cone rule
+        // the embedding caches use applies verbatim: drop exactly the
+        // rows the delta's influence cone reaches, keep the rest.
+        // Shard/halo re-sampling below cannot stale them — validity
+        // never depended on any shard's membership
+        if let Some(c) = &mut self.gather_cache {
+            c.invalidate_cone(&dist);
         }
         // membership probes are per affected node (binary search), so
         // touched-shard detection costs O(|cone| · k · log), not O(V)
@@ -655,6 +727,19 @@ impl Server {
                 .as_ref()
                 .map(|c| c.fetches_avoided)
                 .unwrap_or(0),
+            gather_rows_invalidated: self
+                .gather_cache
+                .as_ref()
+                .map(|c| c.rows_invalidated)
+                .unwrap_or(0),
+            slo_answers: self.slo_answers,
+            late_answers: self.late_answers,
+            queue_depth_max: self.queue_depth_max,
+            queue_depth_mean: if self.queue_depth_samples > 0 {
+                self.queue_depth_sum as f64 / self.queue_depth_samples as f64
+            } else {
+                0.0
+            },
             deltas_applied: self.deltas_applied,
             nodes_added: self.nodes_added,
             nodes_removed: self.nodes_removed,
@@ -817,6 +902,60 @@ mod tests {
         let r = srv.query(0).unwrap();
         assert_eq!(r.graph_version, 1);
         assert!(!r.cache_hit, "the re-sampled shard must answer fresh");
+    }
+
+    #[test]
+    fn surgical_gather_invalidation_matches_wholesale_clear_bitwise() {
+        // the surgical cone (invalidate_cone) vs the old wholesale
+        // clear: answers after a delta must be bit-identical, while
+        // the surgical cache demonstrably retains rows the cone missed
+        let (ds, params) = fixture();
+        let cfg = ServeConfig {
+            halo: HaloPolicy::Budgeted { alpha: 0.02 },
+            gather_missing: true,
+            gather_cache_budget_bytes: 64 << 20,
+            ..Default::default()
+        };
+        let mut surgical = Server::for_dataset(&ds, params.clone(), cfg.clone()).unwrap();
+        let mut wholesale = Server::for_dataset(&ds, params, cfg).unwrap();
+        let all: Vec<u32> = (0..ds.num_nodes() as u32).collect();
+        surgical.query_batch(&all).unwrap();
+        wholesale.query_batch(&all).unwrap();
+        let delta = GraphDelta {
+            added_edges: vec![(0, (ds.num_nodes() - 1) as u32)],
+            updated_features: vec![(1, vec![0.25; ds.feature_dim()])],
+            ..Default::default()
+        };
+        surgical.apply_delta(&delta).unwrap();
+        wholesale.apply_delta(&delta).unwrap();
+        // emulate the old behaviour on the baseline (the delta path no
+        // longer reads the cache after invalidation, so clearing here
+        // is exactly the wholesale-on-delta semantics)
+        wholesale.gather_cache.as_mut().unwrap().clear();
+        let st = surgical.stats();
+        assert!(st.gather_rows_invalidated > 0, "the cone must drop stale rows");
+        assert!(
+            surgical.gather_cache.as_ref().unwrap().resident_bytes() > 0,
+            "rows outside the cone must survive the delta"
+        );
+        let avoided_before = st.gather_fetches_avoided;
+        let a = surgical.query_batch(&all).unwrap();
+        let b = wholesale.query_batch(&all).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.pred, y.pred);
+            assert_eq!(x.probs.len(), y.probs.len());
+            for (p, q) in x.probs.iter().zip(&y.probs) {
+                assert_eq!(
+                    p.to_bits(),
+                    q.to_bits(),
+                    "surgical invalidation must not change any answer"
+                );
+            }
+        }
+        assert!(
+            surgical.stats().gather_fetches_avoided > avoided_before,
+            "surviving rows must actually be reused"
+        );
     }
 
     #[test]

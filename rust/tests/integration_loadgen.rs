@@ -1,0 +1,171 @@
+//! Load-generator correctness: schedules must be deterministic per
+//! seed, and answers delivered under open-loop load — queueing,
+//! micro-batched flushes, delta barriers and all — must be
+//! bit-identical to a sequential replay of the same schedule against a
+//! fresh server. The scheduler comparison at the end is the fig14
+//! headline in miniature: past the knee the SLO batcher amortises the
+//! backlog while FIFO drowns in it.
+
+use gad::datasets::{Dataset, SyntheticSpec};
+use gad::loadgen::{
+    generate_schedule, run_open_loop, Arrival, ArrivalKind, FifoScheduler, Scheduler,
+    SimOptions, SloBatchScheduler, WorkloadConfig,
+};
+use gad::model::GcnParams;
+use gad::rng::Rng;
+use gad::serve::{ServeConfig, Server};
+
+fn fixture(seed: u64) -> (Dataset, GcnParams) {
+    let ds = SyntheticSpec::tiny().generate(seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0xBEEF);
+    let params = GcnParams::init(ds.feature_dim(), 8, ds.num_classes, 2, &mut rng);
+    (ds, params)
+}
+
+fn server(ds: &Dataset, params: &GcnParams) -> Server {
+    let cfg = ServeConfig { shards: 4, seed: 7, ..Default::default() };
+    Server::for_dataset(ds, params.clone(), cfg).expect("server")
+}
+
+#[test]
+fn same_seed_byte_identical_schedule() {
+    let (ds, _) = fixture(7);
+    let cfg = WorkloadConfig {
+        rate_qps: 5_000.0,
+        events: 400,
+        churn_frac: 0.05,
+        seed: 11,
+        ..Default::default()
+    };
+    let a = generate_schedule(&ds.graph, ds.feature_dim(), &cfg);
+    let b = generate_schedule(&ds.graph, ds.feature_dim(), &cfg);
+    // GraphDelta carries f32 features; Debug is total over every field,
+    // so equal renderings mean equal schedules
+    assert_eq!(format!("{a:?}"), format!("{b:?}"), "same seed must replay identically");
+
+    let c = generate_schedule(
+        &ds.graph,
+        ds.feature_dim(),
+        &WorkloadConfig { seed: 12, ..cfg.clone() },
+    );
+    assert_ne!(format!("{a:?}"), format!("{c:?}"), "a different seed must differ");
+
+    assert!(a.windows(2).all(|w| w[0].at_us <= w[1].at_us), "arrivals are time-ordered");
+    let queries = a.iter().filter(|x| matches!(x.kind, ArrivalKind::Query { .. })).count();
+    let deltas = a.len() - queries;
+    assert!(queries > 0 && deltas > 0, "mixed traffic: {queries} queries, {deltas} deltas");
+}
+
+/// Sequential oracle: the same arrivals, one at a time, no queue.
+fn replay_sequentially(
+    srv: &mut Server,
+    schedule: &[Arrival],
+) -> (Vec<(u64, u32, u64, Vec<u32>)>, usize) {
+    let mut answers = Vec::new();
+    let mut deltas = 0usize;
+    for (id, arrival) in schedule.iter().enumerate() {
+        match &arrival.kind {
+            ArrivalKind::Query { node } => {
+                let r = srv.query(*node).expect("oracle query");
+                let bits: Vec<u32> = r.probs.iter().map(|p| p.to_bits()).collect();
+                answers.push((id as u64, r.pred, r.graph_version, bits));
+            }
+            ArrivalKind::Delta(d) => {
+                srv.apply_delta(d).expect("oracle delta");
+                deltas += 1;
+            }
+        }
+    }
+    (answers, deltas)
+}
+
+#[test]
+fn answers_under_load_bit_identical_to_direct_queries() {
+    let (ds, params) = fixture(7);
+    let wcfg = WorkloadConfig {
+        rate_qps: 20_000.0,
+        events: 250,
+        zipf_s: 1.1,
+        churn_frac: 0.08,
+        seed: 5,
+        ..Default::default()
+    };
+    let schedule = generate_schedule(&ds.graph, ds.feature_dim(), &wcfg);
+    let (oracle, oracle_deltas) = replay_sequentially(&mut server(&ds, &params), &schedule);
+
+    let opts = SimOptions { slo_us: 2_000, record_probs: true };
+    for mode in ["fifo", "slo-batch"] {
+        let mut srv = server(&ds, &params);
+        let mut fifo = FifoScheduler::new();
+        let mut batch = SloBatchScheduler::new(srv.num_shards(), 8, opts.slo_us / 4);
+        let sched: &mut dyn Scheduler = if mode == "fifo" { &mut fifo } else { &mut batch };
+        let sim = run_open_loop(&mut srv, &schedule, sched, &opts).expect("open loop");
+
+        assert_eq!(sim.deltas_applied, oracle_deltas, "[{mode}] every delta applied");
+        assert_eq!(sim.outcomes.len(), oracle.len(), "[{mode}] every query answered");
+        for (o, (id, pred, version, bits)) in sim.outcomes.iter().zip(&oracle) {
+            assert_eq!(o.id, *id, "[{mode}] outcomes align with the schedule");
+            assert_eq!(o.pred, *pred, "[{mode}] query {id}: class flipped under load");
+            assert_eq!(
+                o.graph_version, *version,
+                "[{mode}] query {id}: saw a different graph version than sequential replay"
+            );
+            let got: Vec<u32> =
+                o.probs.as_ref().expect("record_probs").iter().map(|p| p.to_bits()).collect();
+            assert_eq!(&got, bits, "[{mode}] query {id}: probabilities not bit-identical");
+        }
+    }
+}
+
+#[test]
+fn slo_batcher_outperforms_fifo_past_the_knee() {
+    let (ds, params) = fixture(7);
+    // far past any knee: arrivals land ~every 0.02 virtual µs while a
+    // flush costs at least 1, so the backlog is structural
+    let wcfg = WorkloadConfig {
+        rate_qps: 50_000_000.0,
+        events: 320,
+        churn_frac: 0.0,
+        seed: 9,
+        ..Default::default()
+    };
+    let schedule = generate_schedule(&ds.graph, ds.feature_dim(), &wcfg);
+    // a deadline no run can miss: queueing comparisons stay post-hoc
+    let opts = SimOptions { slo_us: u64::MAX / 2, record_probs: false };
+
+    let mut fifo_srv = server(&ds, &params);
+    let mut fifo = FifoScheduler::new();
+    let fifo_sim = run_open_loop(&mut fifo_srv, &schedule, &mut fifo, &opts).expect("fifo");
+
+    let mut batch_srv = server(&ds, &params);
+    let mut batch = SloBatchScheduler::new(batch_srv.num_shards(), 32, 0);
+    let batch_sim = run_open_loop(&mut batch_srv, &schedule, &mut batch, &opts).expect("batch");
+
+    assert!(
+        batch_sim.flushes < fifo_sim.flushes,
+        "batcher must amortise: {} flushes vs fifo's {}",
+        batch_sim.flushes,
+        fifo_sim.flushes
+    );
+    let mean = |sim: &gad::loadgen::SimResult| {
+        sim.outcomes.iter().map(|o| o.latency_us() as f64).sum::<f64>()
+            / sim.outcomes.len().max(1) as f64
+    };
+    let (fifo_mean, batch_mean) = (mean(&fifo_sim), mean(&batch_sim));
+    assert!(
+        batch_mean < fifo_mean,
+        "batched mean latency {batch_mean:.0}µs must beat fifo's {fifo_mean:.0}µs under overload"
+    );
+    // goodput at an SLO set to fifo's own mean: the batcher answers
+    // strictly more within it on the identical schedule
+    let slo = fifo_mean as u64;
+    let good = |sim: &gad::loadgen::SimResult| {
+        sim.outcomes.iter().filter(|o| o.latency_us() <= slo).count()
+    };
+    assert!(
+        good(&batch_sim) > good(&fifo_sim),
+        "past the knee the batcher must deliver more answers within {slo}µs ({} vs {})",
+        good(&batch_sim),
+        good(&fifo_sim)
+    );
+}

@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Small-N smoke of the serving figure family (fig11–14): build the CLI,
+# run serve-bench + load-bench in --fast mode into out/, and assert the
+# artifacts landed non-empty. This is the "does the whole pipeline
+# still produce numbers" check — correctness lives in `cargo test`.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+OUT="${1:-out}"
+
+echo "== kick-tires: building release CLI =="
+cargo build --release --manifest-path rust/Cargo.toml
+
+GAD=rust/target/release/gad
+if [[ ! -x "$GAD" ]]; then
+    echo "error: $GAD not built" >&2
+    exit 1
+fi
+
+echo "== kick-tires: fig11-13 (serve-bench, fast, tiny) =="
+"$GAD" serve-bench --dataset tiny --fast --out-dir "$OUT"
+
+echo "== kick-tires: fig14 (load-bench, fast, tiny) =="
+"$GAD" load-bench --dataset tiny --fast --load-events 200 --rate-steps 3 --out-dir "$OUT"
+
+echo "== kick-tires: checking artifacts =="
+status=0
+for f in \
+    fig11_serving_latency.md fig11_serving_latency.csv \
+    fig12_churn.md fig12_churn.csv \
+    fig13_rebalance.md fig13_rebalance.csv \
+    fig14_load_knee.md fig14_load_knee.csv; do
+    if [[ ! -s "$OUT/$f" ]]; then
+        echo "MISSING or empty: $OUT/$f" >&2
+        status=1
+    else
+        echo "ok: $OUT/$f ($(wc -l < "$OUT/$f") lines)"
+    fi
+done
+
+if [[ $status -ne 0 ]]; then
+    echo "kick-tires FAILED" >&2
+    exit $status
+fi
+echo "kick-tires passed: fig11-14 artifacts present in $OUT/"
