@@ -59,6 +59,21 @@ fn main() {
         aggregate_gradients(&grads, &[1.0, 2.0, 3.0, 4.0])
     });
 
+    println!("\n== serve query_batch (4 shards, cache off, 64-node mixed batch) ==");
+    {
+        use gad::serve::{ServeConfig, Server};
+        // cache off so every flush recomputes — the parallel pool has
+        // real per-shard work to overlap, not cache lookups
+        let scfg = ServeConfig { shards: 4, cache: false, seed: 42, ..Default::default() };
+        let batch_nodes: Vec<u32> =
+            (0..64u32).map(|i| (i * 37) % ds.graph.num_nodes() as u32).collect();
+        let mut seq = Server::for_dataset(&ds, params.clone(), scfg.clone()).unwrap();
+        b.bench("query_batch serve_threads=1", || seq.query_batch(&batch_nodes).unwrap());
+        let par_cfg = ServeConfig { serve_threads: 4, ..scfg };
+        let mut par = Server::for_dataset(&ds, params.clone(), par_cfg).unwrap();
+        b.bench("query_batch serve_threads=4", || par.query_batch(&batch_nodes).unwrap());
+    }
+
     println!("\n== train_step (one augmented cora subgraph) ==");
     let mut native = NativeBackend::new();
     b.bench("native train_step", || native.train_step(&batch, &params).unwrap());

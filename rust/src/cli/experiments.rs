@@ -576,6 +576,7 @@ pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
         cache_budget_bytes: (args.get_f64("cache-budget-mb", 0.0)? * 1e6) as u64,
         gather_missing: args.has("gather"),
         gather_cache_budget_bytes: (args.get_f64("gather-cache-mb", 0.0)? * 1e6) as u64,
+        serve_threads: args.get_usize("serve-threads", 1)?,
         seed: opts.seed,
     };
     let rep = run_serving_bench(&ds, &params, &bcfg)?;
@@ -589,6 +590,7 @@ pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
     println!("{md}");
     write_result_file(&format!("{}/fig11_serving_latency.md", opts.out_dir), &md)?;
     write_result_file(&format!("{}/fig11_serving_latency.csv", opts.out_dir), &rep.to_csv())?;
+    write_result_file(&format!("{}/fig11_serving_latency.json", opts.out_dir), &rep.to_json())?;
 
     // 4. churn benchmark: deltas/sec and query p99 as the graph mutates
     //    under load, incremental overlay splicing vs per-delta rebuild
@@ -671,6 +673,7 @@ pub fn load_bench(args: &Args, opts: &RunOpts) -> Result<()> {
             .get_usize("load-events", if opts.fast { 400 } else { 2000 })?,
         rate_start_qps: args.get_f64("rate-qps", 0.0)?,
         rate_steps: args.get_usize("rate-steps", if opts.fast { 4 } else { 6 })?,
+        serve_threads: args.get_usize("serve-threads", 1)?,
         seed: opts.seed,
         ..Default::default()
     };
@@ -685,6 +688,7 @@ pub fn load_bench(args: &Args, opts: &RunOpts) -> Result<()> {
     println!("{md}");
     write_result_file(&format!("{}/fig14_load_knee.md", opts.out_dir), &md)?;
     write_result_file(&format!("{}/fig14_load_knee.csv", opts.out_dir), &rep.to_csv())?;
+    write_result_file(&format!("{}/fig14_load_knee.json", opts.out_dir), &rep.to_json())?;
     Ok(())
 }
 

@@ -213,6 +213,10 @@ serve-bench flags
   --rebalance-rounds N   Fig 13 skewed-insert rounds (default 8; 4 fast)
   --rebalance-inserts N  Fig 13 inserts per round (default 24; 12 fast)
   --rebalance-ratio F    Fig 13 max/min part-size trigger (default 1.5)
+  --serve-threads N  serve-pool width: shard batches flush on N scoped
+                 threads; adds a parallel-sharded row to Fig 11.
+                 1 = sequential, 0 = auto (budget-capped); answers are
+                 bit-identical at every width (default 1)
 
 load-bench flags
   --shards N     serving shards (default 4)
@@ -226,6 +230,9 @@ load-bench flags
   --rate-qps F   first offered rate of the sweep; 0 = auto-calibrate
                  to 1/4 of the closed-loop capacity (default 0)
   --rate-steps N doublings to sweep (default 6; 4 with --fast)
+  --serve-threads N  serve-pool width for the headline rows; > 1 also
+                 replays every step at width 1 for the wall-clock
+                 speedup column. 1 = sequential, 0 = auto (default 1)
 ";
 
 #[cfg(test)]

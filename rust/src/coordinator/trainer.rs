@@ -271,13 +271,19 @@ pub fn train_with_plans(
     assert!(workers > 0, "need at least one worker");
     let started = Instant::now();
 
-    // one "device" per worker: divide the cores so wall-clock scaling
-    // with worker count reflects a multi-device deployment rather than
-    // intra-op threading saturating the whole machine. The budget is
-    // thread-local to each worker (set inside `worker_main`), so
-    // concurrent runs in one process don't race on it.
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let intra_threads = (cores / workers).max(1);
+    // one "device" per worker: divide the process thread budget so
+    // wall-clock scaling with worker count reflects a multi-device
+    // deployment rather than intra-op threading saturating the whole
+    // machine. Sizing from `threads::available()` (not raw core count)
+    // and holding a lease for the run keeps co-resident pools honest:
+    // a serve pool built while training sees only the leftover budget,
+    // and vice versa. The per-worker figure is thread-local to each
+    // worker (set inside `worker_main`), so concurrent runs in one
+    // process don't race on it. Thread counts are wall-clock only —
+    // results are bit-identical at any budget (see `crate::threads`).
+    let budget = crate::threads::available();
+    let intra_threads = (budget / workers).max(1);
+    let _compute_lease = crate::threads::reserve(workers * intra_threads);
 
     let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x6AD);
     let params0 = GcnParams::init(dataset.feature_dim(), cfg.hidden, dataset.num_classes, cfg.layers, &mut rng);

@@ -71,6 +71,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;
+pub mod threads;
 pub mod variance;
 
 /// Convenience re-exports for examples and downstream users.

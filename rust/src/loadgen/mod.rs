@@ -21,18 +21,24 @@
 //!   batch size `K` or the oldest request's deadline slack runs out,
 //!   then flush the bucket through the server's micro-batched
 //!   recompute path).
-//! * [`sim`] — a virtual-time event loop on one thread: arrivals
-//!   enqueue at their scheduled virtual instant, the scheduler decides
-//!   flushes, and each flush's **wall-clock** service time is folded
-//!   back into the virtual clock, so queue depth evolves exactly as it
-//!   would against a single-threaded replica of the server. Deltas act
-//!   as barriers (drain, apply, resume), which keeps every answer
-//!   bit-identical to a sequential replay of the same schedule.
+//! * [`sim`] — a virtual-time event loop with up to
+//!   [`Server::serve_parallelism`](crate::serve::Server::serve_parallelism)
+//!   concurrent in-flight flushes: arrivals enqueue at their scheduled
+//!   virtual instant, the scheduler fills every free slot with a batch
+//!   for a distinct free shard, the wave executes physically in
+//!   parallel on the server's scoped-thread pool, and each flush's
+//!   **own wall-clock span** is folded back into the virtual clock —
+//!   queue depth evolves exactly as it would against an N-way replica
+//!   group. Deltas act as barriers (drain scheduler *and* in-flight
+//!   work, apply, resume), which keeps every answer bit-identical to a
+//!   sequential replay of the same schedule at any slot count.
 //! * [`report`] — the fig14 sweep: offered rate doubles per step until
 //!   both schedulers are past the knee, each step running FIFO and the
-//!   SLO batcher on the identical seeded schedule, reporting goodput
-//!   (answers within SLO), p50/p99/p999 latency, queueing-vs-service
-//!   split, and queue depth — md + csv like the fig11–13 family.
+//!   SLO batcher on the identical seeded schedule (at serve-pool width
+//!   1 and N when configured, for the wall-clock comparison),
+//!   reporting goodput (answers within SLO), p50/p99/p999 latency,
+//!   queueing-vs-service split, queue depth, and physical replay
+//!   wall-clock — md + csv + json like the fig11–13 family.
 
 pub mod generator;
 pub mod report;

@@ -10,6 +10,12 @@
 //! the backlog into ever-larger per-shard flushes and keeps a strictly
 //! higher goodput. The sweep stops early once both modes are past the
 //! knee — the collapse only deepens from there.
+//!
+//! With [`LoadBenchConfig::serve_threads`] > 1 every `(rate, mode)`
+//! step additionally replays at serve-pool width 1, so each report
+//! carries its own sequential-vs-parallel wall-clock comparison
+//! (`wall_ms` column + headline speedup) on bit-identical answers —
+//! the physical-overlap evidence the virtual clock alone can't give.
 
 use super::generator::{generate_schedule, WorkloadConfig};
 use super::scheduler::{FifoScheduler, Scheduler, SloBatchScheduler};
@@ -47,6 +53,11 @@ pub struct LoadBenchConfig {
     /// Offered-rate steps (early-stopped once both schedulers
     /// collapse).
     pub rate_steps: usize,
+    /// Serve-pool width for the headline rows
+    /// ([`ServeConfig::serve_threads`]; 0 = auto). When the resolved
+    /// width exceeds 1, each step also replays at width 1 for the
+    /// wall-clock comparison columns.
+    pub serve_threads: usize,
     pub seed: u64,
 }
 
@@ -63,6 +74,7 @@ impl Default for LoadBenchConfig {
             rate_start_qps: 0.0,
             rate_mult: 2.0,
             rate_steps: 6,
+            serve_threads: 1,
             seed: 0,
         }
     }
@@ -90,6 +102,13 @@ pub struct RateRow {
     pub queue_depth_max: usize,
     pub answered: usize,
     pub deltas: usize,
+    /// Serve-pool width this row ran at (1 = sequential replay).
+    pub serve_threads: usize,
+    /// Most flushes simultaneously in flight during the replay.
+    pub peak_inflight: usize,
+    /// Physical wall-clock of the whole replay, in ms — the
+    /// before/after axis for the parallel serve path.
+    pub wall_ms: f64,
 }
 
 /// Full sweep result; renders the fig14 md + csv.
@@ -99,17 +118,47 @@ pub struct LoadBenchReport {
     pub slo_us: u64,
     /// Closed-loop single-query capacity the sweep anchored on (qps).
     pub calibrated_qps: f64,
+    /// Resolved headline serve-pool width; knee/goodput headlines read
+    /// only rows at this width (the width-1 rows exist for the
+    /// wall-clock comparison).
+    pub serve_threads: usize,
 }
 
 impl LoadBenchReport {
     /// Highest offered rate at which `mode` still met ≥ 95% of
     /// deadlines — the operational definition of "before the knee".
+    /// Reads the headline-width rows only.
     pub fn knee_qps(&self, mode: &str) -> Option<f64> {
         self.rows
             .iter()
-            .filter(|r| r.mode == mode && r.goodput_ratio >= 0.95)
+            .filter(|r| {
+                r.mode == mode
+                    && r.serve_threads == self.serve_threads
+                    && r.goodput_ratio >= 0.95
+            })
             .map(|r| r.offered_qps)
             .fold(None, |acc: Option<f64>, q| Some(acc.map_or(q, |a| a.max(q))))
+    }
+
+    /// Total physical replay wall-clock at width 1 over width N across
+    /// matched `(mode, rate)` rows — the parallel serve path's
+    /// before/after headline. `None` when the sweep ran at width 1
+    /// only (nothing to compare).
+    pub fn wall_clock_speedup(&self) -> Option<f64> {
+        if self.serve_threads <= 1 {
+            return None;
+        }
+        let (mut seq_ms, mut par_ms, mut matched) = (0.0f64, 0.0f64, 0usize);
+        for r in self.rows.iter().filter(|r| r.serve_threads == self.serve_threads) {
+            if let Some(s) = self.rows.iter().find(|s| {
+                s.serve_threads == 1 && s.mode == r.mode && s.offered_qps == r.offered_qps
+            }) {
+                seq_ms += s.wall_ms;
+                par_ms += r.wall_ms;
+                matched += 1;
+            }
+        }
+        (matched > 0 && par_ms > 0.0).then(|| seq_ms / par_ms)
     }
 
     /// Goodput comparison at the highest swept rate past FIFO's knee:
@@ -118,11 +167,16 @@ impl LoadBenchReport {
     /// strictly higher.
     pub fn past_knee_goodput(&self) -> Option<(f64, f64, f64)> {
         let knee = self.knee_qps("fifo").unwrap_or(0.0);
+        let head = self.serve_threads;
         let mut best: Option<(f64, f64, f64)> = None;
-        for r in self.rows.iter().filter(|r| r.mode == "fifo" && r.offered_qps > knee) {
-            if let Some(b) =
-                self.rows.iter().find(|b| b.mode == "slo-batch" && b.offered_qps == r.offered_qps)
-            {
+        for r in self
+            .rows
+            .iter()
+            .filter(|r| r.mode == "fifo" && r.serve_threads == head && r.offered_qps > knee)
+        {
+            if let Some(b) = self.rows.iter().find(|b| {
+                b.mode == "slo-batch" && b.serve_threads == head && b.offered_qps == r.offered_qps
+            }) {
                 if best.map_or(true, |(q, _, _)| r.offered_qps > q) {
                     best = Some((r.offered_qps, r.goodput_qps, b.goodput_qps));
                 }
@@ -134,15 +188,16 @@ impl LoadBenchReport {
     pub fn to_markdown(&self) -> String {
         let mut s = String::new();
         s.push_str(
-            "| scheduler | offered qps | goodput qps | within SLO | p50 ms | p99 ms | p999 ms \
-             | wait µs | service µs | depth mean | depth max | deltas |\n",
+            "| scheduler | threads | offered qps | goodput qps | within SLO | p50 ms | p99 ms \
+             | p999 ms | wait µs | service µs | depth mean | depth max | deltas | wall ms |\n",
         );
-        s.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+        s.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
         for r in &self.rows {
             let _ = writeln!(
                 s,
-                "| {} | {:.0} | {:.0} | {:.1}% | {:.2} | {:.2} | {:.2} | {:.0} | {:.0} | {:.1} | {} | {} |",
+                "| {} | {} | {:.0} | {:.0} | {:.1}% | {:.2} | {:.2} | {:.2} | {:.0} | {:.0} | {:.1} | {} | {} | {:.1} |",
                 r.mode,
+                r.serve_threads,
                 r.offered_qps,
                 r.goodput_qps,
                 r.goodput_ratio * 100.0,
@@ -154,6 +209,7 @@ impl LoadBenchReport {
                 r.queue_depth_mean,
                 r.queue_depth_max,
                 r.deltas,
+                r.wall_ms,
             );
         }
         let _ = writeln!(
@@ -162,6 +218,14 @@ impl LoadBenchReport {
             self.calibrated_qps,
             self.slo_us as f64 / 1e3
         );
+        if let Some(x) = self.wall_clock_speedup() {
+            let _ = writeln!(
+                s,
+                "serve pool {} threads: total replay wall-clock {:.2}x vs sequential width 1 \
+                 (answers bit-identical at both widths)",
+                self.serve_threads, x,
+            );
+        }
         for mode in ["fifo", "slo-batch"] {
             match self.knee_qps(mode) {
                 Some(k) => {
@@ -188,14 +252,16 @@ impl LoadBenchReport {
 
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "mode,offered_qps,achieved_qps,goodput_qps,goodput_ratio,p50_us,p99_us,p999_us,\
-             mean_queue_us,mean_service_us,queue_depth_mean,queue_depth_max,answered,deltas\n",
+            "mode,serve_threads,offered_qps,achieved_qps,goodput_qps,goodput_ratio,p50_us,p99_us,\
+             p999_us,mean_queue_us,mean_service_us,queue_depth_mean,queue_depth_max,answered,\
+             deltas,peak_inflight,wall_ms\n",
         );
         for r in &self.rows {
             let _ = writeln!(
                 s,
-                "{},{:.2},{:.2},{:.2},{:.4},{:.1},{:.1},{:.1},{:.1},{:.1},{:.2},{},{},{}",
+                "{},{},{:.2},{:.2},{:.2},{:.4},{:.1},{:.1},{:.1},{:.1},{:.1},{:.2},{},{},{},{},{:.2}",
                 r.mode,
+                r.serve_threads,
                 r.offered_qps,
                 r.achieved_qps,
                 r.goodput_qps,
@@ -209,8 +275,54 @@ impl LoadBenchReport {
                 r.queue_depth_max,
                 r.answered,
                 r.deltas,
+                r.peak_inflight,
+                r.wall_ms,
             );
         }
+        s
+    }
+
+    /// Machine-readable form for the perf trajectory
+    /// (`BENCH_fig14.json`). Hand-rolled — the build is registry-free,
+    /// so no serde.
+    pub fn to_json(&self) -> String {
+        let knee = |m: &str| {
+            self.knee_qps(m).map_or_else(|| "null".to_string(), |k| format!("{k:.2}"))
+        };
+        let mut s = String::from("{\n");
+        let _ = writeln!(s, "  \"bench\": \"fig14_load_knee\",");
+        let _ = writeln!(s, "  \"slo_us\": {},", self.slo_us);
+        let _ = writeln!(s, "  \"calibrated_qps\": {:.2},", self.calibrated_qps);
+        let _ = writeln!(s, "  \"serve_threads\": {},", self.serve_threads);
+        let _ = writeln!(
+            s,
+            "  \"wall_clock_speedup\": {},",
+            self.wall_clock_speedup()
+                .map_or_else(|| "null".to_string(), |x| format!("{x:.3}"))
+        );
+        let _ = writeln!(s, "  \"knee_qps\": {{\"fifo\": {}, \"slo-batch\": {}}},", knee("fifo"), knee("slo-batch"));
+        s.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"mode\": \"{}\", \"serve_threads\": {}, \"offered_qps\": {:.2}, \
+                 \"goodput_qps\": {:.2}, \"goodput_ratio\": {:.4}, \"p50_us\": {:.1}, \
+                 \"p99_us\": {:.1}, \"p999_us\": {:.1}, \"peak_inflight\": {}, \
+                 \"wall_ms\": {:.2}}}",
+                r.mode,
+                r.serve_threads,
+                r.offered_qps,
+                r.goodput_qps,
+                r.goodput_ratio,
+                r.p50_us,
+                r.p99_us,
+                r.p999_us,
+                r.peak_inflight,
+                r.wall_ms,
+            );
+            s.push_str(if i + 1 < self.rows.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
         s
     }
 }
@@ -225,8 +337,14 @@ fn percentile(sorted_us: &[f64], p: f64) -> f64 {
     sorted_us[idx.min(sorted_us.len() - 1)]
 }
 
-fn build_server(ds: &Dataset, params: &GcnParams, cfg: &LoadBenchConfig) -> Result<Server> {
-    let scfg = ServeConfig { shards: cfg.shards, seed: cfg.seed, ..Default::default() };
+fn build_server(
+    ds: &Dataset,
+    params: &GcnParams,
+    cfg: &LoadBenchConfig,
+    serve_threads: usize,
+) -> Result<Server> {
+    let scfg =
+        ServeConfig { shards: cfg.shards, seed: cfg.seed, serve_threads, ..Default::default() };
     let mut srv = Server::for_dataset(ds, params.clone(), scfg)?;
     // warm to steady state first: the open-loop question is about
     // queueing under load, not cold caches
@@ -255,8 +373,19 @@ pub fn run_load_bench(
     params: &GcnParams,
     cfg: &LoadBenchConfig,
 ) -> Result<LoadBenchReport> {
+    // resolve the headline pool width here, mirroring the server's own
+    // resolution (shard count clamps to the node count at build), so
+    // report rows are explicit even under `serve_threads: 0` (auto)
+    let k = cfg.shards.clamp(1, ds.graph.num_nodes().max(1));
+    let head_threads = match cfg.serve_threads {
+        0 => crate::threads::available().min(k).max(1),
+        n => n.min(k).max(1),
+    };
+    // width-1 replays ride along for the wall-clock comparison; at a
+    // headline width of 1 there is nothing to compare
+    let thread_set: Vec<usize> = if head_threads > 1 { vec![1, head_threads] } else { vec![1] };
     let calibrated = {
-        let mut srv = build_server(ds, params, cfg)?;
+        let mut srv = build_server(ds, params, cfg, 1)?;
         calibrate_qps(&mut srv, ds.graph.num_nodes())?
     };
     let rate0 = if cfg.rate_start_qps > 0.0 { cfg.rate_start_qps } else { calibrated * 0.25 };
@@ -270,30 +399,51 @@ pub fn run_load_bench(
             zipf_s: cfg.zipf_s,
             churn_frac: cfg.churn_frac,
             edges_per_delta: cfg.edges_per_delta,
-            // one seed per step, shared by both schedulers: identical
-            // arrivals, popularity, and churn
+            // one seed per step, shared by both schedulers and both
+            // pool widths: identical arrivals, popularity, and churn
             seed: cfg.seed ^ (step as u64 + 1).wrapping_mul(0x9E37_79B9),
         };
         let schedule = generate_schedule(&ds.graph, ds.feature_dim(), &wcfg);
-        for mode in ["fifo", "slo-batch"] {
-            let mut srv = build_server(ds, params, cfg)?;
-            let mut fifo = FifoScheduler::new();
-            let mut batch =
-                SloBatchScheduler::new(srv.num_shards(), cfg.batch_k, cfg.slo_us / 4);
-            let sched: &mut dyn Scheduler =
-                if mode == "fifo" { &mut fifo } else { &mut batch };
-            let sim = run_open_loop(&mut srv, &schedule, sched, &opts)?;
-            rows.push(summarize(mode, rate, &sim));
+        let mut head_collapsed = true;
+        for &threads in &thread_set {
+            for mode in ["fifo", "slo-batch"] {
+                let mut srv = build_server(ds, params, cfg, threads)?;
+                let mut fifo = FifoScheduler::new();
+                let mut batch =
+                    SloBatchScheduler::new(srv.num_shards(), cfg.batch_k, cfg.slo_us / 4);
+                let sched: &mut dyn Scheduler =
+                    if mode == "fifo" { &mut fifo } else { &mut batch };
+                let wall = Instant::now();
+                let sim = run_open_loop(&mut srv, &schedule, sched, &opts)?;
+                let wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+                let row = summarize(mode, rate, &sim, srv.serve_parallelism(), wall_ms);
+                if row.serve_threads == head_threads && row.goodput_ratio >= 0.5 {
+                    head_collapsed = false;
+                }
+                rows.push(row);
+            }
         }
-        let past_knee = rows[rows.len() - 2..].iter().all(|r| r.goodput_ratio < 0.5);
-        if past_knee {
+        // early-stop on the headline width: once both schedulers are
+        // well past the knee there, the collapse only deepens
+        if head_collapsed {
             break;
         }
     }
-    Ok(LoadBenchReport { rows, slo_us: cfg.slo_us, calibrated_qps: calibrated })
+    Ok(LoadBenchReport {
+        rows,
+        slo_us: cfg.slo_us,
+        calibrated_qps: calibrated,
+        serve_threads: head_threads,
+    })
 }
 
-fn summarize(mode: &str, offered_qps: f64, sim: &SimResult) -> RateRow {
+fn summarize(
+    mode: &str,
+    offered_qps: f64,
+    sim: &SimResult,
+    serve_threads: usize,
+    wall_ms: f64,
+) -> RateRow {
     let answered = sim.outcomes.len();
     let denom = answered.max(1) as f64;
     let mut lat: Vec<f64> = sim.outcomes.iter().map(|o| o.latency_us() as f64).collect();
@@ -302,6 +452,7 @@ fn summarize(mode: &str, offered_qps: f64, sim: &SimResult) -> RateRow {
     let within = sim.outcomes.iter().filter(|o| o.within_slo).count();
     RateRow {
         mode: mode.to_string(),
+        serve_threads,
         offered_qps,
         achieved_qps: answered as f64 / dur_s,
         goodput_qps: within as f64 / dur_s,
@@ -313,8 +464,10 @@ fn summarize(mode: &str, offered_qps: f64, sim: &SimResult) -> RateRow {
         mean_service_us: sim.outcomes.iter().map(|o| o.service_us() as f64).sum::<f64>() / denom,
         queue_depth_mean: sim.queue_depth_mean,
         queue_depth_max: sim.queue_depth_max,
+        peak_inflight: sim.peak_inflight,
         answered,
         deltas: sim.deltas_applied,
+        wall_ms,
     }
 }
 
@@ -323,6 +476,10 @@ mod tests {
     use super::*;
 
     fn row(mode: &str, offered: f64, ratio: f64) -> RateRow {
+        row_at(mode, offered, ratio, 1, 100.0)
+    }
+
+    fn row_at(mode: &str, offered: f64, ratio: f64, threads: usize, wall_ms: f64) -> RateRow {
         RateRow {
             mode: mode.to_string(),
             offered_qps: offered,
@@ -338,6 +495,9 @@ mod tests {
             queue_depth_max: 9,
             answered: 100,
             deltas: 2,
+            serve_threads: threads,
+            peak_inflight: threads,
+            wall_ms,
         }
     }
 
@@ -363,17 +523,55 @@ mod tests {
             ],
             slo_us: 5_000,
             calibrated_qps: 250.0,
+            serve_threads: 1,
         };
         assert_eq!(rep.knee_qps("fifo"), Some(200.0));
         assert_eq!(rep.knee_qps("slo-batch"), Some(200.0));
         let (rate, fifo, batch) = rep.past_knee_goodput().expect("a step past the knee");
         assert_eq!(rate, 400.0);
         assert!(batch > fifo);
+        assert!(rep.wall_clock_speedup().is_none(), "width-1 sweep has nothing to compare");
         let md = rep.to_markdown();
         assert!(md.contains("past the fifo knee"));
         assert!(md.contains("slo-batch"));
         let csv = rep.to_csv();
         assert_eq!(csv.lines().count(), 1 + rep.rows.len());
-        assert!(csv.starts_with("mode,offered_qps"));
+        assert!(csv.starts_with("mode,serve_threads,offered_qps"));
+        let json = rep.to_json();
+        assert!(json.contains("\"bench\": \"fig14_load_knee\""));
+        assert!(json.contains("\"wall_clock_speedup\": null"));
+    }
+
+    #[test]
+    fn parallel_rows_drive_headlines_and_speedup() {
+        // a two-width sweep: knee/goodput headlines must read only the
+        // width-4 rows, and the speedup must come from matched pairs
+        let rep = LoadBenchReport {
+            rows: vec![
+                row_at("fifo", 100.0, 1.0, 1, 200.0),
+                row_at("slo-batch", 100.0, 1.0, 1, 180.0),
+                row_at("fifo", 100.0, 1.0, 4, 80.0),
+                row_at("slo-batch", 100.0, 1.0, 4, 60.0),
+                row_at("fifo", 200.0, 0.30, 1, 400.0),
+                row_at("slo-batch", 200.0, 0.90, 1, 300.0),
+                row_at("fifo", 200.0, 0.40, 4, 150.0),
+                row_at("slo-batch", 200.0, 0.97, 4, 120.0),
+            ],
+            slo_us: 5_000,
+            calibrated_qps: 250.0,
+            serve_threads: 4,
+        };
+        // width-4 slo-batch holds 0.97 at 200 qps; width-1's 0.90 must
+        // not leak into the knee
+        assert_eq!(rep.knee_qps("slo-batch"), Some(200.0));
+        assert_eq!(rep.knee_qps("fifo"), Some(100.0));
+        let (rate, fifo, batch) = rep.past_knee_goodput().expect("width-4 step past the knee");
+        assert_eq!(rate, 200.0);
+        assert!(batch > fifo);
+        let x = rep.wall_clock_speedup().expect("two widths present");
+        let want = (200.0 + 180.0 + 400.0 + 300.0) / (80.0 + 60.0 + 150.0 + 120.0);
+        assert!((x - want).abs() < 1e-9, "speedup {x} vs {want}");
+        assert!(rep.to_markdown().contains("serve pool 4 threads"));
+        assert!(rep.to_json().contains("\"serve_threads\": 4"));
     }
 }

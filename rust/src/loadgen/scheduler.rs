@@ -38,9 +38,26 @@ pub trait Scheduler {
     /// the policy wants to flush one. All returned queries share one
     /// home shard. `drain = true` overrides the policy's batching
     /// patience (the event loop drains before a delta barrier and at
-    /// end of schedule); an implementation must return `Some` under
-    /// `drain` whenever it holds anything.
-    fn pop(&mut self, now_us: u64, drain: bool) -> Option<Vec<PendingQuery>>;
+    /// end of schedule). Equivalent to [`pop_avoiding`](Self::pop_avoiding)
+    /// with nothing busy.
+    fn pop(&mut self, now_us: u64, drain: bool) -> Option<Vec<PendingQuery>> {
+        self.pop_avoiding(now_us, drain, &|_| false)
+    }
+
+    /// Like [`pop`](Self::pop), but skip any batch homed on a shard
+    /// `busy` reports `true` for — the event loop marks shards with an
+    /// in-flight flush (or one already picked for the current wave),
+    /// since two concurrent flushes may never share an engine. The
+    /// oldest *eligible* work dispatches instead. Contract: under
+    /// `drain`, return `Some` whenever any non-busy shard has held
+    /// work; with nothing busy this must behave exactly like the
+    /// sequential `pop` (bit-identity tests replay both).
+    fn pop_avoiding(
+        &mut self,
+        now_us: u64,
+        drain: bool,
+        busy: &dyn Fn(u32) -> bool,
+    ) -> Option<Vec<PendingQuery>>;
 
     /// Earliest virtual time at which a currently-held query forces a
     /// flush, if the policy is waiting on one. `None` means "nothing
@@ -78,8 +95,18 @@ impl Scheduler for FifoScheduler {
         self.q.push_back(q);
     }
 
-    fn pop(&mut self, _now_us: u64, _drain: bool) -> Option<Vec<PendingQuery>> {
-        self.q.pop_front().map(|q| vec![q])
+    fn pop_avoiding(
+        &mut self,
+        _now_us: u64,
+        _drain: bool,
+        busy: &dyn Fn(u32) -> bool,
+    ) -> Option<Vec<PendingQuery>> {
+        // multi-server FIFO: the oldest query whose shard is free goes
+        // next (head-of-line blocking would idle the other slots).
+        // With nothing busy this is exactly `pop_front`.
+        let idx = self.q.iter().position(|p| !busy(p.shard))?;
+        let q = self.q.remove(idx).expect("position came from this deque");
+        Some(vec![q])
     }
 
     fn next_flush_at(&self) -> Option<u64> {
@@ -129,13 +156,17 @@ impl SloBatchScheduler {
         q.deadline_us.saturating_sub(self.reserve_us)
     }
 
-    /// Oldest-head bucket among those `ready` admits; shard id breaks
-    /// ties.
-    fn pick(&self, ready: impl Fn(&VecDeque<PendingQuery>) -> bool) -> Option<usize> {
+    /// Oldest-head bucket among those `ready` admits and `busy` does
+    /// not veto; shard id breaks ties.
+    fn pick(
+        &self,
+        busy: &dyn Fn(u32) -> bool,
+        ready: impl Fn(&VecDeque<PendingQuery>) -> bool,
+    ) -> Option<usize> {
         self.buckets
             .iter()
             .enumerate()
-            .filter(|(_, b)| !b.is_empty() && ready(b))
+            .filter(|(s, b)| !b.is_empty() && !busy(*s as u32) && ready(b))
             .min_by_key(|(s, b)| (b.front().expect("non-empty").arrival_us, *s))
             .map(|(s, _)| s)
     }
@@ -153,16 +184,21 @@ impl Scheduler for SloBatchScheduler {
         self.held += 1;
     }
 
-    fn pop(&mut self, now_us: u64, drain: bool) -> Option<Vec<PendingQuery>> {
+    fn pop_avoiding(
+        &mut self,
+        now_us: u64,
+        drain: bool,
+        busy: &dyn Fn(u32) -> bool,
+    ) -> Option<Vec<PendingQuery>> {
         let k = self.batch_k;
         let s = if drain {
-            self.pick(|_| true)
+            self.pick(busy, |_| true)
         } else {
             // K first (a full bucket amortises best), deadline second;
             // a flush takes the whole bucket, so under backlog a batch
             // can exceed K — that only amortises harder
-            self.pick(|b| b.len() >= k).or_else(|| {
-                self.pick(|b| self.flush_deadline(b.front().expect("non-empty")) <= now_us)
+            self.pick(busy, |b| b.len() >= k).or_else(|| {
+                self.pick(busy, |b| self.flush_deadline(b.front().expect("non-empty")) <= now_us)
             })
         }?;
         let batch: Vec<PendingQuery> = self.buckets[s].drain(..).collect();
@@ -239,6 +275,39 @@ mod tests {
         let second = s.pop(3, false).expect("shard 0 still ready");
         assert!(second.iter().all(|p| p.shard == 0));
         assert_eq!(second.iter().map(|p| p.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn fifo_skips_busy_shard_then_resumes_order() {
+        let mut f = FifoScheduler::new();
+        f.enqueue(q(0, 1, 0, 1_000));
+        f.enqueue(q(1, 2, 1, 1_000));
+        f.enqueue(q(2, 1, 2, 1_000));
+        // shard 1 has an in-flight flush: the oldest eligible query
+        // (shard 2) dispatches instead of head-of-line blocking
+        let batch = f.pop_avoiding(0, false, &|s| s == 1).expect("shard 2 is free");
+        assert_eq!(batch[0].id, 1);
+        // everything left is busy → nothing to dispatch this wave
+        assert!(f.pop_avoiding(0, false, &|s| s == 1).is_none());
+        assert_eq!(f.len(), 2, "skipped queries stay queued");
+        // shard frees up → strict arrival order resumes
+        assert_eq!(f.pop(0, false).expect("free again")[0].id, 0);
+        assert_eq!(f.pop(0, false).expect("free again")[0].id, 2);
+    }
+
+    #[test]
+    fn batcher_avoids_busy_bucket_even_under_drain() {
+        let mut s = SloBatchScheduler::new(3, 2, 0);
+        s.enqueue(q(0, 2, 0, 1_000));
+        s.enqueue(q(1, 0, 1, 1_000));
+        // shard 2's head is older, but its engine is busy: drain must
+        // still make progress on shard 0 rather than stall the wave
+        let first = s.pop_avoiding(3, true, &|sh| sh == 2).expect("shard 0 free");
+        assert!(first.iter().all(|p| p.shard == 0));
+        assert!(s.pop_avoiding(3, true, &|sh| sh == 2).is_none(), "only busy work left");
+        let second = s.pop(3, true).expect("busy veto lifted");
+        assert!(second.iter().all(|p| p.shard == 2));
+        assert!(s.is_empty());
     }
 
     #[test]

@@ -1,22 +1,37 @@
-//! Virtual-time open-loop event loop.
+//! Virtual-time open-loop event loop with concurrent in-flight
+//! flushes.
 //!
-//! One thread, one virtual clock. Arrivals from the pre-generated
-//! schedule are admitted when the clock passes their instant; the
-//! scheduler decides flushes; each flush's service time is measured
-//! **wall-clock** and folded back into the virtual clock, so while the
-//! server is "busy" serving a batch, further scheduled arrivals pile
-//! up — queue depth evolves exactly as it would against a
-//! single-threaded replica of the server under that offered rate.
+//! One virtual clock, up to [`Server::serve_parallelism`] flush
+//! *slots*. Arrivals from the pre-generated schedule are admitted when
+//! the clock passes their instant; the scheduler fills every free slot
+//! with a batch for a distinct free shard (two flushes never share an
+//! engine), and the whole wave executes **physically in parallel** on
+//! the server's scoped-thread pool
+//! ([`Server::flush_shard_batches`]). Each flush's service time is its
+//! own wall-clock span, measured inside its worker thread and folded
+//! back into the virtual clock: a flush dispatched at `t` completes at
+//! `t + span`, slots free as the clock passes completions, and while
+//! shards are busy further scheduled arrivals pile up — queue depth
+//! evolves exactly as it would against an N-way replica group under
+//! that offered rate. With one slot this degrades to the original
+//! sequential loop, decision for decision.
 //!
 //! Deltas are **barriers**: when the schedule yields a delta, the loop
 //! stops admitting (the schedule is time-ordered, so everything behind
-//! the delta stays out), drains the scheduler, applies the delta, then
-//! resumes. This is precisely the ordering a single mutation queue
-//! would impose, and it is what makes every answer bit-identical to a
-//! sequential replay of the same schedule — the batching itself cannot
-//! change answers (per-row compute is independent; enforced by the
-//! serve tests), and the barrier pins each query to the same graph
-//! version it would see sequentially.
+//! the delta stays out), drains the scheduler *and every in-flight
+//! flush*, applies the delta, then resumes. This is precisely the
+//! ordering a single mutation queue would impose, and it is what makes
+//! every answer bit-identical to a sequential replay of the same
+//! schedule at **any** slot count — batching cannot change answers
+//! (per-row compute is independent; enforced by the serve tests),
+//! queries never mutate state so their physical execution order is
+//! irrelevant, and the barrier pins each query to the same graph
+//! version it would see sequentially. Only the measured spans (and so
+//! virtual latencies) are wall-clock-dependent; answers, predictions,
+//! and versions are not.
+//!
+//! [`Server::serve_parallelism`]: crate::serve::Server::serve_parallelism
+//! [`Server::flush_shard_batches`]: crate::serve::Server::flush_shard_batches
 
 use super::generator::{Arrival, ArrivalKind};
 use super::scheduler::{PendingQuery, Scheduler};
@@ -94,6 +109,9 @@ pub struct SimResult {
     pub queue_depth_max: usize,
     /// Mean queue depth over those samples.
     pub queue_depth_mean: f64,
+    /// Most flushes ever simultaneously in flight (1 when the server
+    /// serves sequentially; > 1 proves cross-shard overlap happened).
+    pub peak_inflight: usize,
 }
 
 /// Replay `schedule` against `srv` under `sched`. See module docs for
@@ -104,6 +122,7 @@ pub fn run_open_loop(
     sched: &mut dyn Scheduler,
     opts: &SimOptions,
 ) -> Result<SimResult> {
+    let slots = srv.serve_parallelism().max(1);
     let mut now_us: u64 = 0;
     let mut idx = 0usize;
     let mut armed_delta: Option<&crate::serve::GraphDelta> = None;
@@ -113,7 +132,14 @@ pub fn run_open_loop(
     let mut depth_max = 0usize;
     let mut depth_sum = 0u64;
     let mut depth_samples = 0u64;
+    // flushes whose virtual completion the clock has not reached yet:
+    // (home shard, complete_us). Length never exceeds `slots`.
+    let mut inflight: Vec<(u32, u64)> = Vec::new();
+    let mut peak_inflight = 0usize;
     loop {
+        // 0. retire in-flight flushes the clock has reached — their
+        //    shards and slots are free again
+        inflight.retain(|&(_, c)| c > now_us);
         // 1. admit everything the clock has passed — but never past an
         //    unapplied delta
         while armed_delta.is_none() && idx < schedule.len() && schedule[idx].at_us <= now_us {
@@ -137,53 +163,100 @@ pub fn run_open_loop(
             }
             idx += 1;
         }
-        // 2. the server is free at `now`: flush if the policy will
+        // 2. fill every free slot with a batch for a distinct free
+        //    shard, then execute the wave physically in parallel. Each
+        //    flush dispatches at `now` and completes at `now + span`,
+        //    span measured inside its own worker thread.
         let drain = armed_delta.is_some() || idx >= schedule.len();
-        if let Some(batch) = sched.pop(now_us, drain) {
-            let shard = batch[0].shard;
-            debug_assert!(batch.iter().all(|p| p.shard == shard), "a flush is one shard's batch");
-            let nodes: Vec<u32> = batch.iter().map(|p| p.node).collect();
-            let wall = Instant::now();
-            let results = srv.flush_shard_batch(shard, &nodes)?;
-            let service_us = (wall.elapsed().as_secs_f64() * 1e6).ceil().max(1.0) as u64;
-            let complete_us = now_us + service_us;
-            for (p, r) in batch.iter().zip(results) {
-                let within = complete_us <= p.deadline_us;
-                srv.record_slo_outcome(within);
-                outcomes.push(RequestOutcome {
-                    id: p.id,
-                    node: p.node,
-                    shard,
-                    arrival_us: p.arrival_us,
-                    dispatch_us: now_us,
-                    complete_us,
-                    batch_size: batch.len(),
-                    within_slo: within,
-                    pred: r.pred,
-                    graph_version: r.graph_version,
-                    probs: if opts.record_probs { Some(r.probs.clone()) } else { None },
-                });
+        let mut wave: Vec<Vec<PendingQuery>> = Vec::new();
+        while inflight.len() + wave.len() < slots {
+            let popped = {
+                let busy = |s: u32| {
+                    inflight.iter().any(|&(b, _)| b == s)
+                        || wave.iter().any(|w: &Vec<PendingQuery>| w[0].shard == s)
+                };
+                sched.pop_avoiding(now_us, drain, &busy)
+            };
+            match popped {
+                Some(batch) => {
+                    debug_assert!(
+                        batch.iter().all(|p| p.shard == batch[0].shard),
+                        "a flush is one shard's batch"
+                    );
+                    wave.push(batch);
+                }
+                None => break,
             }
-            flushes += 1;
-            now_us = complete_us;
+        }
+        if !wave.is_empty() {
+            let batches: Vec<(u32, Vec<u32>)> = wave
+                .iter()
+                .map(|b| (b[0].shard, b.iter().map(|p| p.node).collect()))
+                .collect();
+            let flushed = srv.flush_shard_batches(&batches)?;
+            for (batch, f) in wave.iter().zip(flushed) {
+                let complete_us = now_us + f.service_us;
+                for (p, r) in batch.iter().zip(f.results) {
+                    let within = complete_us <= p.deadline_us;
+                    srv.record_slo_outcome(within);
+                    outcomes.push(RequestOutcome {
+                        id: p.id,
+                        node: p.node,
+                        shard: batch[0].shard,
+                        arrival_us: p.arrival_us,
+                        dispatch_us: now_us,
+                        complete_us,
+                        batch_size: batch.len(),
+                        within_slo: within,
+                        pred: r.pred,
+                        graph_version: r.graph_version,
+                        probs: if opts.record_probs { Some(r.probs) } else { None },
+                    });
+                }
+                flushes += 1;
+                inflight.push((batch[0].shard, complete_us));
+            }
+            peak_inflight = peak_inflight.max(inflight.len());
+            // don't advance the clock here: the next iteration may
+            // retire nothing and fall through to step 4, which jumps
+            // to the earliest of completion / arrival / deadline — so
+            // a freed slot can dispatch again mid-overlap
             continue;
         }
-        // 3. queue drained: the armed delta (if any) takes the server
-        if let Some(d) = armed_delta.take() {
+        // 3. scheduler drained AND nothing in flight: the armed delta
+        //    (if any) takes the whole server — deltas stay barriers at
+        //    every slot count
+        if armed_delta.is_some() && sched.is_empty() && inflight.is_empty() {
+            let d = armed_delta.take().expect("just checked");
             let wall = Instant::now();
             srv.apply_delta(d)?;
             now_us += (wall.elapsed().as_secs_f64() * 1e6).ceil().max(1.0) as u64;
             deltas_applied += 1;
             continue;
         }
-        // 4. idle: jump the clock to the next wake-up, or finish
-        let next_arrival = if idx < schedule.len() { Some(schedule[idx].at_us) } else { None };
-        match next_arrival.into_iter().chain(sched.next_flush_at()).min() {
-            Some(t) => now_us = now_us.max(t),
-            None => break, // schedule exhausted, scheduler drained
+        // 4. idle at `now`: jump the clock to the next event strictly
+        //    ahead of it — an arrival (unless a delta blocks
+        //    admission), a scheduler deadline, or an in-flight
+        //    completion — or finish
+        let next_arrival = if armed_delta.is_none() && idx < schedule.len() {
+            Some(schedule[idx].at_us)
+        } else {
+            None
+        };
+        let next_completion = inflight.iter().map(|&(_, c)| c).min();
+        let wake = next_arrival
+            .into_iter()
+            .chain(sched.next_flush_at())
+            .chain(next_completion)
+            .filter(|&t| t > now_us)
+            .min();
+        match wake {
+            Some(t) => now_us = t,
+            None => break, // schedule exhausted, scheduler + slots drained
         }
     }
     debug_assert!(sched.is_empty(), "drain semantics leave nothing behind");
+    debug_assert!(inflight.is_empty(), "every dispatched flush completed");
     outcomes.sort_by_key(|o| o.id);
     Ok(SimResult {
         outcomes,
@@ -196,5 +269,6 @@ pub fn run_open_loop(
         } else {
             0.0
         },
+        peak_inflight,
     })
 }

@@ -9,6 +9,10 @@
 //!   each batch's dependency cone, but nothing reused across requests.
 //! * `cached-sharded` — the full subsystem: warm embedding cache plus
 //!   micro-batching; steady-state serving.
+//! * `parallel-sharded` (when [`ServingBenchConfig::serve_threads`]
+//!   ≠ 1) — `cached-sharded` again with the per-shard fan-out on the
+//!   scoped-thread serve pool: bit-identical answers and counters,
+//!   wall-clock before/after for the parallel path.
 //!
 //! **Fig. 12 (ours)** — serving under *churn*: interleaved
 //! [`GraphDelta`](super::GraphDelta) streams at increasing rates,
@@ -45,6 +49,9 @@ pub struct ServingBenchConfig {
     pub gather_missing: bool,
     /// Cross-request gathered-row cache budget (gather mode; 0 = off).
     pub gather_cache_budget_bytes: u64,
+    /// Serve-pool width for the extra `parallel-sharded` row (0 =
+    /// auto, 1 = skip the row; see [`ServeConfig::serve_threads`]).
+    pub serve_threads: usize,
     pub seed: u64,
 }
 
@@ -58,6 +65,7 @@ impl Default for ServingBenchConfig {
             cache_budget_bytes: 0,
             gather_missing: false,
             gather_cache_budget_bytes: 0,
+            serve_threads: 1,
             seed: 0,
         }
     }
@@ -77,6 +85,8 @@ pub struct LatencySummary {
     pub qps: f64,
     pub cache_hits: u64,
     pub rows_recomputed: u64,
+    /// Serve-pool width this mode ran at (1 = sequential).
+    pub serve_threads: usize,
 }
 
 /// All modes on one workload.
@@ -88,32 +98,75 @@ pub struct ServingBenchReport {
 impl ServingBenchReport {
     pub fn to_markdown(&self) -> String {
         let mut s = String::from(
-            "| mode | batch | p50 (µs) | p99 (µs) | mean (µs) | QPS | cache hits | rows recomputed |\n\
-             |---|---|---|---|---|---|---|---|\n",
+            "| mode | threads | batch | p50 (µs) | p99 (µs) | mean (µs) | QPS | cache hits | rows recomputed |\n\
+             |---|---|---|---|---|---|---|---|---|\n",
         );
         for r in &self.rows {
             let _ = writeln!(
                 s,
-                "| {} | {} | {:.1} | {:.1} | {:.1} | {:.0} | {} | {} |",
-                r.mode, r.batch, r.p50_us, r.p99_us, r.mean_us, r.qps, r.cache_hits, r.rows_recomputed
+                "| {} | {} | {} | {:.1} | {:.1} | {:.1} | {:.0} | {} | {} |",
+                r.mode, r.serve_threads, r.batch, r.p50_us, r.p99_us, r.mean_us, r.qps,
+                r.cache_hits, r.rows_recomputed
             );
         }
         if let Some(x) = self.cached_speedup_vs_baseline() {
             let _ = writeln!(s, "\ncached-sharded vs unsharded-pernode: **{x:.1}x QPS**");
         }
+        if let Some((threads, x)) = self.parallel_speedup_vs_cached() {
+            let _ = writeln!(
+                s,
+                "parallel-sharded ({threads} threads) vs cached-sharded: **{x:.2}x QPS** \
+                 (bit-identical answers)"
+            );
+        }
         s
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s =
-            String::from("mode,batch,p50_us,p99_us,mean_us,qps,cache_hits,rows_recomputed\n");
+        let mut s = String::from(
+            "mode,serve_threads,batch,p50_us,p99_us,mean_us,qps,cache_hits,rows_recomputed\n",
+        );
         for r in &self.rows {
             let _ = writeln!(
                 s,
-                "{},{},{:.2},{:.2},{:.2},{:.1},{},{}",
-                r.mode, r.batch, r.p50_us, r.p99_us, r.mean_us, r.qps, r.cache_hits, r.rows_recomputed
+                "{},{},{},{:.2},{:.2},{:.2},{:.1},{},{}",
+                r.mode, r.serve_threads, r.batch, r.p50_us, r.p99_us, r.mean_us, r.qps,
+                r.cache_hits, r.rows_recomputed
             );
         }
+        s
+    }
+
+    /// Machine-readable form for the perf trajectory
+    /// (`BENCH_fig11.json`). Hand-rolled — registry-free build, no
+    /// serde.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"bench\": \"fig11_serving_latency\",\n");
+        let _ = writeln!(
+            s,
+            "  \"cached_speedup_vs_baseline\": {},",
+            self.cached_speedup_vs_baseline()
+                .map_or_else(|| "null".to_string(), |x| format!("{x:.3}"))
+        );
+        let _ = writeln!(
+            s,
+            "  \"parallel_speedup_vs_cached\": {},",
+            self.parallel_speedup_vs_cached()
+                .map_or_else(|| "null".to_string(), |(_, x)| format!("{x:.3}"))
+        );
+        s.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"mode\": \"{}\", \"serve_threads\": {}, \"batch\": {}, \
+                 \"p50_us\": {:.2}, \"p99_us\": {:.2}, \"mean_us\": {:.2}, \"qps\": {:.1}, \
+                 \"cache_hits\": {}, \"rows_recomputed\": {}}}",
+                r.mode, r.serve_threads, r.batch, r.p50_us, r.p99_us, r.mean_us, r.qps,
+                r.cache_hits, r.rows_recomputed
+            );
+            s.push_str(if i + 1 < self.rows.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
         s
     }
 
@@ -127,6 +180,16 @@ impl ServingBenchReport {
         let base = self.row("unsharded-pernode")?.qps;
         let cached = self.row("cached-sharded")?.qps;
         (base > 0.0).then(|| cached / base)
+    }
+
+    /// QPS ratio of the scoped-thread serve pool over the sequential
+    /// cached deployment, same warm state and query stream — the
+    /// parallel path's before/after. `None` when the bench ran without
+    /// a `parallel-sharded` row (`serve_threads` ≤ 1).
+    pub fn parallel_speedup_vs_cached(&self) -> Option<(usize, f64)> {
+        let seq = self.row("cached-sharded")?.qps;
+        let par = self.row("parallel-sharded")?;
+        (seq > 0.0).then(|| (par.serve_threads, par.qps / seq))
     }
 }
 
@@ -149,6 +212,7 @@ fn run_mode(
     warm: bool,
 ) -> Result<LatencySummary> {
     let mut srv = Server::for_dataset(ds, params.clone(), scfg)?;
+    let serve_threads = srv.serve_parallelism();
     if warm {
         let all: Vec<u32> = (0..ds.num_nodes() as u32).collect();
         for chunk in all.chunks(256) {
@@ -179,6 +243,7 @@ fn run_mode(
         qps: stream.len() as f64 / total_s.max(1e-12),
         cache_hits: post.cache_hits - pre.cache_hits,
         rows_recomputed: post.rows_recomputed - pre.rows_recomputed,
+        serve_threads,
     })
 }
 
@@ -213,11 +278,18 @@ pub fn run_serving_bench(
     };
     let cached = ServeConfig { cache: true, ..cold.clone() };
 
-    let rows = vec![
+    let mut rows = vec![
         run_mode("unsharded-pernode", ds, params, baseline, &stream, 1, false)?,
         run_mode("cold-sharded", ds, params, cold, &stream, cfg.batch, false)?,
-        run_mode("cached-sharded", ds, params, cached, &stream, cfg.batch, true)?,
+        run_mode("cached-sharded", ds, params, cached.clone(), &stream, cfg.batch, true)?,
     ];
+    if cfg.serve_threads != 1 {
+        // the cached deployment again, fanned out across the serve
+        // pool: same warm state, same stream, bit-identical answers —
+        // only wall-clock may move
+        let parallel = ServeConfig { serve_threads: cfg.serve_threads, ..cached };
+        rows.push(run_mode("parallel-sharded", ds, params, parallel, &stream, cfg.batch, true)?);
+    }
     Ok(ServingBenchReport { rows })
 }
 
@@ -780,6 +852,30 @@ mod tests {
         assert!(rep.to_markdown().contains("unsharded-pernode"));
         assert!(rep.to_csv().lines().count() == 4);
         assert!(rep.cached_speedup_vs_baseline().unwrap() > 0.0);
+        assert!(rep.parallel_speedup_vs_cached().is_none(), "no parallel row by default");
+        assert!(rep.to_json().contains("\"bench\": \"fig11_serving_latency\""));
+    }
+
+    #[test]
+    fn bench_parallel_row_rides_along_with_identical_counters() {
+        let ds = SyntheticSpec::tiny().generate(1);
+        let mut rng = crate::rng::Rng::seed_from_u64(1);
+        let params = GcnParams::init(ds.feature_dim(), 8, ds.num_classes, 2, &mut rng);
+        let cfg =
+            ServingBenchConfig { queries: 40, batch: 8, serve_threads: 4, ..Default::default() };
+        let rep = run_serving_bench(&ds, &params, &cfg).unwrap();
+        assert_eq!(rep.rows.len(), 4, "parallel-sharded row joins the three classics");
+        let cached = rep.row("cached-sharded").unwrap();
+        let par = rep.row("parallel-sharded").unwrap();
+        assert!(par.serve_threads > 1);
+        // same warm state + stream ⇒ the fan-out may only move
+        // wall-clock, never the work done
+        assert_eq!(par.cache_hits, cached.cache_hits);
+        assert_eq!(par.rows_recomputed, cached.rows_recomputed);
+        let (threads, x) = rep.parallel_speedup_vs_cached().unwrap();
+        assert_eq!(threads, par.serve_threads);
+        assert!(x > 0.0);
+        assert!(rep.to_json().contains("\"mode\": \"parallel-sharded\""));
     }
 
     #[test]

@@ -64,7 +64,7 @@ pub use bench::{
 pub use cache::EmbeddingCache;
 pub use delta::{EdgeChurn, GraphDelta, NewNode};
 pub use rebalance::RebalanceReport;
-pub use server::{DeltaReport, QueryResult, Server, ServeStats};
+pub use server::{DeltaReport, FlushOutcome, QueryResult, Server, ServeStats};
 pub use shard::{ShardEngine, ShardServeOutcome};
 
 /// How a shard's halo (replicated remote nodes) is chosen.
@@ -144,6 +144,15 @@ pub struct ServeConfig {
     pub rebalance_ratio: f64,
     /// Migration cap per rebalance pass (bounds post-delta latency).
     pub rebalance_max_moves: usize,
+    /// Serve-pool width: how many shards' micro-batches run
+    /// concurrently on scoped threads inside one `query_batch` /
+    /// flush wave. `1` (default) is the sequential path; `0` sizes
+    /// from the process thread budget ([`crate::threads::available`]),
+    /// capped at the shard count. Answers and counters are
+    /// **bit-identical at any width**: shard engines are disjoint
+    /// `&mut` borrows, each worker pins its GEMM panels to one thread,
+    /// and per-shard outcomes merge in ascending shard order.
+    pub serve_threads: usize,
     /// Partitioner / halo-sampling seed.
     pub seed: u64,
 }
@@ -163,6 +172,7 @@ impl Default for ServeConfig {
             rebalance: false,
             rebalance_ratio: 1.5,
             rebalance_max_moves: 32,
+            serve_threads: 1,
             seed: 0,
         }
     }

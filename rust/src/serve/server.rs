@@ -5,7 +5,7 @@
 use super::delta::{EdgeChurn, GraphDelta};
 use super::gather;
 use super::rebalance::{self, RebalanceReport};
-use super::shard::{ShardDeltaCtx, ShardEngine};
+use super::shard::{ShardDeltaCtx, ShardEngine, ShardServeOutcome};
 use super::{DeltaMode, HaloPolicy, ServeConfig};
 use crate::comm::{CommLedger, CommStats};
 use crate::datasets::Dataset;
@@ -15,9 +15,33 @@ use crate::partition::{partition, PartitionConfig};
 use crate::tensor::Matrix;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
+use std::time::Instant;
 
 /// Home-part sentinel for a retired (removed) node id.
 pub(crate) const RETIRED: u32 = u32::MAX;
+
+// The serve pool hands each worker thread a disjoint `&mut ShardEngine`
+// and a shared `&GcnParams`; both bounds are load-bearing for
+// `std::thread::scope` and checked here so a future non-Send field
+// (Rc, raw pointer) fails at this line instead of deep in a spawn.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    const fn assert_sync<T: Sync>() {}
+    assert_send::<ShardEngine>();
+    assert_sync::<GcnParams>();
+};
+
+/// One scheduler flush answered by [`Server::flush_shard_batches`]:
+/// the batch's results plus the flush's own wall-clock span, measured
+/// inside the worker thread that served it. The load harness folds
+/// `service_us` into its virtual clock per flush, so overlapping
+/// flushes each keep an honest (contended) service time.
+pub struct FlushOutcome {
+    /// Answers in the flushed batch's node order.
+    pub results: Vec<QueryResult>,
+    /// Wall-clock service span of this flush alone, in µs (≥ 1).
+    pub service_us: u64,
+}
 
 /// One answered query with its provenance.
 #[derive(Clone, Debug)]
@@ -143,6 +167,14 @@ pub struct Server {
     /// Cross-request gathered-row cache (budgeted-gather mode with a
     /// byte budget configured; see [`ServeConfig::gather_cache_budget_bytes`]).
     pub(crate) gather_cache: Option<gather::GatherRowCache>,
+    /// Resolved serve-pool width (1 = sequential; see
+    /// [`ServeConfig::serve_threads`]). Fixed at build so a server's
+    /// physical parallelism can't drift mid-run with budget churn.
+    serve_pool: usize,
+    /// Standing claim on the process thread budget while this server
+    /// can fan out (held only when `serve_pool > 1`), so co-resident
+    /// trainers size their workers around us. Wall-clock only.
+    _serve_lease: Option<crate::threads::ThreadLease>,
     pub(crate) ledger: CommLedger,
     pub(crate) queries: u64,
     pub(crate) micro_batches: u64,
@@ -207,6 +239,15 @@ impl Server {
         }
         let gather_cache = (cfg.gather_missing && cfg.gather_cache_budget_bytes > 0)
             .then(|| gather::GatherRowCache::new(cfg.gather_cache_budget_bytes));
+        // resolve the serve-pool width once: explicit N capped at the
+        // shard count (more threads than shards can never help — the
+        // fan-out unit is a whole shard), 0 = take what the process
+        // budget has left. Never affects answers, only wall-clock.
+        let serve_pool = match cfg.serve_threads {
+            0 => crate::threads::available().min(k).max(1),
+            n => n.min(k),
+        };
+        let _serve_lease = (serve_pool > 1).then(|| crate::threads::reserve(serve_pool));
         Ok(Server {
             cfg,
             graph: overlay,
@@ -217,6 +258,8 @@ impl Server {
             base_counts,
             shards,
             gather_cache,
+            serve_pool,
+            _serve_lease,
             ledger,
             queries: 0,
             micro_batches: 0,
@@ -244,6 +287,13 @@ impl Server {
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Resolved serve-pool width: how many distinct shards this server
+    /// runs concurrently per query/flush wave (1 = sequential). The
+    /// load harness uses this as its in-flight flush slot count.
+    pub fn serve_parallelism(&self) -> usize {
+        self.serve_pool
     }
 
     /// Node-id space size (retired ids included; they reject queries).
@@ -317,25 +367,87 @@ impl Server {
         }
         let mut results: Vec<Option<QueryResult>> = vec![None; nodes.len()];
         let version = self.graph.version();
-        for (s, group) in groups.iter().enumerate() {
-            if group.is_empty() {
-                continue;
+        let active = groups.iter().filter(|g| !g.is_empty()).count();
+        if self.serve_pool > 1 && active > 1 {
+            // Parallel fan-out: each worker owns a disjoint
+            // `&mut ShardEngine` (per-shard caches included), so shard
+            // isolation is structural — no locks to get wrong. Workers
+            // pin their GEMM panels to one thread; panel width never
+            // changes bits (fixed per-row accumulation order), this
+            // only keeps the pool from over-forking. Outcomes merge
+            // below in ascending shard order — the same order the
+            // sequential loop visits — so answers AND counters are
+            // bit-identical to `serve_threads = 1`.
+            struct ShardTask<'a> {
+                s: usize,
+                engine: &'a mut ShardEngine,
+                locals: Vec<u32>,
+                out: Option<ShardServeOutcome>,
             }
-            let locals: Vec<u32> = group.iter().map(|&(_, l)| l).collect();
-            let out = self.shards[s].serve(&self.params, &locals, self.cfg.pruned);
-            self.micro_batches += 1;
-            self.cache_hits += out.cached_hits as u64;
-            self.rows_recomputed += out.rows_recomputed as u64;
-            for (ri, &(orig, _)) in group.iter().enumerate() {
-                results[orig] = Some(QueryResult {
-                    node: nodes[orig],
-                    pred: out.preds[ri],
-                    probs: out.probs.row(ri).to_vec(),
-                    shard: s as u32,
-                    graph_version: version,
-                    cache_hit: out.cached[ri],
-                    rows_recomputed: out.rows_recomputed,
-                });
+            let mut tasks: Vec<ShardTask<'_>> = self
+                .shards
+                .iter_mut()
+                .enumerate()
+                .filter(|(s, _)| !groups[*s].is_empty())
+                .map(|(s, engine)| ShardTask {
+                    s,
+                    engine,
+                    locals: groups[s].iter().map(|&(_, l)| l).collect(),
+                    out: None,
+                })
+                .collect();
+            let nthreads = self.serve_pool.min(tasks.len());
+            let per = tasks.len().div_ceil(nthreads);
+            let params = &self.params;
+            let pruned = self.cfg.pruned;
+            std::thread::scope(|scope| {
+                for chunk in tasks.chunks_mut(per) {
+                    scope.spawn(move || {
+                        crate::tensor::set_intra_threads(1);
+                        for t in chunk.iter_mut() {
+                            t.out = Some(t.engine.serve(params, &t.locals, pruned));
+                        }
+                    });
+                }
+            });
+            for t in &tasks {
+                let out = t.out.as_ref().expect("worker served every task");
+                self.micro_batches += 1;
+                self.cache_hits += out.cached_hits as u64;
+                self.rows_recomputed += out.rows_recomputed as u64;
+                for (ri, &(orig, _)) in groups[t.s].iter().enumerate() {
+                    results[orig] = Some(QueryResult {
+                        node: nodes[orig],
+                        pred: out.preds[ri],
+                        probs: out.probs.row(ri).to_vec(),
+                        shard: t.s as u32,
+                        graph_version: version,
+                        cache_hit: out.cached[ri],
+                        rows_recomputed: out.rows_recomputed,
+                    });
+                }
+            }
+        } else {
+            for (s, group) in groups.iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                let locals: Vec<u32> = group.iter().map(|&(_, l)| l).collect();
+                let out = self.shards[s].serve(&self.params, &locals, self.cfg.pruned);
+                self.micro_batches += 1;
+                self.cache_hits += out.cached_hits as u64;
+                self.rows_recomputed += out.rows_recomputed as u64;
+                for (ri, &(orig, _)) in group.iter().enumerate() {
+                    results[orig] = Some(QueryResult {
+                        node: nodes[orig],
+                        pred: out.preds[ri],
+                        probs: out.probs.row(ri).to_vec(),
+                        shard: s as u32,
+                        graph_version: version,
+                        cache_hit: out.cached[ri],
+                        rows_recomputed: out.rows_recomputed,
+                    });
+                }
             }
         }
         self.queries += nodes.len() as u64;
@@ -366,6 +478,127 @@ impl Server {
             }
         }
         self.query_batch(nodes)
+    }
+
+    /// Serve a *wave* of scheduler flushes — one batch per distinct
+    /// shard — concurrently on the serve pool, timing each flush's own
+    /// wall-clock span inside its worker thread. This is the load
+    /// harness's physical overlap primitive: with `serve_threads = 1`
+    /// (or a single batch, or the gather path) it degrades to the
+    /// sequential [`flush_shard_batch`](Self::flush_shard_batch) loop,
+    /// so answers and counters are bit-identical at any pool width —
+    /// only the measured spans (wall-clock) differ.
+    ///
+    /// Outcomes come back in `batches` order; validation mirrors the
+    /// single-flush path (known shard, live + correctly homed nodes)
+    /// plus a distinct-shards check, since two flushes racing on one
+    /// engine is exactly what the scheduler contract forbids.
+    pub fn flush_shard_batches(&mut self, batches: &[(u32, Vec<u32>)]) -> Result<Vec<FlushOutcome>> {
+        let mut want: Vec<Option<usize>> = vec![None; self.shards.len()];
+        for (bi, (shard, nodes)) in batches.iter().enumerate() {
+            let s = *shard as usize;
+            if s >= self.shards.len() {
+                return Err(anyhow!("flush targets unknown shard {shard}"));
+            }
+            if want[s].replace(bi).is_some() {
+                return Err(anyhow!("flush wave targets shard {shard} twice"));
+            }
+            for &v in nodes {
+                if !self.is_alive(v) {
+                    return Err(anyhow!("flush node {v} is out of range or removed"));
+                }
+                if self.assignment[v as usize] != *shard {
+                    return Err(anyhow!(
+                        "flush node {v} is homed on shard {}, not {shard}",
+                        self.assignment[v as usize]
+                    ));
+                }
+            }
+        }
+        let gather_path =
+            self.cfg.gather_missing && matches!(self.cfg.halo, HaloPolicy::Budgeted { .. });
+        if self.serve_pool <= 1 || batches.len() <= 1 || gather_path {
+            // sequential: one flush at a time through the audited
+            // single-flush path, each span measured around its call
+            return batches
+                .iter()
+                .map(|(shard, nodes)| {
+                    let t0 = Instant::now();
+                    let results = self.flush_shard_batch(*shard, nodes)?;
+                    let service_us = (t0.elapsed().as_micros() as u64).max(1);
+                    Ok(FlushOutcome { results, service_us })
+                })
+                .collect();
+        }
+        // Parallel fan-out over disjoint engines — one worker per
+        // flush (a wave never exceeds the pool width: the harness
+        // sizes waves by `serve_parallelism`). Same structural
+        // isolation and ascending-shard-order merge as `query_batch`.
+        let version = self.graph.version();
+        struct FlushTask<'a> {
+            bi: usize,
+            shard: u32,
+            engine: &'a mut ShardEngine,
+            locals: Vec<u32>,
+            out: Option<(ShardServeOutcome, u64)>,
+        }
+        let mut tasks: Vec<FlushTask<'_>> = self
+            .shards
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(s, engine)| {
+                want[s].map(|bi| {
+                    let locals: Vec<u32> = batches[bi]
+                        .1
+                        .iter()
+                        .map(|&v| {
+                            engine.local_of(v).expect("home shard always contains its base nodes")
+                        })
+                        .collect();
+                    FlushTask { bi, shard: s as u32, engine, locals, out: None }
+                })
+            })
+            .collect();
+        let params = &self.params;
+        let pruned = self.cfg.pruned;
+        std::thread::scope(|scope| {
+            for t in tasks.iter_mut() {
+                scope.spawn(move || {
+                    crate::tensor::set_intra_threads(1);
+                    let t0 = Instant::now();
+                    let out = t.engine.serve(params, &t.locals, pruned);
+                    let span = (t0.elapsed().as_micros() as u64).max(1);
+                    t.out = Some((out, span));
+                });
+            }
+        });
+        // merge counters in ascending shard order (tasks order), then
+        // assemble outcomes back in the caller's `batches` order
+        let mut outcomes: Vec<Option<FlushOutcome>> = Vec::new();
+        outcomes.resize_with(batches.len(), || None);
+        for t in &tasks {
+            let (out, span) = t.out.as_ref().expect("worker served every flush");
+            self.micro_batches += 1;
+            self.cache_hits += out.cached_hits as u64;
+            self.rows_recomputed += out.rows_recomputed as u64;
+            self.queries += batches[t.bi].1.len() as u64;
+            let results = batches[t.bi]
+                .1
+                .iter()
+                .enumerate()
+                .map(|(ri, &node)| QueryResult {
+                    node,
+                    pred: out.preds[ri],
+                    probs: out.probs.row(ri).to_vec(),
+                    shard: t.shard,
+                    graph_version: version,
+                    cache_hit: out.cached[ri],
+                    rows_recomputed: out.rows_recomputed,
+                })
+                .collect();
+            outcomes[t.bi] = Some(FlushOutcome { results, service_us: *span });
+        }
+        Ok(outcomes.into_iter().map(|o| o.expect("every flush answered")).collect())
     }
 
     /// Open-loop harness hook: record one scheduler queue-depth sample

@@ -43,7 +43,10 @@ fn thread_count(flops: usize) -> usize {
         return 1;
     }
     let cap = match INTRA_THREADS.with(|c| c.get()) {
-        0 => 8,
+        // unset: size from the process-wide budget (total minus what
+        // standing pools — trainer workers, serve pools — hold), with
+        // the historical ceiling of 8 panels
+        0 => crate::threads::available().min(8),
         n => n,
     };
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(cap)

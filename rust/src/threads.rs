@@ -1,0 +1,118 @@
+//! Process-wide thread budget.
+//!
+//! Three subsystems spawn compute threads: training workers (one OS
+//! thread per worker, each running GEMMs at `intra_threads`), the
+//! tensor kernels' row-panel pools ([`crate::tensor::ops`]), and the
+//! serving tier's per-shard fan-out ([`crate::serve::Server`] with
+//! `serve_threads > 1`). Before this module each sized itself from
+//! `available_parallelism()` alone, so a co-resident train + serve
+//! process oversubscribed the machine: `workers * intra + serve_pool`
+//! threads on `cores` cores. Now every pool takes a [`ThreadLease`] on
+//! the shared budget and sizes itself from [`available`] — what the
+//! machine has minus what standing pools already claimed.
+//!
+//! **Determinism contract:** the counters here may only ever change
+//! *thread counts*, never *bits*. Every parallel kernel in this crate
+//! is bit-identical at any thread count — GEMM/SpMM split output rows
+//! into disjoint panels whose per-row accumulation order is fixed, and
+//! the serve fan-out merges per-shard outcomes in ascending shard
+//! order (see README "Threading model"). So concurrent tests racing on
+//! these atomics (cargo runs tests in parallel threads) can shrink each
+//! other's budgets — wall-clock only, results unchanged. That is why
+//! plain relaxed atomics are safe here where a result-affecting global
+//! would not be (cf. the `INTRA_THREADS` thread-local history note in
+//! `tensor/ops.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Configured budget override; 0 = use `available_parallelism()`.
+static TOTAL_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+/// Threads currently claimed by standing pools (leases).
+static RESERVED: AtomicUsize = AtomicUsize::new(0);
+
+/// The process's total thread budget: the configured override, or the
+/// machine's core count when none is set.
+pub fn total() -> usize {
+    match TOTAL_OVERRIDE.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+}
+
+/// Override the process budget (0 restores the core-count default).
+/// Wall-clock sizing only — never affects results.
+pub fn set_total(n: usize) {
+    TOTAL_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Threads currently held by leases.
+pub fn reserved() -> usize {
+    RESERVED.load(Ordering::Relaxed)
+}
+
+/// Budget left for a new pool, with a floor of one: a thread asking
+/// "how parallel may I be" always gets at least itself.
+pub fn available() -> usize {
+    total().saturating_sub(reserved()).max(1)
+}
+
+/// RAII claim on `n` threads of the process budget. Pools hold one for
+/// their lifetime (the trainer across a run, a parallel `Server` while
+/// it exists); dropping it returns the threads to [`available`].
+#[must_use = "dropping the lease immediately returns the threads"]
+pub struct ThreadLease {
+    n: usize,
+}
+
+impl ThreadLease {
+    /// Threads this lease holds.
+    pub fn threads(&self) -> usize {
+        self.n
+    }
+}
+
+/// Claim `n` threads. Over-reservation is allowed (the machine will
+/// time-slice); [`available`] just bottoms out at 1 for everyone else.
+pub fn reserve(n: usize) -> ThreadLease {
+    RESERVED.fetch_add(n, Ordering::Relaxed);
+    ThreadLease { n }
+}
+
+impl Drop for ThreadLease {
+    fn drop(&mut self) {
+        RESERVED.fetch_sub(self.n, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn available_never_hits_zero() {
+        // claim far more than the machine has: everyone else still
+        // sees a floor of one (robust against concurrent tests holding
+        // their own leases — their claims only push further past total)
+        let grab = total() * 4;
+        let lease = reserve(grab);
+        assert_eq!(lease.threads(), grab);
+        assert_eq!(available(), 1, "over-reservation still leaves a floor of one");
+        drop(lease);
+        assert!(available() >= 1);
+    }
+
+    #[test]
+    fn lease_returns_threads_on_drop() {
+        // every assertion here survives concurrent tests holding their
+        // own leases: while we hold 2×total, the budget is saturated no
+        // matter what anyone else reserves or releases; after the drop
+        // the only race-free fact is the floor (a concurrent lease may
+        // still legitimately hold the budget down)
+        let l = reserve(total() * 2);
+        assert_eq!(l.threads(), total() * 2);
+        assert_eq!(available(), 1, "our own claim saturates the budget");
+        drop(l);
+        assert!(available() >= 1);
+        assert!(total() >= 1);
+    }
+}

@@ -23,7 +23,11 @@ fn fixture(seed: u64) -> (Dataset, GcnParams) {
 }
 
 fn server(ds: &Dataset, params: &GcnParams) -> Server {
-    let cfg = ServeConfig { shards: 4, seed: 7, ..Default::default() };
+    server_at(ds, params, 1)
+}
+
+fn server_at(ds: &Dataset, params: &GcnParams, serve_threads: usize) -> Server {
+    let cfg = ServeConfig { shards: 4, seed: 7, serve_threads, ..Default::default() };
     Server::for_dataset(ds, params.clone(), cfg).expect("server")
 }
 
@@ -94,26 +98,119 @@ fn answers_under_load_bit_identical_to_direct_queries() {
     let (oracle, oracle_deltas) = replay_sequentially(&mut server(&ds, &params), &schedule);
 
     let opts = SimOptions { slo_us: 2_000, record_probs: true };
-    for mode in ["fifo", "slo-batch"] {
-        let mut srv = server(&ds, &params);
-        let mut fifo = FifoScheduler::new();
-        let mut batch = SloBatchScheduler::new(srv.num_shards(), 8, opts.slo_us / 4);
-        let sched: &mut dyn Scheduler = if mode == "fifo" { &mut fifo } else { &mut batch };
-        let sim = run_open_loop(&mut srv, &schedule, sched, &opts).expect("open loop");
+    for threads in [1usize, 4] {
+        for mode in ["fifo", "slo-batch"] {
+            let mut srv = server_at(&ds, &params, threads);
+            let mut fifo = FifoScheduler::new();
+            let mut batch = SloBatchScheduler::new(srv.num_shards(), 8, opts.slo_us / 4);
+            let sched: &mut dyn Scheduler = if mode == "fifo" { &mut fifo } else { &mut batch };
+            let sim = run_open_loop(&mut srv, &schedule, sched, &opts).expect("open loop");
 
-        assert_eq!(sim.deltas_applied, oracle_deltas, "[{mode}] every delta applied");
-        assert_eq!(sim.outcomes.len(), oracle.len(), "[{mode}] every query answered");
-        for (o, (id, pred, version, bits)) in sim.outcomes.iter().zip(&oracle) {
-            assert_eq!(o.id, *id, "[{mode}] outcomes align with the schedule");
-            assert_eq!(o.pred, *pred, "[{mode}] query {id}: class flipped under load");
-            assert_eq!(
-                o.graph_version, *version,
-                "[{mode}] query {id}: saw a different graph version than sequential replay"
-            );
-            let got: Vec<u32> =
-                o.probs.as_ref().expect("record_probs").iter().map(|p| p.to_bits()).collect();
-            assert_eq!(&got, bits, "[{mode}] query {id}: probabilities not bit-identical");
+            assert_eq!(sim.deltas_applied, oracle_deltas, "[{mode}/{threads}] every delta applied");
+            assert_eq!(sim.outcomes.len(), oracle.len(), "[{mode}/{threads}] every query answered");
+            for (o, (id, pred, version, bits)) in sim.outcomes.iter().zip(&oracle) {
+                assert_eq!(o.id, *id, "[{mode}/{threads}] outcomes align with the schedule");
+                assert_eq!(o.pred, *pred, "[{mode}/{threads}] query {id}: class flipped under load");
+                assert_eq!(
+                    o.graph_version, *version,
+                    "[{mode}/{threads}] query {id}: saw a different graph version than sequential \
+                     replay"
+                );
+                let got: Vec<u32> =
+                    o.probs.as_ref().expect("record_probs").iter().map(|p| p.to_bits()).collect();
+                assert_eq!(&got, bits, "[{mode}/{threads}] query {id}: probs not bit-identical");
+            }
         }
+    }
+}
+
+/// The tentpole contract on the direct path: `query_batch` across a
+/// parallel serve pool returns the same bytes and the same counters as
+/// the sequential pool, before and after churn.
+#[test]
+fn parallel_query_batch_bit_identical_with_equal_counters() {
+    let (ds, params) = fixture(13);
+    let n = ds.graph.num_nodes() as u32;
+    // a batch that lands on every shard, twice over, in scrambled order
+    let nodes: Vec<u32> = (0..48u32).map(|i| (i * 29) % n).collect();
+
+    let mut seq = server_at(&ds, &params, 1);
+    let mut par = server_at(&ds, &params, 4);
+    assert_eq!(seq.serve_parallelism(), 1);
+    assert!(par.serve_parallelism() > 1, "pool must actually be parallel");
+
+    let check = |seq: &mut Server, par: &mut Server, tag: &str| {
+        let a = seq.query_batch(&nodes).expect("sequential batch");
+        let b = par.query_batch(&nodes).expect("parallel batch");
+        assert_eq!(a.len(), b.len(), "[{tag}] answer count");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.pred, y.pred, "[{tag}] pred for node {}", x.node);
+            assert_eq!(x.graph_version, y.graph_version, "[{tag}] version for node {}", x.node);
+            let xb: Vec<u32> = x.probs.iter().map(|p| p.to_bits()).collect();
+            let yb: Vec<u32> = y.probs.iter().map(|p| p.to_bits()).collect();
+            assert_eq!(xb, yb, "[{tag}] probs for node {} not bit-identical", x.node);
+        }
+        let (s, p) = (seq.stats(), par.stats());
+        assert_eq!(s.queries, p.queries, "[{tag}] query counter");
+        assert_eq!(s.micro_batches, p.micro_batches, "[{tag}] micro-batch counter");
+        assert_eq!(s.cache_hits, p.cache_hits, "[{tag}] cache-hit counter");
+        assert_eq!(s.rows_recomputed, p.rows_recomputed, "[{tag}] recompute counter");
+    };
+    check(&mut seq, &mut par, "warm-up");
+    check(&mut seq, &mut par, "cached");
+
+    // churn, then re-check: the pools must agree on the new version too
+    let wcfg = WorkloadConfig {
+        rate_qps: 1_000.0,
+        events: 60,
+        churn_frac: 1.0,
+        seed: 3,
+        ..Default::default()
+    };
+    for arrival in generate_schedule(&ds.graph, ds.feature_dim(), &wcfg) {
+        if let ArrivalKind::Delta(d) = &arrival.kind {
+            seq.apply_delta(d).expect("seq delta");
+            par.apply_delta(d).expect("par delta");
+        }
+    }
+    check(&mut seq, &mut par, "post-churn");
+}
+
+/// Overlap must actually happen: at a rate far past one shard's
+/// service time, a 4-slot pool keeps ≥ 2 flushes in flight — while the
+/// answers still match the sequential oracle byte for byte.
+#[test]
+fn concurrent_flushes_overlap_and_stay_bit_identical() {
+    let (ds, params) = fixture(21);
+    let wcfg = WorkloadConfig {
+        rate_qps: 50_000_000.0,
+        events: 200,
+        zipf_s: 0.0, // uniform popularity → all shards stay busy
+        churn_frac: 0.0,
+        seed: 17,
+        ..Default::default()
+    };
+    let schedule = generate_schedule(&ds.graph, ds.feature_dim(), &wcfg);
+    let (oracle, _) = replay_sequentially(&mut server(&ds, &params), &schedule);
+
+    let opts = SimOptions { slo_us: u64::MAX / 2, record_probs: true };
+    let mut srv = server_at(&ds, &params, 4);
+    let mut fifo = FifoScheduler::new();
+    let sim = run_open_loop(&mut srv, &schedule, &mut fifo, &opts).expect("open loop");
+
+    assert!(
+        sim.peak_inflight >= 2,
+        "a saturated 4-slot pool must overlap flushes (peak {})",
+        sim.peak_inflight
+    );
+    assert_eq!(sim.outcomes.len(), oracle.len());
+    for (o, (id, pred, version, bits)) in sim.outcomes.iter().zip(&oracle) {
+        assert_eq!(o.id, *id);
+        assert_eq!(o.pred, *pred, "query {id}: class flipped under concurrent flushes");
+        assert_eq!(o.graph_version, *version, "query {id}: version drift");
+        let got: Vec<u32> =
+            o.probs.as_ref().expect("record_probs").iter().map(|p| p.to_bits()).collect();
+        assert_eq!(&got, bits, "query {id}: probs not bit-identical under overlap");
     }
 }
 

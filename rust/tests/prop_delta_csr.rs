@@ -98,16 +98,18 @@ fn delta_csr_sequences_match_builder_rebuild() {
 
 /// Serving level: a random sequence of deltas — edge churn, feature
 /// rewrites, **elastic node insert/remove** — applied to (a) the
-/// incremental overlay server, (b) the rebuild-mode server and (c) an
+/// incremental overlay server, (b) the rebuild-mode server, (c) an
 /// incremental server with the online rebalancer forced aggressive
 /// (every delta triggers migrations, plus an explicit pass per round)
-/// must answer bit-identically to (d) a fresh server that never saw the
-/// old graph, on every alive node, after every delta. (c) is the
-/// migration-sequence property the rebalancer's bit-identity contract
-/// rests on.
+/// and (e) an incremental server flushing through a 4-wide scoped
+/// serve pool must answer bit-identically to (d) a fresh server that
+/// never saw the old graph, on every alive node, after every delta.
+/// (c) is the migration-sequence property the rebalancer's bit-identity
+/// contract rests on; (e) is the same property for the parallel serve
+/// path, counters included.
 #[test]
 fn serve_answers_match_across_delta_modes_and_fresh_rebuild() {
-    forall("incremental == rebuild == rebalanced == fresh", 4, |rng| {
+    forall("incremental == rebuild == rebalanced == parallel == fresh", 4, |rng| {
         let seed = rng.next_u64() % 1_000;
         let ds = SyntheticSpec::tiny().generate(seed);
         let fdim = ds.feature_dim();
@@ -121,16 +123,20 @@ fn serve_answers_match_across_delta_modes_and_fresh_rebuild() {
             rebalance_max_moves: 128,
             ..cfg.clone()
         };
+        let pcfg = ServeConfig { serve_threads: 4, ..cfg.clone() };
         let mut inc = Server::for_dataset(&ds, params.clone(), cfg.clone())
             .map_err(|e| format!("build inc: {e:#}"))?;
         let mut reb = Server::for_dataset(&ds, params.clone(), rcfg)
             .map_err(|e| format!("build reb: {e:#}"))?;
         let mut bal = Server::for_dataset(&ds, params.clone(), bcfg)
             .map_err(|e| format!("build bal: {e:#}"))?;
+        let mut par = Server::for_dataset(&ds, params.clone(), pcfg)
+            .map_err(|e| format!("build par: {e:#}"))?;
         let warm: Vec<u32> = (0..ds.num_nodes() as u32).collect();
         inc.query_batch(&warm).map_err(|e| format!("warm inc: {e:#}"))?;
         reb.query_batch(&warm).map_err(|e| format!("warm reb: {e:#}"))?;
         bal.query_batch(&warm).map_err(|e| format!("warm bal: {e:#}"))?;
+        par.query_batch(&warm).map_err(|e| format!("warm par: {e:#}"))?;
 
         // mirror of the evolving deployment, for the fresh oracle
         let mut graph = ds.graph.clone();
@@ -191,6 +197,7 @@ fn serve_answers_match_across_delta_modes_and_fresh_rebuild() {
             // force an extra migration pass beyond the automatic
             // trigger: rebalancing must never move an answer
             bal.rebalance();
+            par.apply_delta(&d).map_err(|e| format!("round {round} par: {e:#}"))?;
 
             // evolve the mirror through the O(E) oracle
             graph = d.apply_to(&graph);
@@ -215,8 +222,9 @@ fn serve_answers_match_across_delta_modes_and_fresh_rebuild() {
             let a = inc.query_batch(&q).map_err(|e| format!("round {round} q inc: {e:#}"))?;
             let b = reb.query_batch(&q).map_err(|e| format!("round {round} q reb: {e:#}"))?;
             let m = bal.query_batch(&q).map_err(|e| format!("round {round} q bal: {e:#}"))?;
+            let p = par.query_batch(&q).map_err(|e| format!("round {round} q par: {e:#}"))?;
             let c = fresh.query_batch(&q).map_err(|e| format!("round {round} q fresh: {e:#}"))?;
-            for (((x, y), w), z) in a.iter().zip(&b).zip(&m).zip(&c) {
+            for ((((x, y), w), v), z) in a.iter().zip(&b).zip(&m).zip(&p).zip(&c) {
                 let bits =
                     |r: &gad::serve::QueryResult| -> Vec<u32> { r.probs.iter().map(|p| p.to_bits()).collect() };
                 if x.pred != z.pred || bits(x) != bits(z) {
@@ -240,10 +248,40 @@ fn serve_answers_match_across_delta_modes_and_fresh_rebuild() {
                         bal.stats().nodes_migrated
                     ));
                 }
+                if v.pred != z.pred || bits(v) != bits(z) {
+                    return Err(format!(
+                        "round {round}: parallel serve pool diverged from fresh at node {}",
+                        v.node
+                    ));
+                }
+            }
+            // the parallel pool must also keep the *counters* of the
+            // sequential incremental server, exactly — same graph, same
+            // batches, same caches, just overlapped
+            let (si, sp) = (inc.stats(), par.stats());
+            if (si.queries, si.micro_batches, si.cache_hits, si.rows_recomputed)
+                != (sp.queries, sp.micro_batches, sp.cache_hits, sp.rows_recomputed)
+            {
+                return Err(format!(
+                    "round {round}: parallel counters drifted from sequential \
+                     (q {}/{}, mb {}/{}, hits {}/{}, rows {}/{})",
+                    si.queries,
+                    sp.queries,
+                    si.micro_batches,
+                    sp.micro_batches,
+                    si.cache_hits,
+                    sp.cache_hits,
+                    si.rows_recomputed,
+                    sp.rows_recomputed
+                ));
             }
             // retired ids must reject queries in every mode
             if let Some(&v) = d.removed_nodes.first() {
-                if inc.query(v).is_ok() || reb.query(v).is_ok() || bal.query(v).is_ok() {
+                if inc.query(v).is_ok()
+                    || reb.query(v).is_ok()
+                    || bal.query(v).is_ok()
+                    || par.query(v).is_ok()
+                {
                     return Err(format!("round {round}: retired node {v} still answers"));
                 }
             }

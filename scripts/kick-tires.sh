@@ -17,19 +17,20 @@ if [[ ! -x "$GAD" ]]; then
     exit 1
 fi
 
-echo "== kick-tires: fig11-13 (serve-bench, fast, tiny) =="
-"$GAD" serve-bench --dataset tiny --fast --out-dir "$OUT"
+echo "== kick-tires: fig11-13 (serve-bench, fast, tiny, 4-wide serve pool) =="
+"$GAD" serve-bench --dataset tiny --fast --serve-threads 4 --out-dir "$OUT"
 
-echo "== kick-tires: fig14 (load-bench, fast, tiny) =="
-"$GAD" load-bench --dataset tiny --fast --load-events 200 --rate-steps 3 --out-dir "$OUT"
+echo "== kick-tires: fig14 (load-bench, fast, tiny, 4-wide serve pool) =="
+"$GAD" load-bench --dataset tiny --fast --load-events 200 --rate-steps 3 \
+    --serve-threads 4 --out-dir "$OUT"
 
 echo "== kick-tires: checking artifacts =="
 status=0
 for f in \
-    fig11_serving_latency.md fig11_serving_latency.csv \
+    fig11_serving_latency.md fig11_serving_latency.csv fig11_serving_latency.json \
     fig12_churn.md fig12_churn.csv \
     fig13_rebalance.md fig13_rebalance.csv \
-    fig14_load_knee.md fig14_load_knee.csv; do
+    fig14_load_knee.md fig14_load_knee.csv fig14_load_knee.json; do
     if [[ ! -s "$OUT/$f" ]]; then
         echo "MISSING or empty: $OUT/$f" >&2
         status=1
@@ -38,8 +39,21 @@ for f in \
     fi
 done
 
+# machine-readable perf trajectory: stable BENCH_* names at the repo
+# root of $OUT, one json per tracked figure
+cp "$OUT/fig11_serving_latency.json" "$OUT/BENCH_fig11.json"
+cp "$OUT/fig14_load_knee.json" "$OUT/BENCH_fig14.json"
+for f in BENCH_fig11.json BENCH_fig14.json; do
+    if [[ ! -s "$OUT/$f" ]]; then
+        echo "MISSING or empty: $OUT/$f" >&2
+        status=1
+    else
+        echo "ok: $OUT/$f"
+    fi
+done
+
 if [[ $status -ne 0 ]]; then
     echo "kick-tires FAILED" >&2
     exit $status
 fi
-echo "kick-tires passed: fig11-14 artifacts present in $OUT/"
+echo "kick-tires passed: fig11-14 artifacts (+BENCH_*.json) present in $OUT/"
