@@ -1,0 +1,69 @@
+//! Bench: Fig 15 (ours) — where the time actually goes. Runs one
+//! small train → serve-burst → open-loop-replay pass with the global
+//! tracer on the whole time, then folds the drained spans into the
+//! per-phase profile: count, total time, tier share, p50/p99 from the
+//! deterministic log-bucketed histogram, bytes where spans carry them.
+//! Wall rows come from RAII scopes; virtual rows are the load
+//! generator's virtual-time annotations (queueing vs service vs
+//! delta-barrier drains).
+//!
+//! Output: CSV `tier,phase,clock,count,total_ms,share,mean_us,p50_us,
+//! p99_us,max_us,bytes`.
+
+use gad::coordinator::{train_gad, TrainConfig};
+use gad::datasets::SyntheticSpec;
+use gad::loadgen::{
+    generate_schedule, run_open_loop, SimOptions, SloBatchScheduler, WorkloadConfig,
+};
+use gad::obs::{trace, MetricsRegistry, ProfileReport};
+use gad::serve::{ServeConfig, Server};
+
+fn main() {
+    let ds = SyntheticSpec::tiny().generate(42);
+    trace::enable();
+
+    let cfg = TrainConfig {
+        partitions: 8,
+        workers: 4,
+        layers: 2,
+        hidden: 48,
+        lr: 0.02,
+        epochs: 12,
+        seed: 42,
+        ..Default::default()
+    };
+    let report = train_gad(&ds, &cfg).expect("training run");
+    let params = report.final_params.clone().expect("trained parameters");
+    eprintln!("trained: acc {:.4}; serve burst + replay...", report.test_accuracy);
+
+    let scfg = ServeConfig { shards: 4, seed: 42, ..Default::default() };
+    let mut srv = Server::for_dataset(&ds, params, scfg).expect("server build");
+    let nodes: Vec<u32> = (0..256u32).map(|i| i % ds.num_nodes().max(1) as u32).collect();
+    for chunk in nodes.chunks(32) {
+        srv.query_batch(chunk).expect("query burst");
+    }
+
+    let wcfg = WorkloadConfig { events: 600, seed: 42, ..Default::default() };
+    let schedule = generate_schedule(&ds.graph, ds.feature_dim(), &wcfg);
+    let mut sched = SloBatchScheduler::new(srv.num_shards(), 16, 1_250);
+    let sim = run_open_loop(&mut srv, &schedule, &mut sched, &SimOptions::default())
+        .expect("open-loop replay");
+
+    trace::disable();
+    let t = trace::drain();
+    let mut reg = MetricsRegistry::new();
+    reg.record_train_report("train", &report);
+    reg.record_serve_stats("serve", &srv.stats());
+    reg.record_sim_result("loadgen", &sim);
+    let prof = ProfileReport::from_trace("tiny", &t, reg);
+
+    print!("{}", prof.to_csv());
+    let tiers = t.tiers();
+    eprintln!(
+        "{} spans across tiers {:?}; {} phase rows, {} metrics",
+        prof.span_count,
+        tiers,
+        prof.rows.len(),
+        prof.registry.len(),
+    );
+}

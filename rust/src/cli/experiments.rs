@@ -57,6 +57,35 @@ fn config(args: &Args, opts: &RunOpts, dataset: &str) -> Result<TrainConfig> {
 }
 
 // --------------------------------------------------------------------
+// --trace wiring (obs/)
+// --------------------------------------------------------------------
+
+/// Arm the global tracer when `--trace FILE` is present. Tracing is
+/// annotation-only — enabling it never changes answers or counters
+/// (pinned by tests/integration_obs.rs) — so it is safe to thread
+/// through any experiment driver.
+fn trace_begin(args: &Args) -> Option<String> {
+    let path = args.get("trace", "");
+    if path.is_empty() {
+        return None;
+    }
+    crate::obs::trace::enable();
+    Some(path.to_string())
+}
+
+/// Drain the tracer into Chrome trace-event JSON at `path` (no-op when
+/// [`trace_begin`] saw no flag). Load the file in Perfetto or
+/// chrome://tracing.
+fn trace_finish(path: Option<String>) -> Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    crate::obs::trace::disable();
+    let t = crate::obs::trace::drain();
+    write_result_file(&path, &t.to_chrome_json())?;
+    eprintln!("trace: {} spans -> {path}", t.events.len());
+    Ok(())
+}
+
+// --------------------------------------------------------------------
 // Table 1
 // --------------------------------------------------------------------
 
@@ -164,7 +193,9 @@ pub fn train_once(args: &Args, opts: &RunOpts) -> Result<()> {
     let method: Method = args.get("method", "gad").parse().map_err(|e: String| anyhow!(e))?;
     let ds = load(name, opts)?;
     let cfg = config(args, opts, name)?;
+    let trace = trace_begin(args);
     let r = train_method(&ds, method, &cfg, paper_batch_size(name))?;
+    trace_finish(trace)?;
     print_report(name, method.label(), &r);
     Ok(())
 }
@@ -544,6 +575,7 @@ pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
 
     let name = args.get("dataset", "cora");
     let ds = load(name, opts)?;
+    let trace = trace_begin(args);
 
     // 1. train (short by default — serving latency does not depend on
     //    model quality) and harvest the trained parameters
@@ -614,6 +646,7 @@ pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
     println!("{md}");
     write_result_file(&format!("{}/fig12_churn.md", opts.out_dir), &md)?;
     write_result_file(&format!("{}/fig12_churn.csv", opts.out_dir), &crep.to_csv())?;
+    write_result_file(&format!("{}/fig12_churn.json", opts.out_dir), &crep.to_json())?;
 
     // 5. skewed-insert scenario: imbalance ratio + p99 per round, the
     //    online rebalancer on vs off (Fig 13)
@@ -638,6 +671,8 @@ pub fn serve_bench(args: &Args, opts: &RunOpts) -> Result<()> {
     println!("{md}");
     write_result_file(&format!("{}/fig13_rebalance.md", opts.out_dir), &md)?;
     write_result_file(&format!("{}/fig13_rebalance.csv", opts.out_dir), &rrep.to_csv())?;
+    write_result_file(&format!("{}/fig13_rebalance.json", opts.out_dir), &rrep.to_json())?;
+    trace_finish(trace)?;
     Ok(())
 }
 
@@ -654,6 +689,7 @@ pub fn load_bench(args: &Args, opts: &RunOpts) -> Result<()> {
 
     let name = args.get("dataset", "cora");
     let ds = load(name, opts)?;
+    let trace = trace_begin(args);
 
     let mut cfg = config(args, opts, name)?;
     cfg.epochs = opts.epochs(args.get_usize("epochs", 20)?);
@@ -689,6 +725,95 @@ pub fn load_bench(args: &Args, opts: &RunOpts) -> Result<()> {
     write_result_file(&format!("{}/fig14_load_knee.md", opts.out_dir), &md)?;
     write_result_file(&format!("{}/fig14_load_knee.csv", opts.out_dir), &rep.to_csv())?;
     write_result_file(&format!("{}/fig14_load_knee.json", opts.out_dir), &rep.to_json())?;
+    trace_finish(trace)?;
+    Ok(())
+}
+
+// --------------------------------------------------------------------
+// Fig 15 (ours): per-phase profile across train, serve, and loadgen
+// --------------------------------------------------------------------
+
+/// One small train → serve-burst → open-loop-replay pass with the
+/// tracer on the whole time, folded into a per-phase time/byte table
+/// plus one [`MetricsRegistry`] snapshot spanning all three tiers
+/// (Fig 15). `--trace FILE` additionally keeps the raw Chrome trace.
+///
+/// [`MetricsRegistry`]: crate::obs::MetricsRegistry
+pub fn profile(args: &Args, opts: &RunOpts) -> Result<()> {
+    use crate::loadgen::{
+        generate_schedule, run_open_loop, SimOptions, SloBatchScheduler, WorkloadConfig,
+    };
+    use crate::obs::{MetricsRegistry, ProfileReport};
+    use crate::serve::{ServeConfig, Server};
+
+    let name = args.get("dataset", "cora");
+    let ds = load(name, opts)?;
+    let trace_path = args.get("trace", "").to_string();
+
+    crate::obs::trace::enable();
+
+    // 1. train tier (epoch/round/consensus spans); short runs suffice —
+    //    the profile wants phase shape, not model quality
+    let mut cfg = config(args, opts, name)?;
+    cfg.epochs = opts.epochs(args.get_usize("epochs", 10)?);
+    eprintln!("profiling {name}: training for {} epochs...", cfg.epochs);
+    let report = train_gad(&ds, &cfg)?;
+    let params = report
+        .final_params
+        .clone()
+        .ok_or_else(|| anyhow!("training returned no parameters"))?;
+
+    // 2. serve tier: a direct query burst (gather / GEMM / cache spans)
+    let scfg = ServeConfig {
+        shards: args.get_usize("shards", 4)?,
+        serve_threads: args.get_usize("serve-threads", 1)?,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let mut srv = Server::for_dataset(&ds, params, scfg)?;
+    let queries = args.get_usize("queries", if opts.fast { 128 } else { 512 })?;
+    let batch = args.get_usize("batch", 32)?.max(1);
+    let nodes: Vec<u32> =
+        (0..queries as u32).map(|i| i % ds.num_nodes().max(1) as u32).collect();
+    for chunk in nodes.chunks(batch) {
+        srv.query_batch(chunk)?;
+    }
+
+    // 3. loadgen tier: one open-loop replay (virtual-time spans)
+    let wcfg = WorkloadConfig {
+        rate_qps: args.get_f64("rate-qps", 2000.0)?,
+        events: args.get_usize("load-events", if opts.fast { 200 } else { 1000 })?,
+        zipf_s: args.get_f64("zipf-s", 0.9)?,
+        churn_frac: args.get_f64("churn-frac", 0.02)?,
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let schedule = generate_schedule(&ds.graph, ds.feature_dim(), &wcfg);
+    let slo_us = (args.get_f64("slo-ms", 5.0)? * 1e3) as u64;
+    let mut sched =
+        SloBatchScheduler::new(srv.num_shards(), args.get_usize("batch-k", 16)?, slo_us / 4);
+    let sim =
+        run_open_loop(&mut srv, &schedule, &mut sched, &SimOptions { slo_us, ..Default::default() })?;
+
+    crate::obs::trace::disable();
+    let trace = crate::obs::trace::drain();
+
+    // 4. fold: one registry over all three tiers + the phase table
+    let mut reg = MetricsRegistry::new();
+    reg.record_train_report("train", &report);
+    reg.record_serve_stats("serve", &srv.stats());
+    reg.record_sim_result("loadgen", &sim);
+    let prof = ProfileReport::from_trace(name, &trace, reg);
+
+    let md = prof.to_markdown();
+    println!("{md}");
+    write_result_file(&format!("{}/fig15_profile.md", opts.out_dir), &md)?;
+    write_result_file(&format!("{}/fig15_profile.csv", opts.out_dir), &prof.to_csv())?;
+    write_result_file(&format!("{}/fig15_profile.json", opts.out_dir), &prof.to_json())?;
+    if !trace_path.is_empty() {
+        write_result_file(&trace_path, &trace.to_chrome_json())?;
+        eprintln!("trace: {} spans -> {trace_path}", trace.events.len());
+    }
     Ok(())
 }
 
@@ -758,5 +883,6 @@ pub fn run_all(args: &Args, opts: &RunOpts) -> Result<()> {
     fig9_consensus(args, opts)?;
     serve_bench(args, opts)?;
     load_bench(args, opts)?;
+    profile(args, opts)?;
     Ok(())
 }

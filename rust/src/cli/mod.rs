@@ -135,6 +135,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "fig9" => experiments::fig9_consensus(&args, &opts),
         "serve-bench" => experiments::serve_bench(&args, &opts),
         "load-bench" => experiments::load_bench(&args, &opts),
+        "profile" => experiments::profile(&args, &opts),
         "ablate" => experiments::ablation(&args, &opts),
         "all" => experiments::run_all(&args, &opts),
         "" | "help" => {
@@ -172,6 +173,9 @@ commands
               offered rate, fifo vs SLO-aware micro-batch scheduling,
               goodput + latency percentiles until the knee (Fig 14,
               ours)
+  profile     train -> serve burst -> open-loop replay with the tracer
+              on; per-phase time/byte table + unified counter snapshot
+              across all three tiers (Fig 15, ours)
   ablate      design-choice ablations (+ crash-fault run)
   all         everything above into --out-dir
 
@@ -183,6 +187,11 @@ common flags
   --consensus <plain|weighted|async> --no-augment
   --fast         8x-smaller datasets, 5x fewer epochs
   --out-dir DIR  where results/*.md and *.csv land (default results)
+  --trace FILE   (train / serve-bench / load-bench / profile) record
+                 scoped spans and write Chrome trace-event JSON to
+                 FILE on exit — open in Perfetto or chrome://tracing.
+                 Annotation only: answers and counters are bit-
+                 identical with tracing on or off
 
 async consensus flags (with --consensus async)
   --staleness N  hard staleness bound s: older gradients are dropped
@@ -233,6 +242,13 @@ load-bench flags
   --serve-threads N  serve-pool width for the headline rows; > 1 also
                  replays every step at width 1 for the wall-clock
                  speedup column. 1 = sequential, 0 = auto (default 1)
+
+profile flags
+  --queries N    serve-burst queries (default 512; 128 with --fast)
+  --load-events N  replay arrivals (default 1000; 200 with --fast)
+  --rate-qps F   replay offered rate in QPS (default 2000)
+  plus the load-bench --shards/--slo-ms/--batch-k/--zipf-s/
+  --churn-frac and training flags; writes fig15_profile.{md,csv,json}
 ";
 
 #[cfg(test)]

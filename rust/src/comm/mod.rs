@@ -108,7 +108,7 @@ impl CommLedger {
 }
 
 /// Snapshot for reports.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommStats {
     pub feature_bytes: u64,
     pub gradient_bytes: u64,

@@ -64,6 +64,7 @@ fn resync_worker(
     shadow_opt: &dyn Optimizer,
     version: u64,
 ) -> Result<()> {
+    let _span = crate::span!("train.resync", worker = worker, version = version);
     w.send(
         worker,
         WorkerCommand::LoadParams {
@@ -147,6 +148,7 @@ pub(super) fn run_async_epochs(
     let mut pending: Vec<Contribution> = Vec::new();
 
     for epoch in 0..cfg.epochs {
+        let _espan = crate::span!("train.epoch", epoch = epoch);
         st.epochs_run = epoch + 1;
 
         // elastic membership for this epoch
@@ -241,6 +243,8 @@ pub(super) fn run_async_epochs(
                 continue;
             }
 
+            let _rspan =
+                crate::span!("train.async_round", round = rounds_done, version = version);
             // deterministic float order: worker id, then version
             pending.sort_by_key(|p| (p.worker, p.version));
             let contributors = std::mem::take(&mut pending);

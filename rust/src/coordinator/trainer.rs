@@ -321,7 +321,10 @@ pub fn train_with_plans(
             intra_threads,
         };
         let tx = result_tx.clone();
-        handles.push(std::thread::spawn(move || worker_main(plan, cmd_rx, tx)));
+        handles.push(std::thread::spawn(move || {
+            crate::threads::label_current_with(|| format!("trainer-worker-{w}"));
+            worker_main(plan, cmd_rx, tx)
+        }));
     }
     drop(result_tx);
 
@@ -426,6 +429,7 @@ fn run_sync_epochs(w: &Wiring<'_>, st: &mut LoopState) -> Result<()> {
     let cfg = w.cfg;
     let workers = w.workers();
     for epoch in 0..cfg.epochs {
+        let _espan = crate::span!("train.epoch", epoch = epoch);
         st.epochs_run = epoch + 1;
         let mut loss_sum = 0.0f64;
         let mut loss_count = 0usize;
@@ -446,6 +450,7 @@ fn run_sync_epochs(w: &Wiring<'_>, st: &mut LoopState) -> Result<()> {
         }
 
         for round in 0..w.rounds_per_epoch {
+            let _rspan = crate::span!("train.round", epoch = epoch, round = round);
             for i in 0..workers {
                 if !alive[i] {
                     continue;

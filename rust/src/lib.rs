@@ -65,6 +65,7 @@ pub mod graph;
 pub mod loadgen;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod partition;
 pub mod proptest_util;
 pub mod rng;
@@ -86,6 +87,7 @@ pub mod prelude {
         FifoScheduler, Scheduler, SloBatchScheduler, WorkloadConfig,
     };
     pub use crate::model::GcnParams;
+    pub use crate::obs::{LogHistogram, MetricsRegistry, ProfileReport};
     pub use crate::partition::{PartitionConfig, Partitioning};
     pub use crate::rng::Rng;
     pub use crate::serve::{DeltaMode, GraphDelta, HaloPolicy, NewNode, ServeConfig, Server};

@@ -22,6 +22,7 @@ use super::scheduler::{FifoScheduler, Scheduler, SloBatchScheduler};
 use super::sim::{run_open_loop, SimOptions, SimResult};
 use crate::datasets::Dataset;
 use crate::model::GcnParams;
+use crate::obs::hist::percentile;
 use crate::serve::{ServeConfig, Server};
 use anyhow::Result;
 use std::fmt::Write as _;
@@ -325,16 +326,6 @@ impl LoadBenchReport {
         s.push_str("  ]\n}\n");
         s
     }
-}
-
-/// Nearest-rank percentile over an ascending slice (same rule the
-/// fig11 latency tables use).
-fn percentile(sorted_us: &[f64], p: f64) -> f64 {
-    if sorted_us.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted_us.len() - 1) as f64 * p).round() as usize;
-    sorted_us[idx.min(sorted_us.len() - 1)]
 }
 
 fn build_server(

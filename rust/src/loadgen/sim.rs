@@ -123,9 +123,16 @@ pub fn run_open_loop(
     opts: &SimOptions,
 ) -> Result<SimResult> {
     let slots = srv.serve_parallelism().max(1);
+    // wall-clock scope over the whole replay; the virtual_span calls
+    // below annotate the *virtual* timeline (queueing vs service vs
+    // barrier drains) on their own trace lane. Annotation only — the
+    // tracer never feeds back into the clock or the answers.
+    let _loop_span =
+        crate::span!("loadgen.run_open_loop", events = schedule.len(), slots = slots);
     let mut now_us: u64 = 0;
     let mut idx = 0usize;
     let mut armed_delta: Option<&crate::serve::GraphDelta> = None;
+    let mut armed_at_us: u64 = 0;
     let mut outcomes: Vec<RequestOutcome> = Vec::new();
     let mut deltas_applied = 0usize;
     let mut flushes = 0usize;
@@ -159,7 +166,10 @@ pub fn run_open_loop(
                     depth_samples += 1;
                     srv.record_queue_depth(depth);
                 }
-                ArrivalKind::Delta(d) => armed_delta = Some(d),
+                ArrivalKind::Delta(d) => {
+                    armed_delta = Some(d);
+                    armed_at_us = schedule[idx].at_us;
+                }
             }
             idx += 1;
         }
@@ -196,9 +206,23 @@ pub fn run_open_loop(
             let flushed = srv.flush_shard_batches(&batches)?;
             for (batch, f) in wave.iter().zip(flushed) {
                 let complete_us = now_us + f.service_us;
+                crate::obs::trace::virtual_span(
+                    "loadgen.service",
+                    batch[0].shard as u64,
+                    now_us,
+                    f.service_us,
+                    &[("shard", batch[0].shard as i64), ("batch", batch.len() as i64)],
+                );
                 for (p, r) in batch.iter().zip(f.results) {
                     let within = complete_us <= p.deadline_us;
                     srv.record_slo_outcome(within);
+                    crate::obs::trace::virtual_span(
+                        "loadgen.queueing",
+                        100 + batch[0].shard as u64,
+                        p.arrival_us,
+                        now_us.saturating_sub(p.arrival_us),
+                        &[("id", p.id as i64), ("shard", batch[0].shard as i64)],
+                    );
                     outcomes.push(RequestOutcome {
                         id: p.id,
                         node: p.node,
@@ -232,6 +256,16 @@ pub fn run_open_loop(
             srv.apply_delta(d)?;
             now_us += (wall.elapsed().as_secs_f64() * 1e6).ceil().max(1.0) as u64;
             deltas_applied += 1;
+            // the barrier drain spans from when the delta arrived (and
+            // admission stopped) to when its apply finished — the full
+            // window the mutation held the server
+            crate::obs::trace::virtual_span(
+                "loadgen.delta_barrier",
+                999,
+                armed_at_us,
+                now_us.saturating_sub(armed_at_us),
+                &[("delta", deltas_applied as i64)],
+            );
             continue;
         }
         // 4. idle at `now`: jump the clock to the next event strictly

@@ -1,0 +1,264 @@
+//! Shared latency statistics: the nearest-rank percentile every bench
+//! used to carry its own copy of, and a deterministic log-bucketed
+//! histogram for streaming aggregation.
+//!
+//! Before this module, `serve/bench.rs` and `loadgen/report.rs` each
+//! had a byte-identical private `percentile()` over a sorted `Vec` —
+//! now both call [`percentile`] here (old-vs-new equality is pinned in
+//! the tests below). The sorted-`Vec` path stays the *reporting*
+//! truth: exact, and fine at bench sample counts. [`LogHistogram`] is
+//! the streaming counterpart for places that cannot afford to retain
+//! every sample (the profile command, long traces): pure integer
+//! bucketing — power-of-two edges, so `record` is a `leading_zeros`
+//! and quantiles are reproducible on every platform — at the price of
+//! a ≤ 2× relative quantile error (one bucket's width).
+
+/// Nearest-rank percentile over an **ascending-sorted** slice;
+/// `p` in `[0, 1]`. Empty input yields 0 (benches report 0 for "no
+/// samples"). This is bit-for-bit the logic the serving and loadgen
+/// benches always used.
+pub fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * p).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+/// Sort samples ascending for [`percentile`] (total order; NaN-free
+/// inputs by construction — latencies come from clocks and counters).
+pub fn sort_samples(samples: &mut [f64]) {
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("latency samples are never NaN"));
+}
+
+/// Number of power-of-two buckets: bucket 0 holds exactly 0, bucket
+/// `i ≥ 1` holds `[2^(i-1), 2^i)`. 64 buckets cover every `u64`.
+pub const BUCKETS: usize = 65;
+
+/// Deterministic log₂-bucketed histogram of non-negative integer
+/// samples (µs in this crate). Merge-able, allocation-free recording,
+/// identical results on every platform.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram { counts: [0; BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+
+    /// Bucket index for a value: 0 for 0, else `1 + floor(log2 v)`.
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Inclusive upper edge of bucket `i` (`0`, `1`, `3`, `7`, …,
+    /// `2^i - 1`): the value [`quantile`](Self::quantile) reports for
+    /// samples landing in that bucket.
+    #[inline]
+    pub fn bucket_hi(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Inclusive lower edge of bucket `i`.
+    #[inline]
+    pub fn bucket_lo(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            1u64 << (i - 1)
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Exact maximum recorded value (tracked outside the buckets).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank quantile (`q` in `[0, 1]`), reported as the upper
+    /// edge of the bucket holding that rank — deterministic, within 2×
+    /// of the exact sample. The rank rule mirrors [`percentile`] so
+    /// the two agree on which sample they aim at.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count - 1) as f64 * q).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen > rank {
+                return Self::bucket_hi(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Non-empty buckets as `(lo, hi, count)`, ascending.
+    pub fn nonzero_buckets(&self) -> impl Iterator<Item = (u64, u64, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (Self::bucket_lo(i), Self::bucket_hi(i), c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exact function `serve/bench.rs` and `loadgen/report.rs`
+    /// carried privately before the extraction — kept here verbatim as
+    /// the oracle pinning old-vs-new equality.
+    fn percentile_old(sorted_us: &[f64], p: f64) -> f64 {
+        if sorted_us.is_empty() {
+            return 0.0;
+        }
+        let idx = ((sorted_us.len() - 1) as f64 * p).round() as usize;
+        sorted_us[idx.min(sorted_us.len() - 1)]
+    }
+
+    #[test]
+    fn percentile_matches_the_old_private_copies() {
+        // deterministic pseudo-random latencies, several sizes
+        // including the degenerate ones
+        for n in [0usize, 1, 2, 3, 7, 100, 1001] {
+            let mut xs: Vec<f64> = (0..n)
+                .map(|i| {
+                    let h = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17);
+                    (h % 1_000_000) as f64 / 10.0
+                })
+                .collect();
+            sort_samples(&mut xs);
+            for p in [0.0, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                assert_eq!(
+                    percentile(&xs, p),
+                    percentile_old(&xs, p),
+                    "n={n} p={p}: extraction changed the reported percentile"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[42.0], 0.0), 42.0);
+        assert_eq!(percentile(&[42.0], 1.0), 42.0);
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0); // nearest rank rounds up here
+    }
+
+    #[test]
+    fn bucket_edges_are_powers_of_two() {
+        assert_eq!(LogHistogram::bucket_of(0), 0);
+        assert_eq!(LogHistogram::bucket_of(1), 1);
+        assert_eq!(LogHistogram::bucket_of(2), 2);
+        assert_eq!(LogHistogram::bucket_of(3), 2);
+        assert_eq!(LogHistogram::bucket_of(4), 3);
+        assert_eq!(LogHistogram::bucket_of(7), 3);
+        assert_eq!(LogHistogram::bucket_of(8), 4);
+        assert_eq!(LogHistogram::bucket_of(u64::MAX), 64);
+        for i in 1..64usize {
+            // every bucket's own edges map back into it
+            assert_eq!(LogHistogram::bucket_of(LogHistogram::bucket_lo(i)), i, "lo edge of {i}");
+            assert_eq!(LogHistogram::bucket_of(LogHistogram::bucket_hi(i)), i, "hi edge of {i}");
+            assert!(LogHistogram::bucket_lo(i) <= LogHistogram::bucket_hi(i));
+        }
+    }
+
+    #[test]
+    fn histogram_counts_mean_max_quantiles() {
+        let mut h = LogHistogram::new();
+        for v in [0u64, 1, 2, 3, 4, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum(), 1110);
+        assert_eq!(h.max(), 1000);
+        assert!((h.mean() - 1110.0 / 7.0).abs() < 1e-9);
+        assert_eq!(h.quantile(0.0), 0, "rank 0 is the zero sample");
+        assert_eq!(h.quantile(1.0), 1000, "top quantile is clamped to the exact max");
+        // quantiles are monotone in q
+        let qs: Vec<u64> = [0.0, 0.25, 0.5, 0.75, 0.9, 1.0].iter().map(|&q| h.quantile(q)).collect();
+        assert!(qs.windows(2).all(|w| w[0] <= w[1]), "quantiles must be monotone: {qs:?}");
+        // within the log-bucket guarantee: upper edge of the true
+        // sample's bucket
+        let h50 = h.quantile(0.5);
+        assert!(h50 >= 3 && h50 <= 7, "median sample is 3, bucket hi is 3..=7, got {h50}");
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_recording() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut both = LogHistogram::new();
+        for i in 0..200u64 {
+            let v = i * 37 % 4096;
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.sum(), both.sum());
+        assert_eq!(a.max(), both.max());
+        for q in [0.1, 0.5, 0.99] {
+            assert_eq!(a.quantile(q), both.quantile(q));
+        }
+        let av: Vec<_> = a.nonzero_buckets().collect();
+        let bv: Vec<_> = both.nonzero_buckets().collect();
+        assert_eq!(av, bv);
+    }
+}

@@ -1,0 +1,38 @@
+//! Observability: deterministic tracing + unified metrics.
+//!
+//! Three pieces, all zero-dependency and registry-free like the rest
+//! of the crate:
+//!
+//! * [`trace`] — a process-global tracer with RAII scoped spans
+//!   (`crate::span!("serve.gemm", shard = 3)`), cross-thread parent
+//!   links for the scoped serve pool, loadgen **virtual-time** spans,
+//!   and Chrome trace-event JSON export (Perfetto /
+//!   `chrome://tracing`). Disabled (the default) a span site costs one
+//!   relaxed atomic load; enabled or not, spans are **annotation
+//!   only** — the determinism contract (see [`crate::threads`]) says
+//!   tracing may change wall-clock, never answers, counters, or
+//!   replay bytes, and the obs integration tests pin exactly that at
+//!   serve widths 1 and 4.
+//! * [`hist`] — the shared nearest-rank [`percentile`](hist::percentile)
+//!   the serving and loadgen benches previously duplicated, plus a
+//!   deterministic log₂-bucketed [`LogHistogram`](hist::LogHistogram)
+//!   for streaming latency aggregation.
+//! * [`registry`] — [`MetricsRegistry`](registry::MetricsRegistry):
+//!   one named, typed (counter/gauge) export surface snapshotting the
+//!   counters the tiers already keep (`ServeStats`, `CommStats`,
+//!   `TrainReport`, `SimResult`) with md/csv/json emitters.
+//!
+//! [`profile`] combines all three into the fig15 per-phase time/byte
+//! breakdown behind the `profile` CLI command; `--trace out/trace.json`
+//! on `train` / `serve-bench` / `load-bench` dumps the raw span
+//! timeline instead.
+
+pub mod hist;
+pub mod profile;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{percentile, sort_samples, LogHistogram};
+pub use profile::{PhaseRow, ProfileReport};
+pub use registry::{Metric, MetricValue, MetricsRegistry};
+pub use trace::{SpanGuard, SpanRecord, Trace};

@@ -1,0 +1,294 @@
+//! Fig 15 (ours): where the time and bytes actually go.
+//!
+//! The paper's headline numbers — 50% communication reduction, 2×
+//! convergence speedup — are attribution claims, and until now the
+//! repo could only restate them as end-of-run aggregates. This report
+//! folds a drained [`Trace`] into a per-phase breakdown (count, total
+//! time, share of its tier, p50/p99 from a [`LogHistogram`] over span
+//! durations, bytes where spans carry a `bytes` arg) and appends the
+//! [`MetricsRegistry`] snapshot, in the same md/csv/json triple every
+//! fig11–14 bench emits. The `profile` CLI command drives one small
+//! train → serve → open-loop-replay pass with tracing on and renders
+//! the result as `fig15_profile.{md,csv,json}`.
+
+use crate::metrics::MarkdownTable;
+use crate::obs::hist::LogHistogram;
+use crate::obs::registry::MetricsRegistry;
+use crate::obs::trace::Trace;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Aggregate of every span sharing one `(clock, tier, phase)`.
+#[derive(Clone, Debug)]
+pub struct PhaseRow {
+    pub tier: String,
+    pub phase: String,
+    /// `"wall"` or `"virtual"` (loadgen virtual-time spans).
+    pub clock: &'static str,
+    pub count: u64,
+    pub total_ms: f64,
+    /// This phase's fraction of its tier's total on the same clock.
+    pub share: f64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: f64,
+    /// Sum of the spans' `bytes` args (0 when none carry one).
+    pub bytes: u64,
+}
+
+/// The fig15 report: phase table + metrics snapshot.
+#[derive(Clone, Debug)]
+pub struct ProfileReport {
+    pub dataset: String,
+    pub rows: Vec<PhaseRow>,
+    pub registry: MetricsRegistry,
+    /// Spans aggregated (before the [`MAX_EVENTS`] cap's drops).
+    ///
+    /// [`MAX_EVENTS`]: crate::obs::trace::MAX_EVENTS
+    pub span_count: usize,
+    pub dropped_spans: u64,
+}
+
+fn tier_rank(t: &str) -> usize {
+    match t {
+        "train" => 0,
+        "serve" => 1,
+        "loadgen" => 2,
+        _ => 3,
+    }
+}
+
+impl ProfileReport {
+    /// Aggregate `trace` (grouping by clock/tier/phase) and attach the
+    /// already-populated `registry`.
+    pub fn from_trace(dataset: &str, trace: &Trace, registry: MetricsRegistry) -> ProfileReport {
+        struct Acc {
+            count: u64,
+            total_us: f64,
+            max_us: f64,
+            bytes: u64,
+            hist: LogHistogram,
+        }
+        let mut groups: BTreeMap<(bool, String, String), Acc> = BTreeMap::new();
+        for e in &trace.events {
+            let key = (e.virtual_clock, e.tier().to_string(), e.phase().to_string());
+            let acc = groups.entry(key).or_insert_with(|| Acc {
+                count: 0,
+                total_us: 0.0,
+                max_us: 0.0,
+                bytes: 0,
+                hist: LogHistogram::new(),
+            });
+            acc.count += 1;
+            acc.total_us += e.dur_us;
+            acc.max_us = acc.max_us.max(e.dur_us);
+            acc.hist.record(e.dur_us.max(0.0).round() as u64);
+            for (k, v) in &e.args {
+                if *k == "bytes" && *v > 0 {
+                    acc.bytes += *v as u64;
+                }
+            }
+        }
+        // tier totals per clock, for the share column
+        let mut tier_total: BTreeMap<(bool, String), f64> = BTreeMap::new();
+        for ((vc, tier, _), acc) in &groups {
+            *tier_total.entry((*vc, tier.clone())).or_insert(0.0) += acc.total_us;
+        }
+        let mut rows: Vec<PhaseRow> = groups
+            .into_iter()
+            .map(|((vc, tier, phase), acc)| {
+                let tt = tier_total.get(&(vc, tier.clone())).copied().unwrap_or(0.0);
+                PhaseRow {
+                    clock: if vc { "virtual" } else { "wall" },
+                    share: if tt > 0.0 { acc.total_us / tt } else { 0.0 },
+                    mean_us: if acc.count > 0 { acc.total_us / acc.count as f64 } else { 0.0 },
+                    p50_us: acc.hist.quantile(0.50),
+                    p99_us: acc.hist.quantile(0.99),
+                    max_us: acc.max_us,
+                    total_ms: acc.total_us / 1e3,
+                    count: acc.count,
+                    bytes: acc.bytes,
+                    tier,
+                    phase,
+                }
+            })
+            .collect();
+        rows.sort_by(|a, b| {
+            (a.clock == "virtual")
+                .cmp(&(b.clock == "virtual"))
+                .then(tier_rank(&a.tier).cmp(&tier_rank(&b.tier)))
+                .then(b.total_ms.partial_cmp(&a.total_ms).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.phase.cmp(&b.phase))
+        });
+        ProfileReport {
+            dataset: dataset.to_string(),
+            rows,
+            registry,
+            span_count: trace.events.len(),
+            dropped_spans: trace.dropped,
+        }
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!(
+            "# Fig 15 — per-phase time/byte profile ({})\n\n{} spans aggregated{}.\n\n\
+             Wall rows are RAII scopes (`Instant`); virtual rows are the load\n\
+             generator's virtual-time annotations. `share` is the phase's\n\
+             fraction of its tier's total on the same clock; p50/p99 come from\n\
+             the deterministic log-bucketed histogram (≤ 2× bucket error).\n\n",
+            self.dataset,
+            self.span_count,
+            if self.dropped_spans > 0 {
+                format!(" ({} dropped past the event cap)", self.dropped_spans)
+            } else {
+                String::new()
+            }
+        );
+        let mut t = MarkdownTable::new(&[
+            "tier", "phase", "clock", "count", "total_ms", "share", "mean_us", "p50_us", "p99_us",
+            "max_us", "bytes",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.tier.clone(),
+                r.phase.clone(),
+                r.clock.to_string(),
+                r.count.to_string(),
+                format!("{:.3}", r.total_ms),
+                format!("{:.1}%", r.share * 100.0),
+                format!("{:.1}", r.mean_us),
+                r.p50_us.to_string(),
+                r.p99_us.to_string(),
+                format!("{:.1}", r.max_us),
+                r.bytes.to_string(),
+            ]);
+        }
+        s.push_str(&t.render());
+        s.push_str("\n## Counter snapshot\n\n");
+        s.push_str(&self.registry.to_markdown());
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s =
+            String::from("tier,phase,clock,count,total_ms,share,mean_us,p50_us,p99_us,max_us,bytes\n");
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{:.3},{:.4},{:.1},{},{},{:.1},{}",
+                r.tier,
+                r.phase,
+                r.clock,
+                r.count,
+                r.total_ms,
+                r.share,
+                r.mean_us,
+                r.p50_us,
+                r.p99_us,
+                r.max_us,
+                r.bytes
+            );
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        let _ = writeln!(s, "  \"figure\": \"fig15_profile\",");
+        let _ = writeln!(s, "  \"dataset\": \"{}\",", self.dataset);
+        let _ = writeln!(s, "  \"span_count\": {},", self.span_count);
+        let _ = writeln!(s, "  \"dropped_spans\": {},", self.dropped_spans);
+        s.push_str("  \"phases\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"tier\": \"{}\", \"phase\": \"{}\", \"clock\": \"{}\", \"count\": {}, \
+                 \"total_ms\": {:.3}, \"share\": {:.4}, \"mean_us\": {:.1}, \"p50_us\": {}, \
+                 \"p99_us\": {}, \"max_us\": {:.1}, \"bytes\": {}}}",
+                r.tier,
+                r.phase,
+                r.clock,
+                r.count,
+                r.total_ms,
+                r.share,
+                r.mean_us,
+                r.p50_us,
+                r.p99_us,
+                r.max_us,
+                r.bytes
+            );
+            s.push_str(if i + 1 < self.rows.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ],\n  \"metrics\": ");
+        // registry.to_json() is a complete array; indent is cosmetic
+        s.push_str(&self.registry.to_json());
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::SpanRecord;
+
+    fn span(name: &'static str, vc: bool, dur_us: f64, bytes: Option<i64>) -> SpanRecord {
+        SpanRecord {
+            name,
+            id: 0,
+            parent: None,
+            tid: 1,
+            start_us: 0.0,
+            dur_us,
+            virtual_clock: vc,
+            args: bytes.map(|b| vec![("bytes", b)]).unwrap_or_default(),
+        }
+    }
+
+    #[test]
+    fn aggregates_by_phase_with_shares_and_bytes() {
+        let trace = Trace {
+            events: vec![
+                span("serve.gemm", false, 300.0, None),
+                span("serve.gemm", false, 100.0, None),
+                span("serve.gather", false, 100.0, Some(4096)),
+                span("train.epoch", false, 1000.0, None),
+                span("loadgen.service", true, 50.0, None),
+            ],
+            thread_labels: vec![],
+            dropped: 0,
+        };
+        let rep = ProfileReport::from_trace("tiny", &trace, MetricsRegistry::new());
+        assert_eq!(rep.span_count, 5);
+        assert_eq!(rep.rows.len(), 4);
+        // ordering: wall (train, serve by total desc) then virtual
+        assert_eq!(rep.rows[0].tier, "train");
+        assert_eq!(rep.rows[1].phase, "gemm");
+        assert_eq!(rep.rows[2].phase, "gather");
+        assert_eq!(rep.rows[3].clock, "virtual");
+        let gemm = &rep.rows[1];
+        assert_eq!(gemm.count, 2);
+        assert!((gemm.total_ms - 0.4).abs() < 1e-9);
+        assert!((gemm.share - 0.8).abs() < 1e-9, "gemm is 400 of serve's 500µs");
+        assert!((gemm.mean_us - 200.0).abs() < 1e-9);
+        let gather = &rep.rows[2];
+        assert_eq!(gather.bytes, 4096);
+        let md = rep.to_markdown();
+        assert!(md.contains("| serve | gemm | wall | 2 |"));
+        let csv = rep.to_csv();
+        assert_eq!(csv.lines().count(), 1 + 4);
+        let json = rep.to_json();
+        assert!(json.contains("\"figure\": \"fig15_profile\""));
+        assert!(json.contains("\"phase\": \"gemm\""));
+        assert!(json.contains("\"metrics\": ["));
+    }
+
+    #[test]
+    fn empty_trace_yields_empty_but_valid_report() {
+        let rep = ProfileReport::from_trace("tiny", &Trace::default(), MetricsRegistry::new());
+        assert!(rep.rows.is_empty());
+        assert!(rep.to_csv().lines().count() == 1);
+        assert!(rep.to_json().contains("\"phases\": [\n  ]"));
+    }
+}

@@ -1,0 +1,253 @@
+//! One named, typed export surface over the counters the subsystems
+//! already keep.
+//!
+//! Every tier ends a run holding its own snapshot struct —
+//! [`ServeStats`], [`CommStats`], [`TrainReport`], [`SimResult`] —
+//! each with its own field names and report formatting. The registry
+//! flattens them into `tier.counter` metrics in a deterministic
+//! (insertion) order with one of two types: **counter** (monotonic
+//! `u64`) or **gauge** (point-in-time `f64`). Snapshotting reads the
+//! existing structs; it adds no new accounting and touches no hot
+//! path, so it inherits the source counters' determinism guarantees
+//! unchanged.
+
+use crate::comm::CommStats;
+use crate::coordinator::TrainReport;
+use crate::loadgen::SimResult;
+use crate::metrics::MarkdownTable;
+use crate::obs::hist::LogHistogram;
+use crate::serve::ServeStats;
+use std::fmt::Write as _;
+
+/// A metric's typed value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MetricValue {
+    /// Monotonic count (events, bytes, rows).
+    Counter(u64),
+    /// Point-in-time measurement (ratios, seconds, means).
+    Gauge(f64),
+}
+
+/// One named metric.
+#[derive(Clone, Debug)]
+pub struct Metric {
+    pub name: String,
+    pub value: MetricValue,
+}
+
+/// Ordered collection of named metrics with md/csv/json emitters.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    metrics: Vec<Metric>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&mut self, name: impl Into<String>, v: u64) -> &mut Self {
+        self.metrics.push(Metric { name: name.into(), value: MetricValue::Counter(v) });
+        self
+    }
+
+    pub fn gauge(&mut self, name: impl Into<String>, v: f64) -> &mut Self {
+        self.metrics.push(Metric { name: name.into(), value: MetricValue::Gauge(v) });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    pub fn metrics(&self) -> &[Metric] {
+        &self.metrics
+    }
+
+    pub fn get(&self, name: &str) -> Option<MetricValue> {
+        self.metrics.iter().find(|m| m.name == name).map(|m| m.value)
+    }
+
+    /// Snapshot a [`CommStats`] under `prefix` (e.g. `serve.comm`).
+    pub fn record_comm(&mut self, prefix: &str, c: &CommStats) -> &mut Self {
+        self.counter(format!("{prefix}.feature_bytes"), c.feature_bytes)
+            .counter(format!("{prefix}.gradient_bytes"), c.gradient_bytes)
+            .counter(format!("{prefix}.resync_bytes"), c.resync_bytes)
+            .counter(format!("{prefix}.serving_bytes"), c.serving_bytes)
+            .counter(format!("{prefix}.rebalance_bytes"), c.rebalance_bytes)
+    }
+
+    /// Snapshot a full [`ServeStats`] (including its comm block).
+    pub fn record_serve_stats(&mut self, prefix: &str, s: &ServeStats) -> &mut Self {
+        self.counter(format!("{prefix}.queries"), s.queries)
+            .counter(format!("{prefix}.micro_batches"), s.micro_batches)
+            .counter(format!("{prefix}.cache_hits"), s.cache_hits)
+            .counter(format!("{prefix}.rows_recomputed"), s.rows_recomputed)
+            .counter(format!("{prefix}.rows_evicted"), s.rows_evicted)
+            .counter(format!("{prefix}.gather_rows_reused"), s.gather_rows_reused)
+            .counter(format!("{prefix}.gather_fetches_avoided"), s.gather_fetches_avoided)
+            .counter(format!("{prefix}.gather_rows_invalidated"), s.gather_rows_invalidated)
+            .counter(format!("{prefix}.slo_answers"), s.slo_answers)
+            .counter(format!("{prefix}.late_answers"), s.late_answers)
+            .counter(format!("{prefix}.queue_depth_max"), s.queue_depth_max)
+            .gauge(format!("{prefix}.queue_depth_mean"), s.queue_depth_mean)
+            .counter(format!("{prefix}.deltas_applied"), s.deltas_applied)
+            .counter(format!("{prefix}.nodes_added"), s.nodes_added)
+            .counter(format!("{prefix}.nodes_removed"), s.nodes_removed)
+            .counter(format!("{prefix}.shard_rebuilds"), s.shard_rebuilds)
+            .counter(format!("{prefix}.graph_compactions"), s.graph_compactions)
+            .counter(format!("{prefix}.compaction_threshold"), s.compaction_threshold as u64)
+            .counter(format!("{prefix}.rebalances"), s.rebalances)
+            .counter(format!("{prefix}.nodes_migrated"), s.nodes_migrated)
+            .gauge(format!("{prefix}.imbalance_ratio"), s.imbalance_ratio)
+            .counter(format!("{prefix}.graph_version"), s.graph_version)
+            .record_comm(&format!("{prefix}.comm"), &s.comm)
+    }
+
+    /// Snapshot the training-side counters of a [`TrainReport`].
+    pub fn record_train_report(&mut self, prefix: &str, r: &TrainReport) -> &mut Self {
+        self.gauge(format!("{prefix}.test_accuracy"), r.test_accuracy as f64)
+            .gauge(format!("{prefix}.val_accuracy"), r.val_accuracy as f64)
+            .gauge(format!("{prefix}.train_accuracy"), r.train_accuracy as f64)
+            .counter(format!("{prefix}.epochs_run"), r.epochs_run as u64)
+            .gauge(format!("{prefix}.wall_seconds"), r.wall_seconds)
+            .gauge(format!("{prefix}.time_to_converge_sec"), r.time_to_converge)
+            .counter(
+                format!("{prefix}.converged_epoch"),
+                r.converged_epoch.map(|e| e as u64).unwrap_or(0),
+            )
+            .gauge(format!("{prefix}.network_time_est_sec"), r.network_time_est_sec)
+            .gauge(format!("{prefix}.memory_mb_per_worker"), r.memory_mb_per_worker())
+            .counter(format!("{prefix}.edge_cut"), r.edge_cut as u64)
+            .counter(format!("{prefix}.replicas_total"), r.replicas_total as u64)
+            .counter(format!("{prefix}.workers"), r.workers as u64)
+            .counter(format!("{prefix}.max_staleness_applied"), r.max_staleness_applied as u64)
+            .counter(format!("{prefix}.resyncs"), r.resyncs)
+            .record_comm(&format!("{prefix}.comm"), &r.comm)
+    }
+
+    /// Snapshot an open-loop replay's [`SimResult`] aggregates.
+    pub fn record_sim_result(&mut self, prefix: &str, s: &SimResult) -> &mut Self {
+        self.counter(format!("{prefix}.answered"), s.outcomes.len() as u64)
+            .counter(format!("{prefix}.deltas_applied"), s.deltas_applied as u64)
+            .counter(format!("{prefix}.end_us"), s.end_us)
+            .counter(format!("{prefix}.flushes"), s.flushes as u64)
+            .counter(format!("{prefix}.queue_depth_max"), s.queue_depth_max as u64)
+            .gauge(format!("{prefix}.queue_depth_mean"), s.queue_depth_mean)
+            .counter(format!("{prefix}.peak_inflight"), s.peak_inflight as u64)
+    }
+
+    /// Summarise a [`LogHistogram`] as count/mean/p50/p99/p999/max.
+    pub fn record_histogram(&mut self, prefix: &str, h: &LogHistogram) -> &mut Self {
+        self.counter(format!("{prefix}.count"), h.count())
+            .gauge(format!("{prefix}.mean_us"), h.mean())
+            .counter(format!("{prefix}.p50_us"), h.quantile(0.50))
+            .counter(format!("{prefix}.p99_us"), h.quantile(0.99))
+            .counter(format!("{prefix}.p999_us"), h.quantile(0.999))
+            .counter(format!("{prefix}.max_us"), h.max())
+    }
+
+    /// `metric,type,value` rows.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("metric,type,value\n");
+        for m in &self.metrics {
+            match m.value {
+                MetricValue::Counter(v) => {
+                    let _ = writeln!(s, "{},counter,{}", m.name, v);
+                }
+                MetricValue::Gauge(v) => {
+                    let _ = writeln!(s, "{},gauge,{:.6}", m.name, v);
+                }
+            }
+        }
+        s
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut t = MarkdownTable::new(&["metric", "type", "value"]);
+        for m in &self.metrics {
+            match m.value {
+                MetricValue::Counter(v) => {
+                    t.row(vec![m.name.clone(), "counter".into(), v.to_string()]);
+                }
+                MetricValue::Gauge(v) => {
+                    t.row(vec![m.name.clone(), "gauge".into(), format!("{v:.6}")]);
+                }
+            }
+        }
+        t.render()
+    }
+
+    /// Hand-rolled JSON array (the crate is registry-free — no serde).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[\n");
+        for (i, m) in self.metrics.iter().enumerate() {
+            let sep = if i + 1 < self.metrics.len() { "," } else { "" };
+            match m.value {
+                MetricValue::Counter(v) => {
+                    let _ = writeln!(
+                        s,
+                        "  {{\"name\": \"{}\", \"type\": \"counter\", \"value\": {}}}{}",
+                        m.name, v, sep
+                    );
+                }
+                MetricValue::Gauge(v) => {
+                    let v = if v.is_finite() { v } else { 0.0 };
+                    let _ = writeln!(
+                        s,
+                        "  {{\"name\": \"{}\", \"type\": \"gauge\", \"value\": {:.6}}}{}",
+                        m.name, v, sep
+                    );
+                }
+            }
+        }
+        s.push_str("]\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_order_is_deterministic_and_values_survive() {
+        let stats = ServeStats { queries: 7, cache_hits: 3, ..Default::default() };
+        let mut a = MetricsRegistry::new();
+        a.record_serve_stats("serve", &stats);
+        let mut b = MetricsRegistry::new();
+        b.record_serve_stats("serve", &stats);
+        assert_eq!(a.to_csv(), b.to_csv(), "same snapshot must serialise identically");
+        assert_eq!(a.get("serve.queries"), Some(MetricValue::Counter(7)));
+        assert_eq!(a.get("serve.cache_hits"), Some(MetricValue::Counter(3)));
+        assert_eq!(a.get("serve.comm.serving_bytes"), Some(MetricValue::Counter(0)));
+        assert!(a.get("serve.nonexistent").is_none());
+    }
+
+    #[test]
+    fn emitters_cover_every_metric() {
+        let mut r = MetricsRegistry::new();
+        r.counter("x.count", 5).gauge("x.ratio", 0.25);
+        let mut h = LogHistogram::new();
+        h.record(10);
+        h.record(1000);
+        r.record_histogram("x.latency", &h);
+        assert_eq!(r.len(), 2 + 6);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("metric,type,value\n"));
+        assert_eq!(csv.lines().count(), 1 + r.len());
+        let md = r.to_markdown();
+        assert!(md.contains("| x.count | counter | 5 |"));
+        assert!(md.contains("| x.ratio | gauge | 0.250000 |"));
+        let json = r.to_json();
+        assert!(json.trim_start().starts_with('['));
+        assert!(json.contains("\"name\": \"x.latency.p99_us\""));
+        assert_eq!(json.matches("\"name\"").count(), r.len());
+        // last entry carries no trailing comma
+        assert!(!json.trim_end().trim_end_matches(']').trim_end().ends_with(','));
+    }
+}

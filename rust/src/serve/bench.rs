@@ -26,6 +26,7 @@
 use super::{DeltaMode, GraphDelta, HaloPolicy, NewNode, ServeConfig, Server};
 use crate::datasets::Dataset;
 use crate::model::GcnParams;
+use crate::obs::hist::percentile;
 use crate::rng::Rng;
 use anyhow::Result;
 use std::collections::HashSet;
@@ -191,15 +192,6 @@ impl ServingBenchReport {
         let par = self.row("parallel-sharded")?;
         (seq > 0.0).then(|| (par.serve_threads, par.qps / seq))
     }
-}
-
-/// Nearest-rank percentile over an ascending-sorted slice.
-fn percentile(sorted_us: &[f64], p: f64) -> f64 {
-    if sorted_us.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted_us.len() - 1) as f64 * p).round() as usize;
-    sorted_us[idx.min(sorted_us.len() - 1)]
 }
 
 fn run_mode(
@@ -414,6 +406,42 @@ impl ChurnBenchReport {
                 r.compactions
             );
         }
+        s
+    }
+
+    /// Machine-readable form for the perf trajectory
+    /// (`BENCH_fig12.json`). Hand-rolled — registry-free build, no
+    /// serde.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"bench\": \"fig12_churn\",\n");
+        let _ = writeln!(
+            s,
+            "  \"incremental_speedup\": {},",
+            self.incremental_speedup().map_or_else(|| "null".to_string(), |x| format!("{x:.3}"))
+        );
+        s.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"mode\": \"{}\", \"deltas_per_round\": {}, \"delta_mean_us\": {:.2}, \
+                 \"delta_p99_us\": {:.2}, \"deltas_per_sec\": {:.1}, \"query_p50_us\": {:.2}, \
+                 \"query_p99_us\": {:.2}, \"rows_invalidated\": {}, \"serving_bytes\": {}, \
+                 \"shard_rebuilds\": {}, \"compactions\": {}}}",
+                r.mode,
+                r.deltas_per_round,
+                r.delta_mean_us,
+                r.delta_p99_us,
+                r.deltas_per_sec,
+                r.query_p50_us,
+                r.query_p99_us,
+                r.rows_invalidated,
+                r.serving_bytes,
+                r.shard_rebuilds,
+                r.compactions
+            );
+            s.push_str(if i + 1 < self.rows.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
         s
     }
 
@@ -692,6 +720,32 @@ impl RebalanceBenchReport {
         }
         s
     }
+
+    /// Machine-readable form for the perf trajectory
+    /// (`BENCH_fig13.json`). Hand-rolled — registry-free build, no
+    /// serde.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"bench\": \"fig13_rebalance\",\n");
+        let _ = writeln!(s, "  \"ratio_threshold\": {:.3},", self.ratio_threshold);
+        let _ = writeln!(s, "  \"max_ratio_on\": {:.4},", self.max_ratio_on());
+        let _ = writeln!(s, "  \"max_ratio_off\": {:.4},", self.max_ratio_off());
+        let _ = writeln!(s, "  \"total_rebalance_bytes\": {},", self.total_rebalance_bytes());
+        let _ = writeln!(s, "  \"full_repartition_bytes\": {},", self.full_repartition_bytes);
+        s.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"mode\": \"{}\", \"round\": {}, \"imbalance_ratio\": {:.4}, \
+                 \"query_p50_us\": {:.2}, \"query_p99_us\": {:.2}, \"moves\": {}, \
+                 \"rebalance_bytes\": {}}}",
+                r.mode, r.round, r.imbalance_ratio, r.query_p50_us, r.query_p99_us, r.moves,
+                r.rebalance_bytes
+            );
+            s.push_str(if i + 1 < self.rows.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
 }
 
 /// Deterministic skewed-insert schedule: every inserted node attaches
@@ -907,6 +961,10 @@ mod tests {
         let md = rep.to_markdown();
         assert!(md.contains("rebalance-on") && md.contains("rebalance-off"));
         assert_eq!(rep.to_csv().lines().count(), 1 + 2 * cfg.rounds);
+        let json = rep.to_json();
+        assert!(json.contains("\"bench\": \"fig13_rebalance\""));
+        assert!(json.contains("\"mode\": \"rebalance-on\""));
+        assert_eq!(json.matches("\"round\":").count(), 2 * cfg.rounds);
     }
 
     #[test]
@@ -930,5 +988,9 @@ mod tests {
         assert!(rep.incremental_speedup().is_some());
         assert!(rep.to_markdown().contains("incremental"));
         assert_eq!(rep.to_csv().lines().count(), 5);
+        let json = rep.to_json();
+        assert!(json.contains("\"bench\": \"fig12_churn\""));
+        assert!(json.contains("\"mode\": \"incremental\"") && json.contains("\"mode\": \"rebuild\""));
+        assert_eq!(json.matches("\"deltas_per_round\":").count(), 4);
     }
 }

@@ -298,33 +298,39 @@ pub(crate) fn query_batch_gather(srv: &mut Server, nodes: &[u32]) -> Result<Vec<
         let in_dim = srv.params.ws[l].rows;
         let row_bytes = (in_dim * 4) as u64;
         let mut agg = Matrix::zeros(sel.len(), in_dim);
-        for (i, &v) in sel.iter().enumerate() {
-            let vu = v as usize;
-            let consumer = srv.assignment[vu];
-            let iv = srv.inv_sqrt[vu];
-            let orow = agg.row_mut(i);
-            let mut self_done = false;
-            for &t in srv.graph.neighbors(vu) {
-                if !self_done && t > v {
+        {
+            let _gspan = crate::span!("serve.gather", layer = l, rows = sel.len());
+            for (i, &v) in sel.iter().enumerate() {
+                let vu = v as usize;
+                let consumer = srv.assignment[vu];
+                let iv = srv.inv_sqrt[vu];
+                let orow = agg.row_mut(i);
+                let mut self_done = false;
+                for &t in srv.graph.neighbors(vu) {
+                    if !self_done && t > v {
+                        accumulate(
+                            srv, &mut cache, &prev, l, v, v, iv, consumer, orow, &mut bytes,
+                            &mut fetched, frow_bytes, row_bytes,
+                        );
+                        self_done = true;
+                    }
+                    accumulate(
+                        srv, &mut cache, &prev, l, v, t, iv, consumer, orow, &mut bytes,
+                        &mut fetched, frow_bytes, row_bytes,
+                    );
+                }
+                if !self_done {
                     accumulate(
                         srv, &mut cache, &prev, l, v, v, iv, consumer, orow, &mut bytes,
                         &mut fetched, frow_bytes, row_bytes,
                     );
-                    self_done = true;
                 }
-                accumulate(
-                    srv, &mut cache, &prev, l, v, t, iv, consumer, orow, &mut bytes,
-                    &mut fetched, frow_bytes, row_bytes,
-                );
-            }
-            if !self_done {
-                accumulate(
-                    srv, &mut cache, &prev, l, v, v, iv, consumer, orow, &mut bytes,
-                    &mut fetched, frow_bytes, row_bytes,
-                );
             }
         }
-        let mut z = gemm(&agg, &srv.params.ws[l]);
+        let mut z = {
+            let _gspan = crate::span!("serve.gemm", layer = l, rows = sel.len());
+            gemm(&agg, &srv.params.ws[l])
+        };
         if l + 1 < layers {
             relu(&mut z);
         } else if let Some(c) = &mut cache {

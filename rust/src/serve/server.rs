@@ -65,7 +65,7 @@ pub struct QueryResult {
 }
 
 /// Lifetime serving counters.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ServeStats {
     pub queries: u64,
     pub micro_batches: u64,
@@ -343,6 +343,8 @@ impl Server {
     /// Results come back in input order; batching cannot change any
     /// answer (per-row compute is independent, enforced by tests).
     pub fn query_batch(&mut self, nodes: &[u32]) -> Result<Vec<QueryResult>> {
+        let _qspan =
+            crate::span!("serve.query_batch", n = nodes.len(), width = self.serve_pool);
         let n = self.graph.num_nodes();
         for &v in nodes {
             if v as usize >= n {
@@ -400,11 +402,20 @@ impl Server {
             let per = tasks.len().div_ceil(nthreads);
             let params = &self.params;
             let pruned = self.cfg.pruned;
+            // workers link their flush spans to the dispatching span by
+            // id — the thread-local stack cannot cross the scope spawn
+            let wave_parent = _qspan.id();
             std::thread::scope(|scope| {
-                for chunk in tasks.chunks_mut(per) {
+                for (wi, chunk) in tasks.chunks_mut(per).enumerate() {
                     scope.spawn(move || {
+                        crate::threads::label_current_with(|| format!("serve-worker-{wi}"));
                         crate::tensor::set_intra_threads(1);
                         for t in chunk.iter_mut() {
+                            let _fspan = crate::obs::trace::SpanGuard::enter_under(
+                                "serve.shard_flush",
+                                Some(wave_parent),
+                                &[("shard", t.s as i64), ("batch", t.locals.len() as i64)],
+                            );
                             t.out = Some(t.engine.serve(params, &t.locals, pruned));
                         }
                     });
@@ -433,6 +444,8 @@ impl Server {
                     continue;
                 }
                 let locals: Vec<u32> = group.iter().map(|&(_, l)| l).collect();
+                let _fspan =
+                    crate::span!("serve.shard_flush", shard = s, batch = locals.len());
                 let out = self.shards[s].serve(&self.params, &locals, self.cfg.pruned);
                 self.micro_batches += 1;
                 self.cache_hits += out.cached_hits as u64;
@@ -561,10 +574,18 @@ impl Server {
             .collect();
         let params = &self.params;
         let pruned = self.cfg.pruned;
+        let wave_span = crate::span!("serve.flush_wave", batches = batches.len());
+        let wave_parent = wave_span.id();
         std::thread::scope(|scope| {
-            for t in tasks.iter_mut() {
+            for (wi, t) in tasks.iter_mut().enumerate() {
                 scope.spawn(move || {
+                    crate::threads::label_current_with(|| format!("serve-worker-{wi}"));
                     crate::tensor::set_intra_threads(1);
+                    let _fspan = crate::obs::trace::SpanGuard::enter_under(
+                        "serve.shard_flush",
+                        Some(wave_parent),
+                        &[("shard", t.shard as i64), ("batch", t.locals.len() as i64)],
+                    );
                     let t0 = Instant::now();
                     let out = t.engine.serve(params, &t.locals, pruned);
                     let span = (t0.elapsed().as_micros() as u64).max(1);
@@ -656,6 +677,13 @@ impl Server {
     /// freshly compacted flat CSR — the O(E) pre-overlay behaviour,
     /// kept as benchmark baseline and property-test oracle.
     pub fn apply_delta(&mut self, delta: &GraphDelta) -> Result<DeltaReport> {
+        let _dspan = crate::span!(
+            "serve.apply_delta",
+            added_edges = delta.added_edges.len(),
+            removed_edges = delta.removed_edges.len(),
+            added_nodes = delta.added_nodes.len(),
+            removed_nodes = delta.removed_nodes.len(),
+        );
         let old_n = self.graph.num_nodes();
         delta.validate(old_n, self.features.cols)?;
         // liveness: retired ids cannot be referenced again

@@ -353,19 +353,25 @@ impl ShardEngine {
             let sel = std::mem::take(&mut need[l]);
             let in_dim = params.ws[l].rows;
             let mut agg = Matrix::zeros(sel.len(), in_dim);
-            for (i, &v) in sel.iter().enumerate() {
-                let (tgts, vals) = self.adj.row(v as usize);
-                let orow = agg.row_mut(i);
-                for (e, &j) in tgts.iter().enumerate() {
-                    let w = vals[e];
-                    let drow =
-                        if l == 0 { self.features.row(j as usize) } else { self.cache.row(l - 1, j as usize) };
-                    for c in 0..in_dim {
-                        orow[c] += w * drow[c];
+            {
+                let _gspan = crate::span!("serve.gather", layer = l, rows = sel.len());
+                for (i, &v) in sel.iter().enumerate() {
+                    let (tgts, vals) = self.adj.row(v as usize);
+                    let orow = agg.row_mut(i);
+                    for (e, &j) in tgts.iter().enumerate() {
+                        let w = vals[e];
+                        let drow =
+                            if l == 0 { self.features.row(j as usize) } else { self.cache.row(l - 1, j as usize) };
+                        for c in 0..in_dim {
+                            orow[c] += w * drow[c];
+                        }
                     }
                 }
             }
-            let mut z = gemm(&agg, &params.ws[l]);
+            let mut z = {
+                let _gspan = crate::span!("serve.gemm", layer = l, rows = sel.len());
+                gemm(&agg, &params.ws[l])
+            };
             if l + 1 < layer_count {
                 relu(&mut z);
             }
@@ -376,6 +382,7 @@ impl ShardEngine {
         }
 
         // ---- answer from the (now valid) output layer ---------------
+        let _cspan = crate::span!("serve.cache_answer", rows = q.len());
         let classes = dims[out_l];
         let mut logits = Matrix::zeros(q.len(), classes);
         for (i, &v) in q.iter().enumerate() {

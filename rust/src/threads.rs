@@ -25,6 +25,16 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Label the calling thread for trace export (Chrome `thread_name`
+/// metadata; see [`crate::obs::trace`]). Pools call this right after
+/// spawning so a trace shows "trainer-worker-2" / "serve-worker-5"
+/// instead of bare thread numbers. The label closure only runs when
+/// tracing is enabled, so the disabled path pays one relaxed load and
+/// never formats.
+pub fn label_current_with(label: impl FnOnce() -> String) {
+    crate::obs::trace::set_thread_label_with(label);
+}
+
 /// Configured budget override; 0 = use `available_parallelism()`.
 static TOTAL_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 /// Threads currently claimed by standing pools (leases).

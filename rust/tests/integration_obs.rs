@@ -1,0 +1,180 @@
+//! Observability contract tests. The tracer is annotation only: with
+//! spans recording or not, the serving tier must hand back the same
+//! bytes, the same graph versions, and the same counters — at serve
+//! width 1 and across the parallel pool — and a traced run must
+//! actually contain the nested three-tier timeline the `--trace` flag
+//! promises (train rounds, serve flushes with gather/GEMM phases
+//! under them, loadgen virtual-time lanes).
+//!
+//! The tracer is process-global, so every test here serialises on
+//! `trace::exclusive()` and drains before releasing it.
+
+use gad::coordinator::{train_gad, TrainConfig};
+use gad::datasets::{Dataset, SyntheticSpec};
+use gad::loadgen::{
+    generate_schedule, run_open_loop, SimOptions, SloBatchScheduler, WorkloadConfig,
+};
+use gad::model::GcnParams;
+use gad::obs::trace;
+use gad::rng::Rng;
+use gad::serve::{ServeConfig, ServeStats, Server};
+
+fn fixture(seed: u64) -> (Dataset, GcnParams) {
+    let ds = SyntheticSpec::tiny().generate(seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0xBEEF);
+    let params = GcnParams::init(ds.feature_dim(), 8, ds.num_classes, 2, &mut rng);
+    (ds, params)
+}
+
+fn server_at(ds: &Dataset, params: &GcnParams, serve_threads: usize) -> Server {
+    let cfg = ServeConfig { shards: 4, seed: 7, serve_threads, ..Default::default() };
+    Server::for_dataset(ds, params.clone(), cfg).expect("server")
+}
+
+/// Everything a run can answer, reduced to exact bits.
+#[derive(PartialEq, Debug)]
+struct RunFingerprint {
+    batch_answers: Vec<(u32, u32, u64, Vec<u32>)>,
+    outcomes: Vec<(u64, u32, u64, Vec<u32>)>,
+    deltas_applied: usize,
+    stats: ServeStats,
+}
+
+/// One full direct-burst + open-loop pass at `serve_threads`, with the
+/// tracer on or off. Caller holds `trace::exclusive()`.
+fn run_once(ds: &Dataset, params: &GcnParams, serve_threads: usize, traced: bool) -> RunFingerprint {
+    if traced {
+        trace::enable();
+    }
+    let mut srv = server_at(ds, params, serve_threads);
+
+    let n = ds.graph.num_nodes() as u32;
+    let nodes: Vec<u32> = (0..48u32).map(|i| (i * 29) % n).collect();
+    let batch_answers = srv
+        .query_batch(&nodes)
+        .expect("direct batch")
+        .iter()
+        .map(|r| {
+            (r.node, r.pred, r.graph_version, r.probs.iter().map(|p| p.to_bits()).collect())
+        })
+        .collect();
+
+    let wcfg = WorkloadConfig {
+        rate_qps: 20_000.0,
+        events: 200,
+        zipf_s: 1.1,
+        churn_frac: 0.08,
+        seed: 5,
+        ..Default::default()
+    };
+    let schedule = generate_schedule(&ds.graph, ds.feature_dim(), &wcfg);
+    let opts = SimOptions { slo_us: 2_000, record_probs: true };
+    let mut sched = SloBatchScheduler::new(srv.num_shards(), 8, opts.slo_us / 4);
+    let sim = run_open_loop(&mut srv, &schedule, &mut sched, &opts).expect("open loop");
+
+    if traced {
+        trace::disable();
+        let t = trace::drain();
+        assert!(!t.events.is_empty(), "traced run must have recorded spans");
+    }
+    RunFingerprint {
+        batch_answers,
+        outcomes: sim
+            .outcomes
+            .iter()
+            .map(|o| {
+                let bits = o.probs.as_ref().expect("record_probs");
+                (o.id, o.pred, o.graph_version, bits.iter().map(|p| p.to_bits()).collect())
+            })
+            .collect(),
+        deltas_applied: sim.deltas_applied,
+        stats: srv.stats(),
+    }
+}
+
+/// The PR-7 determinism contract, extended to the tracer: tracing on
+/// vs off is bit-identical — answers, versions, probabilities, and
+/// every `ServeStats` counter — at width 1 and across the pool.
+#[test]
+fn tracing_on_vs_off_bit_identical_at_widths_1_and_4() {
+    let _g = trace::exclusive();
+    trace::drain(); // start from a clean global buffer
+    let (ds, params) = fixture(7);
+    for threads in [1usize, 4] {
+        let off = run_once(&ds, &params, threads, false);
+        let on = run_once(&ds, &params, threads, true);
+        assert_eq!(
+            off, on,
+            "[width {threads}] tracing changed an answer or a counter"
+        );
+    }
+    // and the off-runs really were off: nothing accumulated
+    assert!(trace::drain().events.is_empty(), "untraced runs must record nothing");
+}
+
+/// A traced train → serve → replay pass carries nested spans from all
+/// three tiers, and the Chrome export is structurally sound.
+#[test]
+fn traced_run_spans_all_three_tiers_with_nesting() {
+    let _g = trace::exclusive();
+    trace::drain();
+    let (ds, params) = fixture(11);
+
+    trace::enable();
+    // train tier: a tiny run is enough to emit epoch/round spans
+    let cfg = TrainConfig {
+        partitions: 4,
+        workers: 2,
+        layers: 2,
+        hidden: 16,
+        epochs: 3,
+        seed: 42,
+        ..Default::default()
+    };
+    train_gad(&ds, &cfg).expect("tiny training run");
+    // serve + loadgen tiers
+    let mut srv = server_at(&ds, &params, 4);
+    let wcfg =
+        WorkloadConfig { rate_qps: 20_000.0, events: 150, churn_frac: 0.05, seed: 5, ..Default::default() };
+    let schedule = generate_schedule(&ds.graph, ds.feature_dim(), &wcfg);
+    let mut sched = SloBatchScheduler::new(srv.num_shards(), 8, 500);
+    run_open_loop(&mut srv, &schedule, &mut sched, &SimOptions::default()).expect("open loop");
+    trace::disable();
+    let t = trace::drain();
+
+    assert_eq!(t.tiers(), vec!["loadgen", "serve", "train"], "all three tiers present");
+    assert_eq!(t.count_named("loadgen.run_open_loop"), 1, "one sim event loop");
+    assert!(t.count_named("train.epoch") >= 3, "an epoch span per epoch");
+    assert!(t.count_named("serve.shard_flush") > 0, "server flushes recorded");
+    assert!(t.count_named("serve.gather") > 0 && t.count_named("serve.gemm") > 0);
+    assert!(t.count_named("loadgen.service") > 0, "virtual service lanes");
+    assert!(t.count_named("loadgen.queueing") > 0, "virtual queueing lanes");
+
+    // nesting: flushes hang off a wave/batch span, phases off a flush
+    let id_of = |name: &str| -> Vec<u64> {
+        t.events.iter().filter(|e| e.name == name).map(|e| e.id).collect()
+    };
+    let parents_of = |name: &str| -> Vec<u64> {
+        t.events.iter().filter(|e| e.name == name).filter_map(|e| e.parent).collect()
+    };
+    let flush_ids = id_of("serve.shard_flush");
+    let wave_ids: Vec<u64> =
+        [id_of("serve.flush_wave"), id_of("serve.query_batch")].concat();
+    assert!(
+        parents_of("serve.shard_flush").iter().any(|p| wave_ids.contains(p)),
+        "a shard flush must link to its dispatching wave"
+    );
+    assert!(
+        parents_of("serve.gemm").iter().any(|p| flush_ids.contains(p)),
+        "a GEMM phase must nest under a shard flush"
+    );
+
+    // Chrome export: one complete-event object per span, metadata rows
+    // for thread labels, balanced top-level JSON
+    let json = t.to_chrome_json();
+    assert!(json.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n"));
+    assert!(json.trim_end().ends_with("]}"));
+    assert_eq!(json.matches("\"ph\":\"X\"").count(), t.events.len());
+    assert!(json.matches("\"ph\":\"M\"").count() >= 1, "thread-name metadata present");
+    assert_eq!(json.matches('{').count(), json.matches('}').count(), "balanced braces");
+}

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Small-N smoke of the serving figure family (fig11–14): build the CLI,
-# run serve-bench + load-bench in --fast mode into out/, and assert the
-# artifacts landed non-empty. This is the "does the whole pipeline
-# still produce numbers" check — correctness lives in `cargo test`.
+# Small-N smoke of the serving figure family (fig11–15): build the CLI,
+# run serve-bench + load-bench (with a trace) + profile in --fast mode
+# into out/, and assert the artifacts landed non-empty and the Chrome
+# trace parses as JSON. This is the "does the whole pipeline still
+# produce numbers" check — correctness lives in `cargo test`.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -20,17 +21,22 @@ fi
 echo "== kick-tires: fig11-13 (serve-bench, fast, tiny, 4-wide serve pool) =="
 "$GAD" serve-bench --dataset tiny --fast --serve-threads 4 --out-dir "$OUT"
 
-echo "== kick-tires: fig14 (load-bench, fast, tiny, 4-wide serve pool) =="
+echo "== kick-tires: fig14 (load-bench, fast, tiny, 4-wide serve pool, traced) =="
 "$GAD" load-bench --dataset tiny --fast --load-events 200 --rate-steps 3 \
-    --serve-threads 4 --out-dir "$OUT"
+    --serve-threads 4 --out-dir "$OUT" --trace "$OUT/trace_load.json"
+
+echo "== kick-tires: fig15 (profile, fast, tiny) =="
+"$GAD" profile --dataset tiny --fast --out-dir "$OUT"
 
 echo "== kick-tires: checking artifacts =="
 status=0
 for f in \
     fig11_serving_latency.md fig11_serving_latency.csv fig11_serving_latency.json \
-    fig12_churn.md fig12_churn.csv \
-    fig13_rebalance.md fig13_rebalance.csv \
-    fig14_load_knee.md fig14_load_knee.csv fig14_load_knee.json; do
+    fig12_churn.md fig12_churn.csv fig12_churn.json \
+    fig13_rebalance.md fig13_rebalance.csv fig13_rebalance.json \
+    fig14_load_knee.md fig14_load_knee.csv fig14_load_knee.json \
+    fig15_profile.md fig15_profile.csv fig15_profile.json \
+    trace_load.json; do
     if [[ ! -s "$OUT/$f" ]]; then
         echo "MISSING or empty: $OUT/$f" >&2
         status=1
@@ -39,11 +45,28 @@ for f in \
     fi
 done
 
+# the Chrome trace must be loadable JSON (Perfetto / chrome://tracing)
+if command -v python3 >/dev/null 2>&1; then
+    for f in trace_load.json fig15_profile.json; do
+        if python3 -m json.tool "$OUT/$f" >/dev/null; then
+            echo "ok: $OUT/$f parses as JSON"
+        else
+            echo "INVALID JSON: $OUT/$f" >&2
+            status=1
+        fi
+    done
+else
+    echo "warn: python3 not found, skipping JSON parse check"
+fi
+
 # machine-readable perf trajectory: stable BENCH_* names at the repo
 # root of $OUT, one json per tracked figure
 cp "$OUT/fig11_serving_latency.json" "$OUT/BENCH_fig11.json"
+cp "$OUT/fig12_churn.json" "$OUT/BENCH_fig12.json"
+cp "$OUT/fig13_rebalance.json" "$OUT/BENCH_fig13.json"
 cp "$OUT/fig14_load_knee.json" "$OUT/BENCH_fig14.json"
-for f in BENCH_fig11.json BENCH_fig14.json; do
+cp "$OUT/fig15_profile.json" "$OUT/BENCH_fig15.json"
+for f in BENCH_fig11.json BENCH_fig12.json BENCH_fig13.json BENCH_fig14.json BENCH_fig15.json; do
     if [[ ! -s "$OUT/$f" ]]; then
         echo "MISSING or empty: $OUT/$f" >&2
         status=1
@@ -56,4 +79,4 @@ if [[ $status -ne 0 ]]; then
     echo "kick-tires FAILED" >&2
     exit $status
 fi
-echo "kick-tires passed: fig11-14 artifacts (+BENCH_*.json) present in $OUT/"
+echo "kick-tires passed: fig11-15 artifacts (+BENCH_*.json, trace) present in $OUT/"
