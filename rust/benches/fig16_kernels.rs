@@ -1,0 +1,33 @@
+//! Bench: Fig 16 (ours) — raw-speed kernels, seed-era reference vs
+//! the packed register-blocked GEMM / panelled transposes /
+//! nnz-balanced SpMM, on identical inputs. Every case asserts
+//! bit-identity before it is timed, so a reported speedup is by
+//! construction answer-preserving. GFLOP/s and speedup per row;
+//! numbers land in EXPERIMENTS.md §Perf.
+//!
+//! `--fast` shrinks the shapes for smoke runs (kick-tires.sh);
+//! `--json FILE` / `--csv FILE` additionally write machine-readable
+//! copies.
+
+use gad::bench_util::run_fig16_kernels;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let flag = |name: &str| {
+        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+    };
+
+    let (warmup, samples) = if fast { (1, 3) } else { (1, 5) };
+    let rep = run_fig16_kernels(fast, warmup, samples);
+
+    println!("\n{}", rep.to_markdown());
+    if let Some(path) = flag("--json") {
+        std::fs::write(&path, rep.to_json()).expect("write --json");
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = flag("--csv") {
+        std::fs::write(&path, rep.to_csv()).expect("write --csv");
+        eprintln!("wrote {path}");
+    }
+}

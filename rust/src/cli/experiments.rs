@@ -817,6 +817,23 @@ pub fn profile(args: &Args, opts: &RunOpts) -> Result<()> {
     Ok(())
 }
 
+/// Fig 16 (ours): raw-speed kernel comparison — the retained seed-era
+/// reference kernels vs the packed register-blocked GEMM, panelled
+/// gradient transposes and nnz-balanced SpMM, on identical inputs.
+/// The runner asserts bit-identity per case before timing it, so the
+/// table can never report a speedup on answers that moved.
+pub fn kernel_bench(args: &Args, opts: &RunOpts) -> Result<()> {
+    let warmup = args.get_usize("warmup", 1)?;
+    let samples = args.get_usize("samples", if opts.fast { 3 } else { 5 })?;
+    let rep = crate::bench_util::run_fig16_kernels(opts.fast, warmup, samples);
+    let md = rep.to_markdown();
+    println!("{md}");
+    write_result_file(&format!("{}/fig16_kernels.md", opts.out_dir), &md)?;
+    write_result_file(&format!("{}/fig16_kernels.csv", opts.out_dir), &rep.to_csv())?;
+    write_result_file(&format!("{}/fig16_kernels.json", opts.out_dir), &rep.to_json())?;
+    Ok(())
+}
+
 /// Everything, in order. Table 2 / Fig 5 / Fig 6 share one sweep and
 /// Table 3 / Fig 7 share another (the paper derives them from the same
 /// runs too).
@@ -884,5 +901,6 @@ pub fn run_all(args: &Args, opts: &RunOpts) -> Result<()> {
     serve_bench(args, opts)?;
     load_bench(args, opts)?;
     profile(args, opts)?;
+    kernel_bench(args, opts)?;
     Ok(())
 }

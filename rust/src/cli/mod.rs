@@ -136,6 +136,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "serve-bench" => experiments::serve_bench(&args, &opts),
         "load-bench" => experiments::load_bench(&args, &opts),
         "profile" => experiments::profile(&args, &opts),
+        "kernel-bench" => experiments::kernel_bench(&args, &opts),
         "ablate" => experiments::ablation(&args, &opts),
         "all" => experiments::run_all(&args, &opts),
         "" | "help" => {
@@ -176,6 +177,11 @@ commands
   profile     train -> serve burst -> open-loop replay with the tracer
               on; per-phase time/byte table + unified counter snapshot
               across all three tiers (Fig 15, ours)
+  kernel-bench raw-speed kernels: packed register-blocked GEMM,
+              panelled gradient transposes and nnz-balanced SpMM vs
+              the retained seed-era reference kernels on identical
+              inputs — GFLOP/s + speedup, bit-identity asserted
+              before timing (Fig 16, ours)
   ablate      design-choice ablations (+ crash-fault run)
   all         everything above into --out-dir
 
@@ -242,6 +248,11 @@ load-bench flags
   --serve-threads N  serve-pool width for the headline rows; > 1 also
                  replays every step at width 1 for the wall-clock
                  speedup column. 1 = sequential, 0 = auto (default 1)
+
+kernel-bench flags
+  --warmup N --samples N  timing repetitions (default 1 warmup,
+                 5 samples; 3 samples with --fast, which also shrinks
+                 the shapes); writes fig16_kernels.{md,csv,json}
 
 profile flags
   --queries N    serve-burst queries (default 512; 128 with --fast)

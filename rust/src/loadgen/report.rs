@@ -101,6 +101,9 @@ pub struct RateRow {
     pub mean_service_us: f64,
     pub queue_depth_mean: f64,
     pub queue_depth_max: usize,
+    /// p99 queue depth from the scheduler's streaming histogram
+    /// (log₂-bucketed nearest-rank).
+    pub queue_depth_p99: u64,
     pub answered: usize,
     pub deltas: usize,
     /// Serve-pool width this row ran at (1 = sequential replay).
@@ -190,13 +193,13 @@ impl LoadBenchReport {
         let mut s = String::new();
         s.push_str(
             "| scheduler | threads | offered qps | goodput qps | within SLO | p50 ms | p99 ms \
-             | p999 ms | wait µs | service µs | depth mean | depth max | deltas | wall ms |\n",
+             | p999 ms | wait µs | service µs | depth mean | depth p99 | depth max | deltas | wall ms |\n",
         );
-        s.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+        s.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
         for r in &self.rows {
             let _ = writeln!(
                 s,
-                "| {} | {} | {:.0} | {:.0} | {:.1}% | {:.2} | {:.2} | {:.2} | {:.0} | {:.0} | {:.1} | {} | {} | {:.1} |",
+                "| {} | {} | {:.0} | {:.0} | {:.1}% | {:.2} | {:.2} | {:.2} | {:.0} | {:.0} | {:.1} | {} | {} | {} | {:.1} |",
                 r.mode,
                 r.serve_threads,
                 r.offered_qps,
@@ -208,6 +211,7 @@ impl LoadBenchReport {
                 r.mean_queue_us,
                 r.mean_service_us,
                 r.queue_depth_mean,
+                r.queue_depth_p99,
                 r.queue_depth_max,
                 r.deltas,
                 r.wall_ms,
@@ -254,13 +258,13 @@ impl LoadBenchReport {
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "mode,serve_threads,offered_qps,achieved_qps,goodput_qps,goodput_ratio,p50_us,p99_us,\
-             p999_us,mean_queue_us,mean_service_us,queue_depth_mean,queue_depth_max,answered,\
-             deltas,peak_inflight,wall_ms\n",
+             p999_us,mean_queue_us,mean_service_us,queue_depth_mean,queue_depth_p99,\
+             queue_depth_max,answered,deltas,peak_inflight,wall_ms\n",
         );
         for r in &self.rows {
             let _ = writeln!(
                 s,
-                "{},{},{:.2},{:.2},{:.2},{:.4},{:.1},{:.1},{:.1},{:.1},{:.1},{:.2},{},{},{},{},{:.2}",
+                "{},{},{:.2},{:.2},{:.2},{:.4},{:.1},{:.1},{:.1},{:.1},{:.1},{:.2},{},{},{},{},{},{:.2}",
                 r.mode,
                 r.serve_threads,
                 r.offered_qps,
@@ -273,6 +277,7 @@ impl LoadBenchReport {
                 r.mean_queue_us,
                 r.mean_service_us,
                 r.queue_depth_mean,
+                r.queue_depth_p99,
                 r.queue_depth_max,
                 r.answered,
                 r.deltas,
@@ -455,6 +460,7 @@ fn summarize(
         mean_service_us: sim.outcomes.iter().map(|o| o.service_us() as f64).sum::<f64>() / denom,
         queue_depth_mean: sim.queue_depth_mean,
         queue_depth_max: sim.queue_depth_max,
+        queue_depth_p99: sim.queue_depth_p99,
         peak_inflight: sim.peak_inflight,
         answered,
         deltas: sim.deltas_applied,
@@ -484,6 +490,7 @@ mod tests {
             mean_service_us: 80.0,
             queue_depth_mean: 1.5,
             queue_depth_max: 9,
+            queue_depth_p99: 7,
             answered: 100,
             deltas: 2,
             serve_threads: threads,

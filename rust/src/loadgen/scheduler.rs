@@ -9,6 +9,7 @@
 //! sequence they must make the same decisions, because answer
 //! bit-identity tests replay schedules against them.
 
+use crate::obs::hist::LogHistogram;
 use std::collections::VecDeque;
 
 /// A query waiting in the scheduler.
@@ -70,6 +71,14 @@ pub trait Scheduler {
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Streaming histogram of queue depth, one sample per
+    /// [`enqueue`](Self::enqueue) (depth *after* admitting). The
+    /// event loop reads max/mean/p99 from here instead of keeping its
+    /// own counters — `LogHistogram` tracks exact max and sum, so the
+    /// reported max/mean are bit-identical to the retired counter trio
+    /// while p99 comes for free.
+    fn queue_depth_hist(&self) -> &LogHistogram;
 }
 
 /// Strict arrival order, one query per flush — the classic baseline.
@@ -78,6 +87,7 @@ pub trait Scheduler {
 #[derive(Debug, Default)]
 pub struct FifoScheduler {
     q: VecDeque<PendingQuery>,
+    depth_hist: LogHistogram,
 }
 
 impl FifoScheduler {
@@ -93,6 +103,7 @@ impl Scheduler for FifoScheduler {
 
     fn enqueue(&mut self, q: PendingQuery) {
         self.q.push_back(q);
+        self.depth_hist.record(self.q.len() as u64);
     }
 
     fn pop_avoiding(
@@ -118,6 +129,10 @@ impl Scheduler for FifoScheduler {
     fn len(&self) -> usize {
         self.q.len()
     }
+
+    fn queue_depth_hist(&self) -> &LogHistogram {
+        &self.depth_hist
+    }
 }
 
 /// SLO-aware per-shard micro-batcher.
@@ -138,6 +153,7 @@ pub struct SloBatchScheduler {
     reserve_us: u64,
     buckets: Vec<VecDeque<PendingQuery>>,
     held: usize,
+    depth_hist: LogHistogram,
 }
 
 impl SloBatchScheduler {
@@ -149,6 +165,7 @@ impl SloBatchScheduler {
             reserve_us,
             buckets: vec![VecDeque::new(); shards.max(1)],
             held: 0,
+            depth_hist: LogHistogram::new(),
         }
     }
 
@@ -182,6 +199,7 @@ impl Scheduler for SloBatchScheduler {
         assert!(s < self.buckets.len(), "query routed to unknown shard {s}");
         self.buckets[s].push_back(q);
         self.held += 1;
+        self.depth_hist.record(self.held as u64);
     }
 
     fn pop_avoiding(
@@ -212,6 +230,10 @@ impl Scheduler for SloBatchScheduler {
 
     fn len(&self) -> usize {
         self.held
+    }
+
+    fn queue_depth_hist(&self) -> &LogHistogram {
+        &self.depth_hist
     }
 }
 
@@ -308,6 +330,29 @@ mod tests {
         let second = s.pop(3, true).expect("busy veto lifted");
         assert!(second.iter().all(|p| p.shard == 2));
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn queue_depth_histogram_samples_every_enqueue() {
+        let mut s = SloBatchScheduler::new(2, 4, 0);
+        for id in 0..3u64 {
+            s.enqueue(q(id, (id % 2) as u32, id, 1_000));
+        }
+        let h = s.queue_depth_hist();
+        assert_eq!(h.count(), 3, "one sample per enqueue");
+        assert_eq!(h.max(), 3, "exact max, tracked outside the buckets");
+        assert!((h.mean() - 2.0).abs() < 1e-9, "depths were 1, 2, 3");
+        // pops don't sample; the next enqueue sees the drained depth
+        while s.pop(0, true).is_some() {}
+        s.enqueue(q(9, 0, 10, 1_000));
+        assert_eq!(s.queue_depth_hist().count(), 4);
+        assert_eq!(s.queue_depth_hist().max(), 3, "depth after drain is 1 again");
+
+        let mut f = FifoScheduler::new();
+        f.enqueue(q(0, 0, 0, 1_000));
+        f.enqueue(q(1, 0, 1, 1_000));
+        assert_eq!(f.queue_depth_hist().count(), 2);
+        assert_eq!(f.queue_depth_hist().max(), 2);
     }
 
     #[test]

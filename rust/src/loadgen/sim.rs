@@ -105,10 +105,19 @@ pub struct SimResult {
     pub end_us: u64,
     /// Server flushes issued (batches, not queries).
     pub flushes: usize,
-    /// Deepest scheduler queue observed (sampled at each admission).
+    /// Deepest scheduler queue observed (sampled at each admission;
+    /// exact — the scheduler's [`LogHistogram`] tracks max outside its
+    /// buckets).
+    ///
+    /// [`LogHistogram`]: crate::obs::hist::LogHistogram
     pub queue_depth_max: usize,
-    /// Mean queue depth over those samples.
+    /// Mean queue depth over those samples (exact, from the
+    /// histogram's integer sum).
     pub queue_depth_mean: f64,
+    /// p99 queue depth (log₂-bucketed nearest-rank, ≤ 2× relative
+    /// error) — free now that the scheduler streams depths into a
+    /// histogram instead of a counter trio.
+    pub queue_depth_p99: u64,
     /// Most flushes ever simultaneously in flight (1 when the server
     /// serves sequentially; > 1 proves cross-shard overlap happened).
     pub peak_inflight: usize,
@@ -136,9 +145,6 @@ pub fn run_open_loop(
     let mut outcomes: Vec<RequestOutcome> = Vec::new();
     let mut deltas_applied = 0usize;
     let mut flushes = 0usize;
-    let mut depth_max = 0usize;
-    let mut depth_sum = 0u64;
-    let mut depth_samples = 0u64;
     // flushes whose virtual completion the clock has not reached yet:
     // (home shard, complete_us). Length never exceeds `slots`.
     let mut inflight: Vec<(u32, u64)> = Vec::new();
@@ -160,11 +166,9 @@ pub fn run_open_loop(
                         arrival_us,
                         deadline_us: arrival_us.saturating_add(opts.slo_us),
                     });
-                    let depth = sched.len();
-                    depth_max = depth_max.max(depth);
-                    depth_sum += depth as u64;
-                    depth_samples += 1;
-                    srv.record_queue_depth(depth);
+                    // the scheduler's histogram sampled this admission
+                    // inside enqueue; mirror it into the server stats
+                    srv.record_queue_depth(sched.len());
                 }
                 ArrivalKind::Delta(d) => {
                     armed_delta = Some(d);
@@ -292,17 +296,15 @@ pub fn run_open_loop(
     debug_assert!(sched.is_empty(), "drain semantics leave nothing behind");
     debug_assert!(inflight.is_empty(), "every dispatched flush completed");
     outcomes.sort_by_key(|o| o.id);
+    let depth = sched.queue_depth_hist();
     Ok(SimResult {
         outcomes,
         deltas_applied,
         end_us: now_us,
         flushes,
-        queue_depth_max: depth_max,
-        queue_depth_mean: if depth_samples > 0 {
-            depth_sum as f64 / depth_samples as f64
-        } else {
-            0.0
-        },
+        queue_depth_max: depth.max() as usize,
+        queue_depth_mean: depth.mean(),
+        queue_depth_p99: depth.quantile(0.99),
         peak_inflight,
     })
 }

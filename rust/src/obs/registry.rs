@@ -138,6 +138,7 @@ impl MetricsRegistry {
             .counter(format!("{prefix}.flushes"), s.flushes as u64)
             .counter(format!("{prefix}.queue_depth_max"), s.queue_depth_max as u64)
             .gauge(format!("{prefix}.queue_depth_mean"), s.queue_depth_mean)
+            .counter(format!("{prefix}.queue_depth_p99"), s.queue_depth_p99)
             .counter(format!("{prefix}.peak_inflight"), s.peak_inflight as u64)
     }
 

@@ -225,6 +225,19 @@ impl SpanGuard {
     pub fn is_active(&self) -> bool {
         self.id != 0
     }
+
+    /// Set (or overwrite) an arg after the span opened — for values
+    /// only known mid-span, e.g. the bytes a gather phase ends up
+    /// billing to the CommLedger. No-op on an inert guard.
+    pub fn set_arg(&mut self, key: &'static str, value: i64) {
+        if self.id == 0 {
+            return;
+        }
+        match self.args.iter_mut().find(|(k, _)| *k == key) {
+            Some(slot) => slot.1 = value,
+            None => self.args.push((key, value)),
+        }
+    }
 }
 
 impl Drop for SpanGuard {

@@ -299,7 +299,8 @@ pub(crate) fn query_batch_gather(srv: &mut Server, nodes: &[u32]) -> Result<Vec<
         let row_bytes = (in_dim * 4) as u64;
         let mut agg = Matrix::zeros(sel.len(), in_dim);
         {
-            let _gspan = crate::span!("serve.gather", layer = l, rows = sel.len());
+            let bytes_before = bytes;
+            let mut _gspan = crate::span!("serve.gather", layer = l, rows = sel.len());
             for (i, &v) in sel.iter().enumerate() {
                 let vu = v as usize;
                 let consumer = srv.assignment[vu];
@@ -326,6 +327,9 @@ pub(crate) fn query_batch_gather(srv: &mut Server, nodes: &[u32]) -> Result<Vec<
                     );
                 }
             }
+            // bytes this layer billed to the serving ledger class —
+            // fig15's bytes column for the gather phase
+            _gspan.set_arg("bytes", (bytes - bytes_before) as i64);
         }
         let mut z = {
             let _gspan = crate::span!("serve.gemm", layer = l, rows = sel.len());

@@ -677,7 +677,7 @@ impl Server {
     /// freshly compacted flat CSR — the O(E) pre-overlay behaviour,
     /// kept as benchmark baseline and property-test oracle.
     pub fn apply_delta(&mut self, delta: &GraphDelta) -> Result<DeltaReport> {
-        let _dspan = crate::span!(
+        let mut _dspan = crate::span!(
             "serve.apply_delta",
             added_edges = delta.added_edges.len(),
             removed_edges = delta.removed_edges.len(),
@@ -916,6 +916,9 @@ impl Server {
             RebalanceReport::default()
         };
         self.debug_assert_counts_consistent();
+        // bytes the delta billed across ledger classes (halo resync +
+        // rebalance migration) — fig15's bytes column for this phase
+        _dspan.set_arg("bytes", (serving_bytes + reb.bytes) as i64);
         Ok(DeltaReport {
             graph_version: version,
             seeds: seeds_all.len(),

@@ -346,16 +346,30 @@ impl ShardEngine {
         // other rows are present, so a partial recompute is
         // bit-identical to the full-shard forward.
         let mut rows_recomputed = 0usize;
+        // Gather rows of the *next* layer assembled while this layer's
+        // GEMM ran: (position in need[l+1], finished aggregate row).
+        let mut prefetched: Vec<(usize, Vec<f32>)> = Vec::new();
         for l in 0..layer_count {
             if need[l].is_empty() {
+                debug_assert!(prefetched.is_empty(), "prefetch for a layer with no work");
                 continue;
             }
             let sel = std::mem::take(&mut need[l]);
             let in_dim = params.ws[l].rows;
             let mut agg = Matrix::zeros(sel.len(), in_dim);
+            let pf = std::mem::take(&mut prefetched);
             {
-                let _gspan = crate::span!("serve.gather", layer = l, rows = sel.len());
+                let _gspan =
+                    crate::span!("serve.gather", layer = l, rows = sel.len(), prefetched = pf.len());
+                let mut done = vec![false; sel.len()];
+                for (i, row) in &pf {
+                    agg.row_mut(*i).copy_from_slice(row);
+                    done[*i] = true;
+                }
                 for (i, &v) in sel.iter().enumerate() {
+                    if done[i] {
+                        continue;
+                    }
                     let (tgts, vals) = self.adj.row(v as usize);
                     let orow = agg.row_mut(i);
                     for (e, &j) in tgts.iter().enumerate() {
@@ -368,10 +382,72 @@ impl ShardEngine {
                     }
                 }
             }
-            let mut z = {
-                let _gspan = crate::span!("serve.gemm", layer = l, rows = sel.len());
-                gemm(&agg, &params.ws[l])
+            // Gather→GEMM pipelining: while this layer's GEMM runs,
+            // assemble the next layer's *safe* gather rows — rows none
+            // of whose inputs are recomputed this layer. Those inputs
+            // are already final in the cache (the cone plan pulls any
+            // invalid neighbour into need[l], and budget eviction only
+            // runs after the layer loop), and the stores below touch
+            // only `sel` rows, so the prefetch reads the exact f32s the
+            // in-line gather would and the answers stay bit-identical.
+            let pf_plan: Vec<usize> = if l + 1 < layer_count && !need[l + 1].is_empty() {
+                // sel is ascending for every l < out_l, so membership
+                // is a binary search
+                need[l + 1]
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &v)| {
+                        let (tgts, _) = self.adj.row(v as usize);
+                        tgts.iter().all(|j| sel.binary_search(j).is_err())
+                    })
+                    .map(|(i, _)| i)
+                    .collect()
+            } else {
+                Vec::new()
             };
+            let (z, pf_out) = if pf_plan.is_empty() {
+                let _gspan = crate::span!("serve.gemm", layer = l, rows = sel.len());
+                (gemm(&agg, &params.ws[l]), Vec::new())
+            } else {
+                let pspan =
+                    crate::span!("serve.pipeline", layer = l, prefetch_rows = pf_plan.len());
+                let pid = pspan.id();
+                let _lease = crate::threads::reserve(1);
+                let next = &need[l + 1];
+                let next_dim = params.ws[l + 1].rows;
+                let cache = &self.cache;
+                let adj = &self.adj;
+                std::thread::scope(|scope| {
+                    let worker = scope.spawn(move || {
+                        let _wspan = crate::obs::trace::SpanGuard::enter_under(
+                            "serve.gather_prefetch",
+                            Some(pid),
+                            &[("layer", (l + 1) as i64), ("rows", pf_plan.len() as i64)],
+                        );
+                        let mut out: Vec<(usize, Vec<f32>)> = Vec::with_capacity(pf_plan.len());
+                        for &i in &pf_plan {
+                            let mut row = vec![0.0f32; next_dim];
+                            let (tgts, vals) = adj.row(next[i] as usize);
+                            for (e, &j) in tgts.iter().enumerate() {
+                                let w = vals[e];
+                                let drow = cache.row(l, j as usize);
+                                for c in 0..next_dim {
+                                    row[c] += w * drow[c];
+                                }
+                            }
+                            out.push((i, row));
+                        }
+                        out
+                    });
+                    let z = {
+                        let _gspan = crate::span!("serve.gemm", layer = l, rows = sel.len());
+                        gemm(&agg, &params.ws[l])
+                    };
+                    (z, worker.join().expect("gather prefetch worker panicked"))
+                })
+            };
+            prefetched = pf_out;
+            let mut z = z;
             if l + 1 < layer_count {
                 relu(&mut z);
             }

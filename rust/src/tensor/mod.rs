@@ -13,8 +13,10 @@ mod ops;
 
 pub use matrix::Matrix;
 pub use ops::{
-    add_assign, addmm, cross_entropy_masked, gemm, gemm_ta, gemm_tb, leaky_relu, relu,
-    relu_grad_inplace, scale, set_intra_threads, softmax_rows, spmm_csr,
+    add_assign, addmm, cross_entropy_masked, gemm, gemm_into, gemm_reference,
+    gemm_reference_into, gemm_ta, gemm_ta_reference, gemm_tb, gemm_tb_reference, leaky_relu,
+    relu, relu_grad_inplace, scale, set_intra_threads, softmax_rows, spmm_csr,
+    spmm_csr_reference,
 };
 
 #[cfg(test)]

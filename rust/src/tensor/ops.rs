@@ -1,16 +1,33 @@
 //! GEMM and GCN-specific ops over [`Matrix`].
 //!
-//! The GEMM is cache-blocked and (for large problems) parallelised with
-//! scoped `std::thread`s over row panels — the hot path of the native
-//! backend. See EXPERIMENTS.md §Perf for the blocking parameters'
-//! before/after.
+//! The GEMM packs B into register-friendly column panels and runs a
+//! register-blocked micro-kernel over cache-sized blocks, parallelised
+//! with scoped `std::thread`s over row panels — the hot path of the
+//! native backend. See EXPERIMENTS.md §Perf for the blocking
+//! parameters' before/after and README "Raw-speed kernels" for the
+//! packing scheme.
+//!
+//! **Determinism contract.** Every kernel here is bit-identical to its
+//! retained `*_reference` twin: an optimisation may re-tile loops, pack
+//! operands, hoist accumulators into registers, or split work across
+//! threads, but the per-output-element k-accumulation order stays a
+//! single ascending serial chain with unchanged zero-skip behaviour.
+//! Rust never contracts `c + a * b` into a fused multiply-add on its
+//! own, and f32 copies/spills round-trip exactly, so "same chain" means
+//! "same bits". `tests/prop_tensor.rs` pins each pair bit-for-bit over
+//! random ragged shapes.
 
 use super::Matrix;
 
-/// Row-panel block height for the threaded GEMM.
+/// Row-panel block height (rows of A/C per cache block).
 const MC: usize = 64;
-/// K-blocking depth.
+/// K-blocking depth (one packed B panel covers KC rows of B).
 const KC: usize = 256;
+/// Register-block width: columns of C accumulated in registers per
+/// micro-kernel call. 8 f32 lanes = two SSE / one AVX vector.
+const NR: usize = 8;
+/// Register-block height: rows of C per micro-kernel call.
+const MR: usize = 4;
 /// Problems smaller than this many MACs stay single-threaded.
 const PAR_THRESHOLD: usize = 1 << 21;
 
@@ -68,7 +85,7 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let nthreads = thread_count(m * k * n);
     if nthreads <= 1 {
-        gemm_panel(a.data(), b.data(), c.data_mut(), 0, m, k, n);
+        gemm_panel_packed(a.data(), b.data(), c.data_mut(), 0, m, k, n);
         return;
     }
     let rows_per = m.div_ceil(nthreads);
@@ -82,14 +99,53 @@ pub fn gemm_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
             let rows = panel.len() / n;
             let panel: &mut [f32] = panel;
             s.spawn(move || {
+                gemm_panel_packed(a_data, b_data, panel, row0, rows, k, n);
+            });
+        }
+    });
+}
+
+/// `C = A * B` through the seed-era unpacked kernel — the oracle the
+/// packed path is property-tested against bit-for-bit, and the fig16
+/// bench's "old" column. (The issue plan kept this `#[cfg(test)]`, but
+/// the bench target is a separate crate and needs the baseline too, so
+/// it stays public; nothing on a hot path calls it.)
+pub fn gemm_reference(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch: {}x{} * {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    gemm_reference_into(a, b, &mut c);
+    c
+}
+
+/// `C += A * B` through the seed-era unpacked kernel (same row-panel
+/// threading, unpacked inner loops). See [`gemm_reference`].
+pub fn gemm_reference_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let nthreads = thread_count(m * k * n);
+    if nthreads <= 1 {
+        gemm_panel(a.data(), b.data(), c.data_mut(), 0, m, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(nthreads);
+    let a_data = a.data();
+    let b_data = b.data();
+    let mut panels: Vec<&mut [f32]> = c.data_mut().chunks_mut(rows_per * n).collect();
+    std::thread::scope(|s| {
+        for (t, panel) in panels.iter_mut().enumerate() {
+            let row0 = t * rows_per;
+            let rows = panel.len() / n;
+            let panel: &mut [f32] = panel;
+            s.spawn(move || {
                 gemm_panel(a_data, b_data, panel, row0, rows, k, n);
             });
         }
     });
 }
 
-/// Single-threaded blocked kernel over a row panel `[row0, row0+rows)`.
-/// `c_panel` is the panel's slice of C (row-major, `rows * n`).
+/// Seed-era single-threaded blocked-but-unpacked kernel over a row
+/// panel `[row0, row0+rows)`. Retained as the bit-identity oracle.
 fn gemm_panel(a: &[f32], b: &[f32], c_panel: &mut [f32], row0: usize, rows: usize, k: usize, n: usize) {
     for ib in (0..rows).step_by(MC) {
         let ie = (ib + MC).min(rows);
@@ -114,8 +170,183 @@ fn gemm_panel(a: &[f32], b: &[f32], c_panel: &mut [f32], row0: usize, rows: usiz
     }
 }
 
+/// Packed register-blocked kernel over a row panel `[row0, row0+rows)`.
+///
+/// Per KC-deep slice of B the panel packs the slice once into
+/// contiguous KC×NR column panels (tail panel zero-padded), then runs
+/// the MR×NR micro-kernel over MC-row blocks of A, so the inner loop
+/// reads one sequential 8-KiB panel instead of striding full rows of
+/// B. Bit-identity vs [`gemm_panel`]: element `(i, j)` still
+/// accumulates `a[i][kk] * b[kk][j]` over the *same* ascending `kk`
+/// sequence with the *same* `a == 0.0` skips — packing moves bytes,
+/// never the chain; the zero-padded tail lanes are computed but never
+/// written back.
+fn gemm_panel_packed(
+    a: &[f32],
+    b: &[f32],
+    c_panel: &mut [f32],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    if rows == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let npanels = n.div_ceil(NR);
+    let mut packed = vec![0.0f32; npanels * NR * KC.min(k)];
+    for kb in (0..k).step_by(KC) {
+        let ke = (kb + KC).min(k);
+        let kcb = ke - kb;
+        pack_b(b, kb, ke, n, &mut packed);
+        for ib in (0..rows).step_by(MC) {
+            let ie = (ib + MC).min(rows);
+            for jp in 0..npanels {
+                let j0 = jp * NR;
+                let jw = NR.min(n - j0);
+                let panel = &packed[jp * kcb * NR..(jp + 1) * kcb * NR];
+                let mut i = ib;
+                while i < ie {
+                    let rb = MR.min(ie - i);
+                    micro_kernel(a, k, row0 + i, i, rb, panel, kb, kcb, c_panel, n, j0, jw);
+                    i += rb;
+                }
+            }
+        }
+    }
+}
+
+/// Pack `B[kb..ke, :]` into column panels of width NR:
+/// `packed[(jp * kcb + kk) * NR + jr] = B[kb + kk, jp * NR + jr]`,
+/// with the ragged tail panel zero-padded so the micro-kernel never
+/// branches on column width.
+fn pack_b(b: &[f32], kb: usize, ke: usize, n: usize, packed: &mut [f32]) {
+    let kcb = ke - kb;
+    let npanels = n.div_ceil(NR);
+    for jp in 0..npanels {
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let dst_panel = &mut packed[jp * kcb * NR..(jp + 1) * kcb * NR];
+        for kk in 0..kcb {
+            let src = &b[(kb + kk) * n + j0..(kb + kk) * n + j0 + jw];
+            let dst = &mut dst_panel[kk * NR..kk * NR + NR];
+            dst[..jw].copy_from_slice(src);
+            for pad in dst[jw..].iter_mut() {
+                *pad = 0.0;
+            }
+        }
+    }
+}
+
+/// MR×NR micro-kernel: accumulate `rb ≤ MR` rows of A against one
+/// packed column panel into register accumulators, spilling to C once
+/// per (kb, block) instead of once per k step. `jw ≤ NR` masks the
+/// ragged column tail on the way in and out; the padded lanes compute
+/// on zeros and are discarded.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_kernel(
+    a: &[f32],
+    k: usize,
+    arow0: usize,
+    i0: usize,
+    rb: usize,
+    panel: &[f32],
+    kb: usize,
+    kcb: usize,
+    c_panel: &mut [f32],
+    n: usize,
+    j0: usize,
+    jw: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (r, accr) in acc.iter_mut().enumerate().take(rb) {
+        let crow = &c_panel[(i0 + r) * n + j0..(i0 + r) * n + j0 + jw];
+        accr[..jw].copy_from_slice(crow);
+    }
+    for kk in 0..kcb {
+        let brow = &panel[kk * NR..kk * NR + NR];
+        for (r, accr) in acc.iter_mut().enumerate().take(rb) {
+            let av = a[(arow0 + r) * k + kb + kk];
+            if av == 0.0 {
+                continue; // same skip, same chain, as the oracle
+            }
+            // unrolled: NR independent lanes, one vector FMA-shaped op
+            for jr in 0..NR {
+                accr[jr] += av * brow[jr];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(rb) {
+        let crow = &mut c_panel[(i0 + r) * n + j0..(i0 + r) * n + j0 + jw];
+        crow.copy_from_slice(&accr[..jw]);
+    }
+}
+
 /// `C = A^T * B` (A is `k x m`, result `m x n`). Used for weight grads.
+/// Parallelised over row panels of C (= column ranges of A) through the
+/// same budget as [`gemm`]; each panel replays the reference kernel's
+/// ascending-k accumulation, so any width is bit-identical to
+/// [`gemm_ta_reference`].
 pub fn gemm_ta(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "gemm_ta shape mismatch");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    let nthreads = thread_count(m * k * n);
+    if nthreads <= 1 {
+        gemm_ta_panel(a.data(), b.data(), c.data_mut(), 0, m, m, k, n);
+        return c;
+    }
+    let rows_per = m.div_ceil(nthreads);
+    let a_data = a.data();
+    let b_data = b.data();
+    let mut panels: Vec<&mut [f32]> = c.data_mut().chunks_mut(rows_per * n).collect();
+    std::thread::scope(|s| {
+        for (t, panel) in panels.iter_mut().enumerate() {
+            let col0 = t * rows_per;
+            let rows = panel.len() / n;
+            let panel: &mut [f32] = panel;
+            s.spawn(move || {
+                gemm_ta_panel(a_data, b_data, panel, col0, rows, m, k, n);
+            });
+        }
+    });
+    c
+}
+
+/// One row panel of `C = AᵀB`: C rows `[col0, col0+rows)` are A's
+/// columns of the same range. Outer loop stays ascending over k (the
+/// per-element chain), the panel split only confines which C rows this
+/// thread touches — blocking C into cache while B streams.
+fn gemm_ta_panel(
+    a: &[f32],
+    b: &[f32],
+    c_panel: &mut [f32],
+    col0: usize,
+    rows: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    for kk in 0..k {
+        let arow = &a[kk * m..kk * m + m];
+        let brow = &b[kk * n..kk * n + n];
+        for i in 0..rows {
+            let av = arow[col0 + i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c_panel[i * n..i * n + n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Seed-era single-threaded `C = AᵀB` — the bit-identity oracle for
+/// [`gemm_ta`] and the fig16 "old" column.
+pub fn gemm_ta_reference(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows, b.rows, "gemm_ta shape mismatch");
     let (k, m, n) = (a.rows, a.cols, b.cols);
     let mut c = Matrix::zeros(m, n);
@@ -139,8 +370,63 @@ pub fn gemm_ta(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// `C = A * B^T` (B is `n x k`). Used for input grads.
+/// `C = A * B^T` (B is `n x k`). Used for input grads. Parallelised
+/// over row panels of C/A through the same budget as [`gemm`]; each
+/// output element is one serial ascending-k dot product (no zero skip,
+/// matching the reference exactly — adding one would change ±0.0/NaN
+/// propagation), NR of them accumulated side by side for ILP.
 pub fn gemm_tb(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "gemm_tb shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    let nthreads = thread_count(m * k * n);
+    if nthreads <= 1 {
+        gemm_tb_panel(a.data(), b.data(), c.data_mut(), 0, m, k, n);
+        return c;
+    }
+    let rows_per = m.div_ceil(nthreads);
+    let a_data = a.data();
+    let b_data = b.data();
+    let mut panels: Vec<&mut [f32]> = c.data_mut().chunks_mut(rows_per * n).collect();
+    std::thread::scope(|s| {
+        for (t, panel) in panels.iter_mut().enumerate() {
+            let row0 = t * rows_per;
+            let rows = panel.len() / n;
+            let panel: &mut [f32] = panel;
+            s.spawn(move || {
+                gemm_tb_panel(a_data, b_data, panel, row0, rows, k, n);
+            });
+        }
+    });
+    c
+}
+
+/// One row panel of `C = ABᵀ`: NR dot products run side by side so
+/// `a[i][kk]` loads once per kk instead of once per (j, kk); each
+/// product is still its own serial ascending-k chain, so bits match
+/// [`gemm_tb_reference`]'s one-at-a-time loop.
+fn gemm_tb_panel(a: &[f32], b: &[f32], c_panel: &mut [f32], row0: usize, rows: usize, k: usize, n: usize) {
+    for i in 0..rows {
+        let arow = &a[(row0 + i) * k..(row0 + i) * k + k];
+        let crow = &mut c_panel[i * n..i * n + n];
+        let mut j0 = 0;
+        while j0 < n {
+            let jw = NR.min(n - j0);
+            let mut acc = [0.0f32; NR];
+            for (kk, &av) in arow.iter().enumerate() {
+                for jr in 0..jw {
+                    acc[jr] += av * b[(j0 + jr) * k + kk];
+                }
+            }
+            crow[j0..j0 + jw].copy_from_slice(&acc[..jw]);
+            j0 += jw;
+        }
+    }
+}
+
+/// Seed-era single-threaded `C = ABᵀ` — the bit-identity oracle for
+/// [`gemm_tb`] and the fig16 "old" column.
+pub fn gemm_tb_reference(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.cols, "gemm_tb shape mismatch");
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut c = Matrix::zeros(m, n);
@@ -172,7 +458,64 @@ pub fn addmm(a: &Matrix, b: &Matrix, c0: &Matrix, alpha: f32, beta: f32) -> Matr
 /// Sparse (CSR) times dense: `out = S * D` where S is given by
 /// `(offsets, targets, values)` with `offsets.len() == out.rows + 1`.
 /// This is the aggregation `Â·H` of the GCN layer on the native path.
+///
+/// Work splits across threads by **cumulative nnz**, not row count:
+/// `offsets` is already the prefix-nnz array, so each thread's row
+/// range is picked by binary search at `t · nnz / threads` — a skewed
+/// degree distribution (one hub row with half the edges) no longer
+/// serialises behind the thread that drew the hub. Per-row
+/// accumulation order is untouched, so any split is bit-identical to
+/// [`spmm_csr_reference`].
 pub fn spmm_csr(
+    offsets: &[usize],
+    targets: &[u32],
+    values: &[f32],
+    dense: &Matrix,
+    out_rows: usize,
+) -> Matrix {
+    assert_eq!(offsets.len(), out_rows + 1);
+    let n = dense.cols;
+    let mut out = Matrix::zeros(out_rows, n);
+    let nnz = targets.len();
+    let nthreads = thread_count(nnz * n * 4).min(out_rows.max(1));
+    if nthreads <= 1 {
+        spmm_rows(offsets, targets, values, dense, out.data_mut(), 0, out_rows);
+        return out;
+    }
+    // nnz-balanced row boundaries: bounds[t] = first row whose prefix
+    // nnz reaches t/nthreads of the total (monotone by construction)
+    let mut bounds = Vec::with_capacity(nthreads + 1);
+    bounds.push(0usize);
+    for t in 1..nthreads {
+        let goal = t * nnz / nthreads;
+        let r = offsets.partition_point(|&o| o < goal).min(out_rows);
+        bounds.push(r.max(*bounds.last().expect("bounds is non-empty")));
+    }
+    bounds.push(out_rows);
+    let mut panels: Vec<(usize, &mut [f32])> = Vec::with_capacity(nthreads);
+    let mut rest = out.data_mut();
+    for t in 0..nthreads {
+        let (head, tail) = rest.split_at_mut((bounds[t + 1] - bounds[t]) * n);
+        panels.push((bounds[t], head));
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        for (row0, panel) in panels.iter_mut() {
+            let row0 = *row0;
+            let rows = panel.len() / n;
+            let panel: &mut [f32] = panel;
+            s.spawn(move || {
+                spmm_rows(offsets, targets, values, dense, panel, row0, rows);
+            });
+        }
+    });
+    out
+}
+
+/// Seed-era `spmm_csr` splitting by row count — the load-balance
+/// baseline the nnz split is property-tested against (identical bits,
+/// different wall-clock under degree skew) and the fig16 "old" column.
+pub fn spmm_csr_reference(
     offsets: &[usize],
     targets: &[u32],
     values: &[f32],

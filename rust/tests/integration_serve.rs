@@ -591,6 +591,112 @@ fn checkpoint_to_serving_pipeline() {
     assert_eq!(preds, oracle);
 }
 
+/// Tentpole (PR 9): the gather→GEMM pipeline must actually overlap —
+/// a warm partial recompute whose next layer has safe rows emits a
+/// `serve.pipeline` span with a `serve.gather_prefetch` child on the
+/// worker thread — and the overlapped answers must be bit-identical
+/// to the degenerate (never-pipelined) full forward.
+#[test]
+fn gather_gemm_pipeline_overlaps_and_preserves_answers() {
+    use gad::obs::trace;
+    // Path graph 0-1-2-3-4-5. After warming the cones of 0 and 2,
+    // querying {1, 4} leaves layer-0 work {4, 5}, while node 1's
+    // layer-1 gather depends only on already-valid rows {0, 1, 2} —
+    // exactly one safe prefetch row, deterministically.
+    let n = 6usize;
+    let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|v| (v, v + 1)).collect();
+    let graph = GraphBuilder::new(n).edges(&edges).build();
+    let fdim = 5usize;
+    let mut features = Matrix::zeros(n, fdim);
+    for v in 0..n {
+        for c in 0..fdim {
+            features[(v, c)] = ((v * fdim + c) as f32).sin();
+        }
+    }
+    let mut rng = Rng::seed_from_u64(93);
+    let params = GcnParams::init(fdim, 8, 3, 2, &mut rng);
+
+    // degenerate control: full recompute, no cache — every next-layer
+    // row has its own input in flight, so this path never pipelines
+    let ctl_cfg = ServeConfig { shards: 1, cache: false, pruned: false, ..Default::default() };
+    let mut ctl = Server::build(graph.clone(), features.clone(), params.clone(), ctl_cfg).unwrap();
+    let ctl_res = ctl.query_batch(&[1, 4]).unwrap();
+
+    let _g = trace::exclusive();
+    trace::drain();
+    trace::enable();
+    let cfg = ServeConfig { shards: 1, ..Default::default() };
+    let mut srv = Server::build(graph, features, params, cfg).unwrap();
+    srv.query_batch(&[0]).unwrap(); // warm cone of 0: layer 0 {0,1}, layer 1 {0}
+    srv.query_batch(&[2]).unwrap(); // warm cone of 2: layer 0 +{2,3}, layer 1 +{2}
+    let res = srv.query_batch(&[1, 4]).unwrap();
+    trace::disable();
+    let t = trace::drain();
+
+    assert!(t.count_named("serve.pipeline") >= 1, "overlap window must be spanned");
+    assert!(t.count_named("serve.gather_prefetch") >= 1, "prefetch worker must be spanned");
+    let pipeline_ids: Vec<u64> =
+        t.events.iter().filter(|e| e.name == "serve.pipeline").map(|e| e.id).collect();
+    for e in t.events.iter().filter(|e| e.name == "serve.gather_prefetch") {
+        assert!(
+            e.parent.map(|p| pipeline_ids.contains(&p)).unwrap_or(false),
+            "prefetch must nest under its pipeline window"
+        );
+        assert!(e.args.iter().any(|&(k, v)| k == "rows" && v >= 1));
+    }
+    // and the next layer's gather actually consumed prefetched rows
+    assert!(
+        t.events.iter().any(|e| e.name == "serve.gather"
+            && e.args.iter().any(|&(k, v)| k == "prefetched" && v >= 1)),
+        "a gather must report prefetched rows"
+    );
+
+    // not one bit moved relative to the unpipelined control
+    for (a, b) in res.iter().zip(&ctl_res) {
+        assert_eq!(a.pred, b.pred);
+        assert_eq!(
+            a.probs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.probs.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}
+
+/// PR 9 acceptance: a staged warm-then-mixed query sequence — the
+/// shape that exercises gather→GEMM pipelining — answers
+/// bit-identically at serve widths 1 and 4, and the full sweep still
+/// agrees with the training forward.
+#[test]
+fn pipelined_serving_is_bit_identical_at_widths_1_and_4() {
+    let (ds, params) = fixture(27, 3);
+    let oracle = native_preds(&ds, &params);
+    let n = ds.num_nodes() as u32;
+    // two disjoint warm-ups, then a batch mixing warm and cold nodes
+    // (partial recomputes with prefetchable rows), then the whole graph
+    let warm_a: Vec<u32> = (0..n).step_by(5).collect();
+    let warm_b: Vec<u32> = (2..n).step_by(7).collect();
+    let mixed: Vec<u32> = (0..n).filter(|v| v % 3 != 1).collect();
+    let mut fingerprints: Vec<Vec<(u32, u32, Vec<u32>)>> = Vec::new();
+    for threads in [1usize, 4] {
+        let cfg =
+            ServeConfig { shards: 4, serve_threads: threads, seed: 11, ..Default::default() };
+        let mut srv = Server::for_dataset(&ds, params.clone(), cfg).unwrap();
+        srv.query_batch(&warm_a).unwrap();
+        srv.query_batch(&warm_b).unwrap();
+        let mixed_res = srv.query_batch(&mixed).unwrap();
+        let full_res = srv.query_batch(&all_nodes(&ds)).unwrap();
+        let full_preds: Vec<u32> = full_res.iter().map(|r| r.pred).collect();
+        assert_eq!(full_preds, oracle, "width {threads} vs training forward");
+        fingerprints.push(
+            mixed_res
+                .iter()
+                .chain(&full_res)
+                .map(|r| (r.node, r.pred, r.probs.iter().map(|v| v.to_bits()).collect()))
+                .collect(),
+        );
+    }
+    assert_eq!(fingerprints[0], fingerprints[1], "serve width changed an answer bit");
+}
+
 #[test]
 fn cached_microbatched_serving_beats_unsharded_pernode() {
     // the Fig-11 acceptance criterion, at test scale: steady-state

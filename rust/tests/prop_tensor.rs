@@ -3,11 +3,34 @@
 use gad::proptest_util::forall;
 use gad::rng::Rng;
 use gad::tensor::{
-    add_assign, cross_entropy_masked, gemm, gemm_ta, gemm_tb, relu, scale, softmax_rows, Matrix,
+    add_assign, cross_entropy_masked, gemm, gemm_into, gemm_reference, gemm_reference_into,
+    gemm_ta, gemm_ta_reference, gemm_tb, gemm_tb_reference, relu, scale, set_intra_threads,
+    softmax_rows, spmm_csr, spmm_csr_reference, Matrix,
 };
 
 fn rand_m(rng: &mut Rng, r: usize, c: usize) -> Matrix {
     Matrix::rand_uniform(r, c, rng)
+}
+
+/// Sparse-ish random matrix: exercises the kernels' `a == 0.0` skip,
+/// which must fire for the same elements on both sides of a
+/// bit-identity pair.
+fn rand_sparse(rng: &mut Rng, r: usize, c: usize, p_zero: f64) -> Matrix {
+    let mut m = Matrix::rand_uniform(r, c, rng);
+    for v in m.data_mut() {
+        if rng.gen_bool(p_zero) {
+            *v = 0.0;
+        }
+    }
+    m
+}
+
+/// Bit-for-bit equality — the determinism contract, stronger than
+/// `allclose`.
+fn bits_equal(a: &Matrix, b: &Matrix) -> bool {
+    a.rows == b.rows
+        && a.cols == b.cols
+        && a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 #[test]
@@ -120,6 +143,151 @@ fn prop_relu_idempotent_and_nonneg() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_packed_gemm_bitidentical_to_reference() {
+    // random ragged (m, k, n) — deliberately not multiples of the
+    // MR=4 / NR=8 register blocks, so the masked tail kernel runs on
+    // most iterations
+    forall("packed gemm == unpacked oracle, bit-for-bit", 20, |rng| {
+        let (m, k, n) = (1 + rng.gen_range(70), 1 + rng.gen_range(70), 1 + rng.gen_range(70));
+        let a = rand_sparse(rng, m, k, 0.3);
+        let b = rand_m(rng, k, n);
+        if !bits_equal(&gemm(&a, &b), &gemm_reference(&a, &b)) {
+            return Err(format!("gemm bits diverged at ({m},{k},{n})"));
+        }
+        // the accumulate form: C starts non-zero
+        let c0 = rand_m(rng, m, n);
+        let mut c_new = c0.clone();
+        let mut c_ref = c0;
+        gemm_into(&a, &b, &mut c_new);
+        gemm_reference_into(&a, &b, &mut c_ref);
+        if !bits_equal(&c_new, &c_ref) {
+            return Err(format!("gemm_into bits diverged at ({m},{k},{n})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_grad_kernels_bitidentical_to_sequential() {
+    forall("gemm_ta/tb panels == sequential oracles, bit-for-bit", 20, |rng| {
+        let (m, k, n) = (1 + rng.gen_range(40), 1 + rng.gen_range(40), 1 + rng.gen_range(40));
+        let a = rand_sparse(rng, k, m, 0.3); // gemm_ta takes A as k x m
+        let b = rand_m(rng, k, n);
+        if !bits_equal(&gemm_ta(&a, &b), &gemm_ta_reference(&a, &b)) {
+            return Err(format!("gemm_ta bits diverged at ({m},{k},{n})"));
+        }
+        let c = rand_m(rng, m, k);
+        let d = rand_m(rng, n, k); // gemm_tb takes B as n x k
+        if !bits_equal(&gemm_tb(&c, &d), &gemm_tb_reference(&c, &d)) {
+            return Err(format!("gemm_tb bits diverged at ({m},{k},{n})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmm_nnz_split_bitidentical_to_row_split() {
+    forall("nnz-balanced spmm == row-count split, bit-for-bit", 20, |rng| {
+        let rows = 1 + rng.gen_range(60);
+        let cols = 1 + rng.gen_range(60);
+        let n = 1 + rng.gen_range(24);
+        // skewed degrees: a few hub rows carry most of the nnz — the
+        // case the nnz split exists for
+        let mut offsets = vec![0usize];
+        let mut targets: Vec<u32> = Vec::new();
+        let mut values: Vec<f32> = Vec::new();
+        for r in 0..rows {
+            let deg = if r % 7 == 0 { rng.gen_range(40) } else { rng.gen_range(4) };
+            for _ in 0..deg {
+                targets.push(rng.gen_range(cols) as u32);
+                values.push(0.1 + rng.gen_f32());
+            }
+            offsets.push(targets.len());
+        }
+        let dense = rand_m(rng, cols, n);
+        let new = spmm_csr(&offsets, &targets, &values, &dense, rows);
+        let old = spmm_csr_reference(&offsets, &targets, &values, &dense, rows);
+        if !bits_equal(&new, &old) {
+            return Err(format!("spmm bits diverged at rows={rows} nnz={}", targets.len()));
+        }
+        Ok(())
+    });
+}
+
+/// Fixed shapes that cross every blocking boundary (MR=4, NR=8, MC=64,
+/// KC=256) plus one large enough to clear the parallelism threshold,
+/// where the new kernels genuinely run multi-threaded. Each shape is
+/// also recomputed under intra-thread budgets 1 and 4 — any width must
+/// produce the same bits.
+#[test]
+fn kernel_bitidentity_across_blocking_and_thread_widths() {
+    let mut rng = Rng::seed_from_u64(0xC0FFEE);
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (4, 8, 8),       // exact register blocks
+        (5, 9, 11),      // ragged everywhere
+        (64, 256, 8),    // exact MC / KC / NR
+        (65, 257, 17),   // one past every block edge
+        (136, 132, 128), // > PAR_THRESHOLD MACs: threaded path
+    ] {
+        let a = rand_sparse(&mut rng, m, k, 0.25);
+        let b = rand_m(&mut rng, k, n);
+        let reference = gemm_reference(&a, &b);
+        let at = rand_sparse(&mut rng, k, m, 0.25);
+        let ta_reference = gemm_ta_reference(&at, &b);
+        let bt = rand_m(&mut rng, n, k);
+        let tb_reference = gemm_tb_reference(&a, &bt);
+        for budget in [1usize, 4] {
+            set_intra_threads(budget);
+            assert!(
+                bits_equal(&gemm(&a, &b), &reference),
+                "gemm ({m},{k},{n}) diverged at budget {budget}"
+            );
+            assert!(
+                bits_equal(&gemm_ta(&at, &b), &ta_reference),
+                "gemm_ta ({m},{k},{n}) diverged at budget {budget}"
+            );
+            assert!(
+                bits_equal(&gemm_tb(&a, &bt), &tb_reference),
+                "gemm_tb ({m},{k},{n}) diverged at budget {budget}"
+            );
+        }
+        set_intra_threads(0);
+    }
+}
+
+/// A hub graph big enough to force the threaded spmm path: row 0 holds
+/// half the edges, so the row-count split serialises behind thread 0
+/// while the nnz split rebalances — and the bits must not move.
+#[test]
+fn spmm_hub_graph_bitidentical_under_thread_widths() {
+    let mut rng = Rng::seed_from_u64(0xBEEF);
+    let (rows, cols, n) = (512usize, 512usize, 64usize);
+    let hub_deg = 8_192usize;
+    let mut offsets = vec![0usize];
+    let mut targets: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    for r in 0..rows {
+        let deg = if r == 0 { hub_deg } else { 1 + rng.gen_range(16) };
+        for _ in 0..deg {
+            targets.push(rng.gen_range(cols) as u32);
+            values.push(0.1 + rng.gen_f32());
+        }
+        offsets.push(targets.len());
+    }
+    let dense = Matrix::rand_uniform(cols, n, &mut rng);
+    let reference = spmm_csr_reference(&offsets, &targets, &values, &dense, rows);
+    for budget in [1usize, 4] {
+        set_intra_threads(budget);
+        assert!(
+            bits_equal(&spmm_csr(&offsets, &targets, &values, &dense, rows), &reference),
+            "spmm hub graph diverged at budget {budget}"
+        );
+    }
+    set_intra_threads(0);
 }
 
 #[test]

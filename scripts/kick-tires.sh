@@ -1,9 +1,9 @@
 #!/usr/bin/env bash
-# Small-N smoke of the serving figure family (fig11–15): build the CLI,
-# run serve-bench + load-bench (with a trace) + profile in --fast mode
-# into out/, and assert the artifacts landed non-empty and the Chrome
-# trace parses as JSON. This is the "does the whole pipeline still
-# produce numbers" check — correctness lives in `cargo test`.
+# Small-N smoke of the serving figure family (fig11–16): build the CLI,
+# run serve-bench + load-bench (with a trace) + profile + kernel-bench
+# in --fast mode into out/, and assert the artifacts landed non-empty
+# and the JSON artifacts parse. This is the "does the whole pipeline
+# still produce numbers" check — correctness lives in `cargo test`.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -28,6 +28,9 @@ echo "== kick-tires: fig14 (load-bench, fast, tiny, 4-wide serve pool, traced) =
 echo "== kick-tires: fig15 (profile, fast, tiny) =="
 "$GAD" profile --dataset tiny --fast --out-dir "$OUT"
 
+echo "== kick-tires: fig16 (kernel-bench, fast shapes) =="
+"$GAD" kernel-bench --fast --out-dir "$OUT"
+
 echo "== kick-tires: checking artifacts =="
 status=0
 for f in \
@@ -36,6 +39,7 @@ for f in \
     fig13_rebalance.md fig13_rebalance.csv fig13_rebalance.json \
     fig14_load_knee.md fig14_load_knee.csv fig14_load_knee.json \
     fig15_profile.md fig15_profile.csv fig15_profile.json \
+    fig16_kernels.md fig16_kernels.csv fig16_kernels.json \
     trace_load.json; do
     if [[ ! -s "$OUT/$f" ]]; then
         echo "MISSING or empty: $OUT/$f" >&2
@@ -47,7 +51,7 @@ done
 
 # the Chrome trace must be loadable JSON (Perfetto / chrome://tracing)
 if command -v python3 >/dev/null 2>&1; then
-    for f in trace_load.json fig15_profile.json; do
+    for f in trace_load.json fig15_profile.json fig16_kernels.json; do
         if python3 -m json.tool "$OUT/$f" >/dev/null; then
             echo "ok: $OUT/$f parses as JSON"
         else
@@ -66,7 +70,8 @@ cp "$OUT/fig12_churn.json" "$OUT/BENCH_fig12.json"
 cp "$OUT/fig13_rebalance.json" "$OUT/BENCH_fig13.json"
 cp "$OUT/fig14_load_knee.json" "$OUT/BENCH_fig14.json"
 cp "$OUT/fig15_profile.json" "$OUT/BENCH_fig15.json"
-for f in BENCH_fig11.json BENCH_fig12.json BENCH_fig13.json BENCH_fig14.json BENCH_fig15.json; do
+cp "$OUT/fig16_kernels.json" "$OUT/BENCH_fig16.json"
+for f in BENCH_fig11.json BENCH_fig12.json BENCH_fig13.json BENCH_fig14.json BENCH_fig15.json BENCH_fig16.json; do
     if [[ ! -s "$OUT/$f" ]]; then
         echo "MISSING or empty: $OUT/$f" >&2
         status=1
@@ -79,4 +84,4 @@ if [[ $status -ne 0 ]]; then
     echo "kick-tires FAILED" >&2
     exit $status
 fi
-echo "kick-tires passed: fig11-15 artifacts (+BENCH_*.json, trace) present in $OUT/"
+echo "kick-tires passed: fig11-16 artifacts (+BENCH_*.json, trace) present in $OUT/"
