@@ -69,6 +69,9 @@ fn trace_begin(args: &Args) -> Option<String> {
     if path.is_empty() {
         return None;
     }
+    // --trace-ring flips the buffer-full policy from keep-oldest (see
+    // how the run started) to keep-newest (see how it ended)
+    crate::obs::trace::set_ring_mode(args.has("trace-ring"));
     crate::obs::trace::enable();
     Some(path.to_string())
 }
@@ -80,7 +83,11 @@ fn trace_finish(path: Option<String>) -> Result<()> {
     let Some(path) = path else { return Ok(()) };
     crate::obs::trace::disable();
     let t = crate::obs::trace::drain();
+    crate::obs::trace::set_ring_mode(false);
     write_result_file(&path, &t.to_chrome_json())?;
+    if t.dropped > 0 {
+        eprintln!("trace: buffer full, {} spans dropped (see --trace-ring)", t.dropped);
+    }
     eprintln!("trace: {} spans -> {path}", t.events.len());
     Ok(())
 }

@@ -198,6 +198,10 @@ common flags
                  FILE on exit — open in Perfetto or chrome://tracing.
                  Annotation only: answers and counters are bit-
                  identical with tracing on or off
+  --trace-ring   (with --trace) when the span buffer fills, overwrite
+                 the oldest spans instead of dropping new ones — the
+                 trace shows how the run *ended* rather than how it
+                 started; dropped-span count is reported either way
 
 async consensus flags (with --consensus async)
   --staleness N  hard staleness bound s: older gradients are dropped

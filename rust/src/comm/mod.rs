@@ -31,7 +31,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Byte counters, shared across worker threads.
 #[derive(Default, Debug)]
 pub struct CommLedger {
+    /// Halo/feature pulls during subgraph construction.
     feature_bytes: AtomicU64,
+    /// Worker->leader gradient pushes; relaxed ordering is safe because
+    /// counters are read only after the thread scope joins.
     gradient_bytes: AtomicU64,
     /// Replica re-synchronisation traffic (async engine: a laggard
     /// whose gradient exceeded the staleness bound, or a recovered

@@ -35,20 +35,36 @@
 
 use std::cell::{Cell, RefCell};
 use std::fmt::Write as _;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard, OnceLock};
 use std::time::Instant;
 
-/// Hard cap on buffered span records: beyond it new spans are counted
-/// in [`Trace::dropped`] and discarded, so a pathological run degrades
-/// the *trace*, never the process.
+/// Hard cap on buffered span records: beyond it the overflow policy
+/// kicks in ([`set_ring_mode`]), so a pathological run degrades the
+/// *trace*, never the process.
 pub const MAX_EVENTS: usize = 1_000_000;
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
 static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
 static NEXT_TID: AtomicU64 = AtomicU64::new(1);
 static DROPPED: AtomicU64 = AtomicU64::new(0);
-static EVENTS: Mutex<Vec<SpanRecord>> = Mutex::new(Vec::new());
+/// Overflow policy: false (default) keeps the *oldest* spans — the
+/// trace shows how the run started; true keeps the *newest* — the
+/// trace shows how it ended (what you want when diagnosing a tail
+/// slowdown hours into a run).
+static RING_MODE: AtomicBool = AtomicBool::new(false);
+/// Test hook: 0 means [`MAX_EVENTS`]; tests shrink it to exercise the
+/// overflow paths without allocating a million records.
+static CAPACITY: AtomicUsize = AtomicUsize::new(0);
+/// Span storage plus the ring cursor: `start` is the index of the
+/// logically-oldest record once ring mode has wrapped (0 otherwise).
+/// One struct under one Mutex so cursor and buffer can never drift.
+struct EventBuf {
+    buf: Vec<SpanRecord>,
+    start: usize,
+}
+// annotation-only global (see module docs): spans never feed answers
+static EVENTS: Mutex<EventBuf> = Mutex::new(EventBuf { buf: Vec::new(), start: 0 });
 static THREAD_LABELS: Mutex<Vec<(u64, String)>> = Mutex::new(Vec::new());
 
 /// The instant all wall-span timestamps are relative to (first use).
@@ -77,8 +93,36 @@ fn current_tid() -> u64 {
     })
 }
 
-fn lock_events() -> MutexGuard<'static, Vec<SpanRecord>> {
+fn lock_events() -> MutexGuard<'static, EventBuf> {
     EVENTS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn capacity() -> usize {
+    match CAPACITY.load(Ordering::Relaxed) {
+        0 => MAX_EVENTS,
+        n => n,
+    }
+}
+
+/// Select the buffer-full policy: `false` (default) drops *new* spans
+/// past the cap, keeping the run's beginning; `true` overwrites the
+/// *oldest*, keeping its end. Either way [`Trace::dropped`] counts the
+/// casualties. Annotation-only like the rest of the tracer — the
+/// policy changes which spans survive, never any answer byte.
+pub fn set_ring_mode(on: bool) {
+    RING_MODE.store(on, Ordering::SeqCst);
+}
+
+/// Current overflow policy (true = keep newest).
+pub fn is_ring_mode() -> bool {
+    RING_MODE.load(Ordering::Relaxed)
+}
+
+/// Test hook: shrink the buffer cap to exercise overflow without a
+/// million allocations. `0` restores [`MAX_EVENTS`]. Takes effect for
+/// spans recorded after the call; pair with [`exclusive`] in tests.
+pub fn set_capacity_for_tests(n: usize) {
+    CAPACITY.store(n, Ordering::SeqCst);
 }
 
 fn lock_labels() -> MutexGuard<'static, Vec<(u64, String)>> {
@@ -158,12 +202,22 @@ impl SpanRecord {
 }
 
 fn record(r: SpanRecord) {
+    let cap = capacity();
     let mut ev = lock_events();
-    if ev.len() >= MAX_EVENTS {
-        DROPPED.fetch_add(1, Ordering::Relaxed);
+    if ev.buf.len() < cap {
+        ev.buf.push(r);
         return;
     }
-    ev.push(r);
+    DROPPED.fetch_add(1, Ordering::Relaxed);
+    if RING_MODE.load(Ordering::Relaxed) {
+        // overwrite the logically-oldest slot and advance the cursor;
+        // modulo the *actual* length so a cap shrunk mid-run (test
+        // hook) still indexes in bounds
+        let len = ev.buf.len();
+        let slot = ev.start % len;
+        ev.buf[slot] = r;
+        ev.start = (slot + 1) % len;
+    }
 }
 
 /// RAII scope: records a span from construction to drop. Prefer the
@@ -320,7 +374,8 @@ pub struct Trace {
     pub events: Vec<SpanRecord>,
     /// `(tid, label)` pairs registered via [`set_thread_label`].
     pub thread_labels: Vec<(u64, String)>,
-    /// Spans discarded past [`MAX_EVENTS`].
+    /// Spans lost to the buffer cap: new spans discarded in the
+    /// default policy, oldest spans overwritten in ring mode.
     pub dropped: u64,
 }
 
@@ -427,7 +482,18 @@ fn escape_json(s: &str) -> String {
 /// Take everything captured so far and clear the buffers. The span-id
 /// counter is *not* reset, so ids stay unique across drains.
 pub fn drain() -> Trace {
-    let events = std::mem::take(&mut *lock_events());
+    let events = {
+        let mut ev = lock_events();
+        let start = ev.start;
+        ev.start = 0;
+        let mut buf = std::mem::take(&mut ev.buf);
+        // a wrapped ring stores oldest-at-`start`; rotate so callers
+        // always see chronological order regardless of policy
+        if start > 0 && !buf.is_empty() {
+            buf.rotate_left(start % buf.len());
+        }
+        buf
+    };
     let thread_labels = std::mem::take(&mut *lock_labels());
     let dropped = DROPPED.swap(0, Ordering::Relaxed);
     Trace { events, thread_labels, dropped }
@@ -544,6 +610,70 @@ mod tests {
         assert!(balance('{', '}'), "unbalanced braces");
         assert!(balance('[', ']'), "unbalanced brackets");
         assert_eq!(json.matches('"').count() % 2, 0, "unpaired quotes");
+    }
+
+    /// Emit `n` instant virtual spans tagged `seq = 0..n` so overflow
+    /// tests can tell exactly which records survived.
+    fn emit_numbered(n: i64) {
+        for i in 0..n {
+            virtual_span("loadgen.service", 0, i as u64, 1, &[("seq", i)]);
+        }
+    }
+
+    fn seqs(t: &Trace) -> Vec<i64> {
+        t.events.iter().map(|e| e.args[0].1).collect()
+    }
+
+    #[test]
+    fn default_overflow_keeps_oldest_and_counts_drops() {
+        let _x = exclusive();
+        drain();
+        set_capacity_for_tests(4);
+        set_ring_mode(false);
+        enable();
+        emit_numbered(7);
+        disable();
+        let t = drain();
+        set_capacity_for_tests(0);
+        assert_eq!(seqs(&t), vec![0, 1, 2, 3], "head of the run survives");
+        assert_eq!(t.dropped, 3, "three spans past the cap were discarded");
+    }
+
+    #[test]
+    fn ring_overflow_keeps_newest_in_chronological_order() {
+        let _x = exclusive();
+        drain();
+        set_capacity_for_tests(4);
+        set_ring_mode(true);
+        enable();
+        emit_numbered(7);
+        disable();
+        let t = drain();
+        set_ring_mode(false);
+        set_capacity_for_tests(0);
+        assert_eq!(seqs(&t), vec![3, 4, 5, 6], "tail of the run survives, oldest-first");
+        assert_eq!(t.dropped, 3, "three overwritten spans are counted");
+        // drain reset the cursor: the next capture starts clean
+        enable();
+        emit_numbered(2);
+        disable();
+        assert_eq!(seqs(&drain()), vec![0, 1]);
+    }
+
+    #[test]
+    fn ring_below_capacity_behaves_identically_to_default() {
+        let _x = exclusive();
+        drain();
+        set_capacity_for_tests(8);
+        set_ring_mode(true);
+        enable();
+        emit_numbered(5);
+        disable();
+        let t = drain();
+        set_ring_mode(false);
+        set_capacity_for_tests(0);
+        assert_eq!(seqs(&t), vec![0, 1, 2, 3, 4]);
+        assert_eq!(t.dropped, 0);
     }
 
     #[test]

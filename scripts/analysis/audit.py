@@ -1,0 +1,276 @@
+#!/usr/bin/env python3
+"""Static contract checker for the gad repo.
+
+Mechanizes the line-by-line audit every toolchain-free session since
+PR 5 has repeated by hand: determinism (D), threading (T),
+observability (O), export-surface (X), and hygiene (H) rules over
+``rust/src``, ``rust/tests``, ``rust/benches``, and ``examples``.
+Zero dependencies beyond the Python 3 stdlib — it must run in
+authoring containers that have python3 and nothing else.
+
+Exit status: 0 iff every finding is covered by
+``scripts/analysis/allowlist.txt`` (and no allowlist entry is stale).
+Every exemption is therefore explicit, justified, and diffable.
+
+Usage::
+
+    python3 scripts/analysis/audit.py               # human-readable text
+    python3 scripts/analysis/audit.py --json out/static_audit.json
+    python3 scripts/analysis/audit.py --list-rules
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from rustlex import Finding, SourceFile  # noqa: E402
+
+import rules_determinism  # noqa: E402
+import rules_exports  # noqa: E402
+import rules_hygiene  # noqa: E402
+import rules_observability  # noqa: E402
+import rules_threading  # noqa: E402
+
+RULE_MODULES = [
+    rules_determinism,
+    rules_threading,
+    rules_observability,
+    rules_exports,
+    rules_hygiene,
+]
+
+RULE_DOCS = {
+    "D-TIME-BANNED": "clock reads in graph/, tensor/, augment/, loadgen/generator.rs (never allowlistable)",
+    "D-TIME": "clock reads elsewhere in rust/src need a wall-clock-only justification",
+    "D-HASH-ITER": "HashMap/HashSet iteration with no sort nearby and no order-insensitive terminal",
+    "D-ENTROPY": "ambient entropy (thread_rng/RandomState/rand::…) outside rng.rs",
+    "T-SPAWN": "std::thread::spawn in library code (scoped threads + threads.rs leases only)",
+    "T-SHARED-COMMENT": "static/Atomic/unsafe site without a nearby justification comment",
+    "T-INTRA-LEASE": "set_intra_threads(non-1) in a file that never touches the thread budget",
+    "O-SPAN-INVENTORY": "span emitted in code but missing from README's span inventory (never allowlistable)",
+    "O-SPAN-STALE": "span listed in README's inventory but emitted nowhere (never allowlistable)",
+    "O-ENTER-UNDER": "cross-thread span parent not captured before its thread::scope",
+    "O-REFERENCE-TWIN": "*_reference oracle without an optimized twin + a test pinning both",
+    "X-UNRESOLVED": "use/inline gad::… path in tests/benches/examples that resolves to no pub item",
+    "H-UNWRAP": ".unwrap() in library code",
+    "H-EXPECT": ".expect(…) in library code",
+    "H-PANIC": "panic!/todo!/unimplemented! in library code",
+    "H-PRINT": "println!/dbg! in library code",
+    "ALLOWLIST-UNUSED": "allowlist entry that suppresses nothing (stale — remove it)",
+    "ALLOWLIST-MALFORMED": "allowlist line without a key + justification",
+}
+
+
+class Ctx:
+    def __init__(self, root, files, readme_text):
+        self.root = root
+        self.files = files
+        self.readme_text = readme_text
+
+
+def classify(relpath):
+    if relpath.startswith("rust/src/"):
+        return "src"
+    if relpath.startswith("rust/tests/"):
+        return "test"
+    if relpath.startswith("rust/benches/"):
+        return "bench"
+    if relpath.startswith("examples/"):
+        return "example"
+    return None
+
+
+def load_ctx(root):
+    files = []
+    scan_dirs = ["rust/src", "rust/tests", "rust/benches", "examples"]
+    for d in scan_dirs:
+        top = os.path.join(root, d)
+        if not os.path.isdir(top):
+            continue
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames.sort()
+            if "vendor" in dirpath.replace("\\", "/").split("/"):
+                continue
+            for fn in sorted(filenames):
+                if not fn.endswith(".rs"):
+                    continue
+                full = os.path.join(dirpath, fn)
+                rel = os.path.relpath(full, root).replace("\\", "/")
+                kind = classify(rel)
+                if kind is None:
+                    continue
+                files.append(SourceFile.from_path(full, rel, kind))
+    readme = ""
+    readme_path = os.path.join(root, "README.md")
+    if os.path.exists(readme_path):
+        with open(readme_path, encoding="utf-8") as f:
+            readme = f.read()
+    return Ctx(root, files, readme)
+
+
+def parse_allowlist(path):
+    """Lines: ``KEY  justification…``; '#' comments and blanks skipped.
+    Returns (entries: dict key->justification, findings for malformed
+    lines)."""
+    entries = {}
+    findings = []
+    if not os.path.exists(path):
+        return entries, findings
+    rel = os.path.basename(path)
+    with open(path, encoding="utf-8") as f:
+        for ln, raw in enumerate(f, 1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = line.split(None, 1)
+            if len(parts) != 2 or ":" not in parts[0]:
+                findings.append(
+                    Finding(
+                        rule="ALLOWLIST-MALFORMED",
+                        severity="error",
+                        relpath=f"scripts/analysis/{rel}",
+                        line=ln,
+                        message=(
+                            "allowlist line needs `RULE:path[:slug]` followed by a "
+                            f"justification: `{line[:80]}`"
+                        ),
+                        key=f"ALLOWLIST-MALFORMED:{rel}:{ln}",
+                        suppressable=False,
+                    )
+                )
+                continue
+            entries[parts[0]] = parts[1]
+    return entries, findings
+
+
+def apply_allowlist(findings, entries, allowlist_rel):
+    used = set()
+    for f in findings:
+        if not f.suppressable:
+            continue
+        if f.key in entries:
+            f.allowlisted = True
+            used.add(f.key)
+        elif f.file_key in entries:
+            f.allowlisted = True
+            used.add(f.file_key)
+    out = list(findings)
+    for key in entries:
+        if key not in used:
+            out.append(
+                Finding(
+                    rule="ALLOWLIST-UNUSED",
+                    severity="error",
+                    relpath=allowlist_rel,
+                    line=0,
+                    message=(
+                        f"allowlist entry `{key}` suppresses nothing — the "
+                        "violation it excused is gone (or the key drifted); "
+                        "remove or update the entry"
+                    ),
+                    key=f"ALLOWLIST-UNUSED:{key}",
+                    suppressable=False,
+                )
+            )
+    return out
+
+
+def render_text(findings, n_files):
+    active = [f for f in findings if not f.allowlisted]
+    suppressed = [f for f in findings if f.allowlisted]
+    lines = []
+    by_rule = {}
+    for f in active:
+        by_rule.setdefault(f.rule, []).append(f)
+    for rule in sorted(by_rule):
+        lines.append(f"-- {rule}: {RULE_DOCS.get(rule, '')}")
+        for f in sorted(by_rule[rule], key=lambda f: (f.relpath, f.line)):
+            loc = f"{f.relpath}:{f.line}" if f.line else f.relpath
+            lines.append(f"  {f.severity.upper():5} {loc}")
+            lines.append(f"        {f.message}")
+            if f.suppressable:
+                lines.append(f"        allowlist key: {f.key}")
+        lines.append("")
+    lines.append(
+        f"audit: {n_files} files scanned, {len(findings)} findings "
+        f"({len(suppressed)} allowlisted, {len(active)} active)"
+    )
+    if active:
+        lines.append("FAIL: unallowlisted findings — fix them or add justified allowlist entries")
+    else:
+        lines.append("OK: zero unallowlisted findings")
+    return "\n".join(lines)
+
+
+def to_json(findings, n_files):
+    active = [f for f in findings if not f.allowlisted]
+    return {
+        "files_scanned": n_files,
+        "findings": [
+            {
+                "rule": f.rule,
+                "severity": f.severity,
+                "file": f.relpath,
+                "line": f.line,
+                "message": f.message,
+                "allowlist_key": f.key if f.suppressable else None,
+                "allowlisted": f.allowlisted,
+            }
+            for f in sorted(findings, key=lambda f: (f.rule, f.relpath, f.line))
+        ],
+        "summary": {
+            "total": len(findings),
+            "active": len(active),
+            "allowlisted": len(findings) - len(active),
+            "ok": not active,
+        },
+    }
+
+
+def main(argv=None):
+    here = os.path.dirname(os.path.abspath(__file__))
+    default_root = os.path.dirname(os.path.dirname(here))
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--root", default=default_root, help="repo root (default: two dirs up)")
+    p.add_argument("--json", metavar="PATH", help="also write machine-readable findings here")
+    p.add_argument(
+        "--allowlist",
+        default=os.path.join(here, "allowlist.txt"),
+        help="suppression file (default: scripts/analysis/allowlist.txt)",
+    )
+    p.add_argument("--list-rules", action="store_true", help="print the rule catalogue and exit")
+    args = p.parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(RULE_DOCS):
+            print(f"{rule:18} {RULE_DOCS[rule]}")
+        return 0
+
+    ctx = load_ctx(args.root)
+    findings = []
+    for mod in RULE_MODULES:
+        findings.extend(mod.run(ctx))
+    entries, malformed = parse_allowlist(args.allowlist)
+    findings.extend(malformed)
+    allowlist_rel = os.path.relpath(args.allowlist, args.root).replace("\\", "/")
+    findings = apply_allowlist(findings, entries, allowlist_rel)
+
+    print(render_text(findings, len(ctx.files)))
+    if args.json:
+        out_dir = os.path.dirname(args.json)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(to_json(findings, len(ctx.files)), f, indent=2)
+            f.write("\n")
+        print(f"json: {args.json}")
+    return 0 if not [f for f in findings if not f.allowlisted] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

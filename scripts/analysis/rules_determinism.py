@@ -1,0 +1,225 @@
+"""Rule family D — determinism.
+
+The repo's core claim (bit-identical answers across thread widths,
+delta modes, tracing on/off, and replay) dies the moment wall-clock or
+iteration-order nondeterminism leaks into an output-affecting path.
+Three rules:
+
+* ``D-TIME-BANNED`` (error, NOT allowlistable): any clock read —
+  ``Instant::now`` / ``SystemTime`` / ``UNIX_EPOCH`` / ``.elapsed(`` /
+  a ``std::time`` import — inside the hard-deterministic zones:
+  ``rust/src/graph/``, ``rust/src/tensor/``, ``rust/src/augment/``,
+  ``rust/src/loadgen/generator.rs``. These modules feed answer bits;
+  PR 6 specifically evicted ``Instant`` from ``DeltaCsr`` and the
+  generator's determinism contract ("never reads server state") is the
+  reason same-seed replay is byte-identical.
+* ``D-TIME`` (warn, allowlistable): clock reads anywhere else under
+  ``rust/src/`` need an explicit allowlist entry saying *why* the read
+  is wall-clock-only (bench timing, trace spans, sim service-time
+  folding). Benches, tests, and examples are implicitly allowed.
+* ``D-HASH-ITER`` (warn, allowlistable): iteration over a
+  ``HashMap``/``HashSet``-typed binding with no sort within the
+  following lines and no order-insensitive terminal on the same line.
+  Heuristic by design — the allowlist records the human argument for
+  every site where unordered iteration is provably harmless.
+* ``D-ENTROPY`` (error, allowlistable): ambient-entropy constructs
+  (``thread_rng``, ``from_entropy``, ``getrandom``, ``RandomState``,
+  ``rand::``) anywhere outside ``rust/src/rng.rs``. All randomness
+  flows through the seeded splitmix in ``rng.rs``.
+"""
+
+from __future__ import annotations
+
+import re
+
+from rustlex import Finding, make_key
+
+BANNED_ZONES = (
+    "rust/src/graph/",
+    "rust/src/tensor/",
+    "rust/src/augment/",
+    "rust/src/loadgen/generator.rs",
+)
+
+CLOCK_TOKENS = re.compile(
+    r"Instant::now\b|SystemTime\b|UNIX_EPOCH\b|\.elapsed\s*\(|std::time\b"
+)
+# outside banned zones only actual clock *reads* matter; importing
+# Duration for arithmetic is deterministic
+CLOCK_READS = re.compile(r"Instant::now\b|SystemTime::now\b|UNIX_EPOCH\b")
+
+ENTROPY = re.compile(
+    r"\bthread_rng\b|\bfrom_entropy\b|\bgetrandom\b|\bRandomState\b|\brand::"
+)
+
+HASH_ITER_METHODS = r"iter|iter_mut|keys|values|values_mut|drain|into_iter"
+# terminals on the same line that cannot observe iteration order
+ORDER_INSENSITIVE = re.compile(
+    r"\.count\(\)|\.len\(\)|\.any\(|\.all\(|\.contains|\.min\(\)|\.max\(\)"
+)
+SORT_WINDOW = 4  # lines after the iteration in which a sort redeems it
+
+
+def _in_banned_zone(relpath: str) -> bool:
+    return any(relpath.startswith(z) for z in BANNED_ZONES)
+
+
+def _hash_bindings(sf):
+    """``(locals, fields)`` bound to HashMap/HashSet in this file.
+    Locals (let bindings, fn params) are matched as bare receivers
+    (``name.iter()``); struct fields only as prefixed receivers
+    (``self.name.iter()``, ``x.name.iter()``) — a local Vec named like
+    a field elsewhere must not fire the rule."""
+    locals_, fields = set(), set()
+    local_pats = [
+        r"let\s+(?:mut\s+)?(\w+)\s*:\s*[^=;]*?\bHash(?:Map|Set)\b",
+        r"let\s+(?:mut\s+)?(\w+)\s*=\s*[A-Za-z0-9_:]*\bHash(?:Map|Set)\b\s*::",
+        r"(\w+)\s*:\s*&(?:mut\s+)?[A-Za-z0-9_:]*\bHash(?:Map|Set)\s*<",
+    ]
+    field_pat = r"^\s*(?:pub(?:\([^)]*\))?\s+)?(\w+)\s*:\s*[^,;=]*?\bHash(?:Map|Set)\s*<"
+    for line in sf.pure:
+        for p in local_pats:
+            for m in re.finditer(p, line):
+                locals_.add(m.group(1))
+        m = re.match(field_pat, line)
+        if m:
+            fields.add(m.group(1))
+    locals_.discard("self")
+    fields.discard("self")
+    return locals_, fields
+
+
+def run(ctx):
+    findings = []
+    for sf in ctx.files:
+        if sf.kind == "src":
+            findings.extend(_check_time_src(sf))
+            findings.extend(_check_entropy(sf))
+        # hash-iteration order matters wherever output is produced;
+        # tests/benches assert on output too, but their authors see the
+        # flake immediately — keep the rule to library code.
+        if sf.kind == "src":
+            findings.extend(_check_hash_iter(sf))
+    return findings
+
+
+def _check_time_src(sf):
+    out = []
+    banned = _in_banned_zone(sf.relpath)
+    pat = CLOCK_TOKENS if banned else CLOCK_READS
+    for i, line in enumerate(sf.pure):
+        if sf.in_test(i):
+            continue
+        if pat.search(line):
+            if banned:
+                out.append(
+                    Finding(
+                        rule="D-TIME-BANNED",
+                        severity="error",
+                        relpath=sf.relpath,
+                        line=i + 1,
+                        message=(
+                            "clock/time construct in a hard-deterministic zone "
+                            "(graph/, tensor/, augment/, loadgen/generator.rs): "
+                            f"`{sf.raw[i].strip()[:80]}` — these modules feed answer "
+                            "bits; no allowlist exemption exists for this rule"
+                        ),
+                        key=make_key("D-TIME-BANNED", sf.relpath, sf.raw[i]),
+                        suppressable=False,
+                    )
+                )
+            else:
+                out.append(
+                    Finding(
+                        rule="D-TIME",
+                        severity="warn",
+                        relpath=sf.relpath,
+                        line=i + 1,
+                        message=(
+                            f"wall-clock read in library code: `{sf.raw[i].strip()[:80]}` "
+                            "— needs an allowlist entry naming why this is "
+                            "wall-clock-only (never feeds answers/counters/replay)"
+                        ),
+                        key=make_key("D-TIME", sf.relpath, sf.raw[i]),
+                    )
+                )
+    return out
+
+
+def _check_entropy(sf):
+    out = []
+    if sf.relpath == "rust/src/rng.rs":
+        return out
+    for i, line in enumerate(sf.pure):
+        if sf.in_test(i):
+            continue
+        if ENTROPY.search(line):
+            out.append(
+                Finding(
+                    rule="D-ENTROPY",
+                    severity="error",
+                    relpath=sf.relpath,
+                    line=i + 1,
+                    message=(
+                        f"ambient entropy outside rng.rs: `{sf.raw[i].strip()[:80]}` "
+                        "— all randomness must flow through the seeded rng::Rng"
+                    ),
+                    key=make_key("D-ENTROPY", sf.relpath, sf.raw[i]),
+                )
+            )
+    return out
+
+
+def _check_hash_iter(sf):
+    out = []
+    locals_, fields = _hash_bindings(sf)
+    if not locals_ and not fields:
+        return out
+    pats = []
+    if locals_:
+        alt = "|".join(sorted(re.escape(n) for n in locals_))
+        pats.append(
+            re.compile(rf"(?:^|[^\w.])({alt})\s*\.\s*({HASH_ITER_METHODS})\s*\(")
+        )
+        pats.append(
+            re.compile(rf"\bfor\s+[^;{{]*?\bin\s+&?(?:mut\s+)?({alt})\b[^.\w]")
+        )
+    if fields:
+        alt = "|".join(sorted(re.escape(n) for n in fields))
+        pats.append(
+            re.compile(rf"[\w\])]\s*\.\s*({alt})\s*\.\s*({HASH_ITER_METHODS})\s*\(")
+        )
+        pats.append(
+            re.compile(rf"\bfor\s+[^;{{]*?\bin\s+&?(?:mut\s+)?[\w.]+\.({alt})\b[^.\w]")
+        )
+    for i, line in enumerate(sf.pure):
+        if sf.in_test(i):
+            continue
+        m = None
+        for p in pats:
+            m = p.search(line + " ")
+            if m:
+                break
+        if not m:
+            continue
+        if ORDER_INSENSITIVE.search(line):
+            continue
+        window = " ".join(sf.pure[i : i + SORT_WINDOW])
+        if "sort" in window or "BTree" in window:
+            continue
+        out.append(
+            Finding(
+                rule="D-HASH-ITER",
+                severity="warn",
+                relpath=sf.relpath,
+                line=i + 1,
+                message=(
+                    f"iteration over hash collection `{m.group(1)}` with no sort in "
+                    f"the next {SORT_WINDOW} lines: `{sf.raw[i].strip()[:80]}` — sort "
+                    "the keys, collect into a BTree, or allowlist with the argument "
+                    "for why order cannot reach any output"
+                ),
+                key=make_key("D-HASH-ITER", sf.relpath, sf.raw[i]),
+            )
+        )
+    return out

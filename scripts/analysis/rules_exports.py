@@ -1,0 +1,375 @@
+"""Rule family X — export surface.
+
+Integration tests, benches, and examples link ``gad`` as an external
+crate, so every ``use gad::…`` path and every inline ``gad::…``
+expression they contain must resolve against items the library
+actually declares ``pub`` (``pub(crate)`` is invisible to them). This
+is exactly the class of cross-module wiring break PRs 5–9 hunted by
+hand after every refactor: a renamed struct, a moved module, a
+re-export dropped from the prelude.
+
+The resolver builds a module tree from ``rust/src`` (file modules via
+``pub mod x;``, inline modules via ``pub mod x { … }``), collects
+module-level ``pub`` items (brace-depth tracking keeps ``impl``
+methods and struct fields out), follows ``pub use`` re-export chains
+(including globs), and registers ``#[macro_export]`` macros at the
+crate root. Then:
+
+* ``X-UNRESOLVED`` (error): a ``use gad::…`` leaf or an inline
+  ``gad::…`` path whose module chain or leaf item does not resolve.
+  Segments *after* the first non-module item (enum variants,
+  associated fns) are intentionally not checked — that would need a
+  type checker, and the wiring breaks live in the module chain.
+"""
+
+from __future__ import annotations
+
+import re
+
+from rustlex import Finding
+
+CRATE = "gad"
+
+ITEM = re.compile(
+    r"^\s*pub(?:\((?P<vis>[^)]*)\))?\s+"
+    r"(?:unsafe\s+|async\s+|const\s+(?=fn)|extern\s+\"[^\"]*\"\s+)*"
+    r"(?P<kw>fn|struct|enum|trait|type|const|static|union)\s+"
+    r"(?P<name>[A-Za-z_][A-Za-z0-9_]*)"
+)
+MOD_DECL = re.compile(
+    r"^\s*pub(?:\((?P<vis>[^)]*)\))?\s+mod\s+(?P<name>[A-Za-z_][A-Za-z0-9_]*)\s*(?P<body>[;{])"
+)
+PUB_USE = re.compile(r"^\s*pub(?:\((?P<vis>[^)]*)\))?\s+use\s+(?P<path>[^;]+);", re.S)
+MACRO_EXPORT = re.compile(r"#\[\s*macro_export\s*\]")
+MACRO_RULES = re.compile(r"macro_rules!\s*([A-Za-z_][A-Za-z0-9_]*)")
+
+
+class Module:
+    def __init__(self, path):
+        self.path = path  # tuple of segments, () = crate root
+        self.items = set()  # externally-visible (plain pub) item names
+        self.crate_items = set()  # pub(crate)/pub(super) — internal only
+        self.submodules = {}  # name -> Module
+        self.reexports = []  # (exported_name_or_None_for_glob, src_segments)
+
+
+def split_use_tree(path_expr):
+    """Expand a use tree into flat segment lists.
+
+    ``a::b::{c, d::e, f as g, *}`` ->
+    ``[[a,b,c], [a,b,d,e], [a,b,f] (as g), [a,b,*]]``.
+    Returns list of (segments, alias_or_None).
+    """
+    path_expr = re.sub(r"\s+", " ", path_expr.strip())
+
+    def parse(expr):
+        expr = expr.strip()
+        # top-level brace group?
+        brace = expr.find("{")
+        if brace >= 0 and expr.endswith("}"):
+            prefix = [s for s in expr[:brace].strip().rstrip(":").split("::") if s]
+            inner = expr[brace + 1 : -1]
+            parts, depth, cur = [], 0, ""
+            for ch in inner:
+                if ch == "{":
+                    depth += 1
+                elif ch == "}":
+                    depth -= 1
+                if ch == "," and depth == 0:
+                    parts.append(cur)
+                    cur = ""
+                else:
+                    cur += ch
+            if cur.strip():
+                parts.append(cur)
+            out = []
+            for p in parts:
+                for segs, alias in parse(p):
+                    out.append((prefix + segs, alias))
+            return out
+        alias = None
+        m = re.search(r"\bas\s+([A-Za-z_][A-Za-z0-9_]*)\s*$", expr)
+        if m:
+            alias = m.group(1)
+            expr = expr[: m.start()].strip()
+        segs = [s for s in expr.split("::") if s]
+        return [(segs, alias)] if segs else []
+
+    return parse(path_expr)
+
+
+def _collect_statements(lines):
+    """Join multi-line `use`/`pub use` statements; yield
+    (start_line_idx, joined_text) for every line, with joined text only
+    differing for use statements."""
+    out = []
+    i = 0
+    while i < len(lines):
+        line = lines[i]
+        if re.match(r"^\s*(pub(\([^)]*\))?\s+)?use\b", line) and ";" not in line:
+            j = i
+            buf = line
+            while j + 1 < len(lines) and ";" not in buf:
+                j += 1
+                buf += " " + lines[j].strip()
+            out.append((i, buf))
+            i = j + 1
+            continue
+        out.append((i, line))
+        i += 1
+    return out
+
+
+def build_module_tree(ctx):
+    """Parse rust/src into a Module tree rooted at the crate."""
+    files_by_rel = {sf.relpath: sf for sf in ctx.files if sf.kind == "src"}
+    root = Module(())
+
+    def module_file(segments):
+        base = "rust/src/" + "/".join(segments)
+        for cand in (base + ".rs", base + "/mod.rs"):
+            if cand in files_by_rel:
+                return files_by_rel[cand]
+        if not segments:
+            return files_by_rel.get("rust/src/lib.rs")
+        return None
+
+    def brace_depths(sf):
+        """Per-line depth at line start, from the pure view."""
+        depths = []
+        d = 0
+        for line in sf.pure:
+            depths.append(d)
+            d += line.count("{") - line.count("}")
+        return depths
+
+    def parse_module(mod, sf, line_range=None, base_depth=0):
+        depths = brace_depths(sf)
+        lo, hi = (0, len(sf.pure)) if line_range is None else line_range
+        stmts = _collect_statements(sf.pure[lo:hi])
+        pending_macro_export = False
+        for off, text in stmts:
+            i = lo + off
+            if sf.in_test(i):
+                continue
+            if depths[i] != base_depth:
+                # still scan for macro_export at any depth? no — macros
+                # are module-level in this crate
+                continue
+            first = text if "\n" not in text else text.split("\n")[0]
+            if MACRO_EXPORT.search(sf.pure[i]):
+                pending_macro_export = True
+                continue
+            mm = MACRO_RULES.search(first)
+            if mm:
+                if pending_macro_export:
+                    root.items.add(mm.group(1))
+                pending_macro_export = False
+                continue
+            m = MOD_DECL.match(first)
+            if m:
+                name = m.group("name")
+                child = Module(mod.path + (name,))
+                if m.group("vis"):
+                    # pub(crate) mod: invisible externally; still record
+                    # so internal chains resolve, but as crate-only
+                    mod.crate_items.add(name)
+                else:
+                    mod.items.add(name)
+                mod.submodules[name] = child
+                if m.group("body") == ";":
+                    msf = module_file(child.path)
+                    if msf is not None:
+                        parse_module(child, msf)
+                else:
+                    # inline module: parse its brace range at depth+1
+                    from rustlex import _find_matching_brace
+
+                    col = sf.pure[i].find("{")
+                    end = _find_matching_brace(sf.pure, i, col)
+                    end = end if end is not None else len(sf.pure) - 1
+                    parse_module(child, sf, (i + 1, end), depths[i] + 1)
+                continue
+            m = PUB_USE.match(text)
+            if m:
+                for segs, alias in split_use_tree(m.group("path")):
+                    leaf = alias or (segs[-1] if segs else None)
+                    if leaf == "*":
+                        mod.reexports.append((None, segs))
+                    elif leaf:
+                        if alias:
+                            mod.reexports.append((alias, segs))
+                        else:
+                            mod.reexports.append((leaf, segs))
+                continue
+            m = ITEM.match(first)
+            if m:
+                if m.group("vis"):
+                    mod.crate_items.add(m.group("name"))
+                else:
+                    mod.items.add(m.group("name"))
+
+    lib = module_file(())
+    if lib is not None:
+        parse_module(root, lib)
+    return root
+
+
+class Resolver:
+    def __init__(self, root):
+        self.root = root
+
+    def _normalize(self, mod, segs):
+        """Resolve leading crate/self/super/gad to a module + tail."""
+        segs = list(segs)
+        cur = mod
+        while segs:
+            head = segs[0]
+            if head in ("crate", CRATE):
+                cur = self.root
+                segs.pop(0)
+            elif head == "self":
+                segs.pop(0)
+            elif head == "super":
+                cur = self._module_at(cur.path[:-1])
+                segs.pop(0)
+            else:
+                break
+        return cur, segs
+
+    def _module_at(self, path):
+        cur = self.root
+        for s in path:
+            cur = cur.submodules.get(s)
+            if cur is None:
+                return self.root
+        return cur
+
+    def resolve_module(self, mod, segs):
+        """Descend while segments name submodules; return (module,
+        remaining_segments) or (None, segs) if a middle segment is
+        neither submodule nor resolvable."""
+        cur, segs = self._normalize(mod, segs)
+        i = 0
+        while i < len(segs):
+            nxt = cur.submodules.get(segs[i])
+            if nxt is None:
+                break
+            cur = nxt
+            i += 1
+        return cur, segs[i:]
+
+    def has_item(self, mod, name, external_only=True, _seen=None):
+        """Is ``name`` an item of ``mod`` (directly or via re-export)?"""
+        if _seen is None:
+            _seen = set()
+        key = (mod.path, name, external_only)
+        if key in _seen:
+            return False
+        _seen.add(key)
+        if name in mod.items:
+            return True
+        if not external_only and name in mod.crate_items:
+            return True
+        for exported, segs in mod.reexports:
+            if exported == name:
+                src_mod, rest = self.resolve_module(mod, segs[:-1])
+                target = segs[-1]
+                if not rest:
+                    if target in src_mod.submodules or self.has_item(
+                        src_mod, target, external_only=False, _seen=_seen
+                    ):
+                        return True
+                # unresolvable re-export source (e.g. external crate):
+                # be permissive — the rule checks our wiring, not std's
+                else:
+                    return True
+            elif exported is None:  # glob re-export
+                src_mod, rest = self.resolve_module(mod, segs[:-1])
+                if not rest and self.has_item(
+                    src_mod, name, external_only=False, _seen=_seen
+                ):
+                    return True
+                if rest:  # glob from something we can't see: permissive
+                    return True
+        return False
+
+    def resolve_external_path(self, segs):
+        """Resolve a ``gad::…`` path as tests/benches see it. Returns
+        None if OK, else a message."""
+        if not segs:
+            return None
+        if segs[0] not in ("crate", CRATE):
+            return None  # not our crate
+        mod, rest = self.resolve_module(self.root, segs)
+        if not rest:
+            return None  # a module path — fine (use gad::obs::trace;)
+        leaf = rest[0]
+        if leaf == "*":
+            return None
+        if self.has_item(mod, leaf, external_only=True):
+            return None  # anything after the item = assoc fn/variant: skip
+        where = "::".join(mod.path) or "crate root"
+        if len(rest) > 1:
+            return (
+                f"`{'::'.join(segs)}`: segment `{leaf}` is neither a module nor a "
+                f"pub item of `{where}`"
+            )
+        return f"`{'::'.join(segs)}`: `{leaf}` is not a pub item of `{where}`"
+
+
+# only `gad::…` — in a test/bench crate `crate::` means the test crate
+# itself, not the library
+USE_GAD = re.compile(rf"^\s*(?:pub\s+)?use\s+({CRATE}::[^;]+);", re.S | re.M)
+INLINE_GAD = re.compile(rf"(?<![A-Za-z0-9_:]){CRATE}((?:::[A-Za-z_][A-Za-z0-9_]*)+)")
+
+
+def run(ctx):
+    findings = []
+    root = build_module_tree(ctx)
+    resolver = Resolver(root)
+    for sf in ctx.files:
+        if sf.kind not in ("test", "bench", "example"):
+            continue
+        stmts = _collect_statements(sf.pure)
+        seen_keys = set()
+        for i, text in stmts:
+            m = USE_GAD.match(text)
+            if m:
+                for segs, _alias in split_use_tree(m.group(1)):
+                    err = resolver.resolve_external_path(segs)
+                    if err:
+                        key = f"X-UNRESOLVED:{sf.relpath}:{'-'.join(s for s in segs if s != '*')}"
+                        if key in seen_keys:
+                            continue
+                        seen_keys.add(key)
+                        findings.append(
+                            Finding(
+                                rule="X-UNRESOLVED",
+                                severity="error",
+                                relpath=sf.relpath,
+                                line=i + 1,
+                                message=f"unresolved import {err}",
+                                key=key,
+                            )
+                        )
+                continue
+            for m2 in INLINE_GAD.finditer(text):
+                segs = [CRATE] + m2.group(1).strip(":").split("::")
+                err = resolver.resolve_external_path(segs)
+                if err:
+                    key = f"X-UNRESOLVED:{sf.relpath}:{'-'.join(segs)}"
+                    if key in seen_keys:
+                        continue
+                    seen_keys.add(key)
+                    findings.append(
+                        Finding(
+                            rule="X-UNRESOLVED",
+                            severity="error",
+                            relpath=sf.relpath,
+                            line=i + 1,
+                            message=f"unresolved path {err}",
+                            key=key,
+                        )
+                    )
+    return findings

@@ -1,0 +1,74 @@
+"""Rule family H — library-code hygiene.
+
+``unwrap``/``expect``/``panic!``/``todo!``/``unimplemented!`` turn
+recoverable errors into aborts of a serving process; ``dbg!`` and
+``println!`` pollute stdout, which the CLI reserves for reports. All
+five are fine in tests, benches, examples, and the CLI itself — the
+rule covers library code only, and every surviving site needs an
+allowlist entry arguing the invariant that makes it unreachable (or
+the lock-poisoning policy that makes it deliberate).
+
+* ``H-UNWRAP`` (warn): ``.unwrap()``
+* ``H-EXPECT`` (warn): ``.expect(``
+* ``H-PANIC``  (warn): ``panic!(`` / ``todo!(`` / ``unimplemented!(``
+* ``H-PRINT``  (warn): ``println!(`` / ``dbg!(``
+"""
+
+from __future__ import annotations
+
+import re
+
+from rustlex import Finding, make_key
+
+# CLI + bench-harness code is human-facing by design
+EXEMPT_PREFIXES = (
+    "rust/src/cli/",
+    "rust/src/main.rs",
+    "rust/src/bench_util.rs",
+)
+
+PATTERNS = [
+    ("H-UNWRAP", re.compile(r"\.unwrap\s*\(\s*\)")),
+    ("H-EXPECT", re.compile(r"\.expect\s*\(")),
+    ("H-PANIC", re.compile(r"\b(?:panic|todo|unimplemented)!\s*[\(\[{]")),
+    ("H-PRINT", re.compile(r"\b(?:println|dbg)!\s*[\(\[{]")),
+]
+
+WHAT = {
+    "H-UNWRAP": "`.unwrap()` in library code",
+    "H-EXPECT": "`.expect(…)` in library code",
+    "H-PANIC": "panic-family macro in library code",
+    "H-PRINT": "stdout/debug print in library code",
+}
+
+
+def run(ctx):
+    findings = []
+    for sf in ctx.files:
+        if sf.kind != "src":
+            continue
+        if any(sf.relpath.startswith(p) for p in EXEMPT_PREFIXES):
+            continue
+        for i, line in enumerate(sf.pure):
+            if sf.in_test(i):
+                continue
+            # debug_assert!/assert! with a panic message are assertions,
+            # not control flow; the panic-family rule should not fire on
+            # the word inside another macro name
+            for rule, pat in PATTERNS:
+                if pat.search(line):
+                    findings.append(
+                        Finding(
+                            rule=rule,
+                            severity="warn",
+                            relpath=sf.relpath,
+                            line=i + 1,
+                            message=(
+                                f"{WHAT[rule]}: `{sf.raw[i].strip()[:80]}` — return "
+                                "a Result, or allowlist with the invariant that "
+                                "makes this unreachable"
+                            ),
+                            key=make_key(rule, sf.relpath, sf.raw[i]),
+                        )
+                    )
+    return findings

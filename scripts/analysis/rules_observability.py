@@ -1,0 +1,243 @@
+"""Rule family O — observability.
+
+The tracer (``rust/src/obs/``) only earns its keep if the span
+inventory in README stays true, cross-thread parent links are captured
+on the right side of the fork, and every retained ``*_reference``
+oracle still has a live optimized twin with a test pinning the pair.
+
+* ``O-SPAN-INVENTORY`` (error): a span name emitted by ``span!`` /
+  ``virtual_span`` / ``SpanGuard::enter[_under]`` in ``rust/src/`` that
+  README's span-inventory block (between ``<!-- span-inventory:begin
+  -->`` and ``<!-- span-inventory:end -->``) does not list.
+* ``O-SPAN-STALE`` (error): the reverse — README lists a span no code
+  emits. Docs that describe spans that no longer exist are worse than
+  no docs.
+* ``O-ENTER-UNDER`` (error): ``SpanGuard::enter_under(.., Some(x), ..)``
+  inside a ``std::thread::scope`` block where ``x`` was not assigned
+  before the scope opened. The parent span id must be captured on the
+  dispatching thread *before* the fork, or the workers race the
+  thread-local stack they were supposed to bypass.
+* ``O-REFERENCE-TWIN`` (error): a ``pub fn *_reference`` oracle whose
+  optimized twin (name with ``_reference`` removed) is missing, or
+  with no single test/bench file referencing both names — the
+  bit-identity property the oracle exists for is then untested.
+"""
+
+from __future__ import annotations
+
+import re
+
+from rustlex import Finding, make_key
+
+SPAN_NAME = re.compile(
+    r"(?:\bspan!\s*\(|\bvirtual_span\s*\(|SpanGuard::enter(?:_under)?\s*\()\s*\n?\s*\"([^\"]+)\"",
+    re.S,
+)
+INVENTORY_BEGIN = "<!-- span-inventory:begin -->"
+INVENTORY_END = "<!-- span-inventory:end -->"
+ENTER_UNDER = re.compile(r"SpanGuard::enter_under\s*\(")
+REFERENCE_FN = re.compile(r"\bpub\s+fn\s+(\w*_reference\w*)\s*\(")
+
+
+def run(ctx):
+    findings = []
+    findings.extend(_check_inventory(ctx))
+    findings.extend(_check_enter_under(ctx))
+    findings.extend(_check_reference_twins(ctx))
+    return findings
+
+
+def _emitted_spans(ctx):
+    """name -> (relpath, 1-based line) of one emission site."""
+    spans = {}
+    for sf in ctx.files:
+        if sf.kind != "src":
+            continue
+        text = sf.code_text()
+        for m in SPAN_NAME.finditer(text):
+            line = text.count("\n", 0, m.start()) + 1
+            if sf.in_test(line - 1):
+                continue
+            spans.setdefault(m.group(1), (sf.relpath, line))
+    return spans
+
+
+def _inventory_spans(ctx):
+    """Backticked tier.phase tokens inside the README inventory block."""
+    text = ctx.readme_text
+    lo = text.find(INVENTORY_BEGIN)
+    hi = text.find(INVENTORY_END)
+    if lo < 0 or hi < 0 or hi < lo:
+        return None
+    block = text[lo:hi]
+    return set(re.findall(r"`(\w+\.\w+)`", block))
+
+
+def _check_inventory(ctx):
+    out = []
+    emitted = _emitted_spans(ctx)
+    listed = _inventory_spans(ctx)
+    if listed is None:
+        out.append(
+            Finding(
+                rule="O-SPAN-INVENTORY",
+                severity="error",
+                relpath="README.md",
+                line=0,
+                message=(
+                    "README has no span-inventory block (markers "
+                    f"`{INVENTORY_BEGIN}` … `{INVENTORY_END}`) — the span "
+                    "inventory cross-check cannot run"
+                ),
+                key="O-SPAN-INVENTORY:README.md:missing-block",
+                suppressable=False,
+            )
+        )
+        return out
+    for name, (relpath, line) in sorted(emitted.items()):
+        if name not in listed:
+            out.append(
+                Finding(
+                    rule="O-SPAN-INVENTORY",
+                    severity="error",
+                    relpath=relpath,
+                    line=line,
+                    message=(
+                        f"span `{name}` is emitted here but missing from README's "
+                        "span inventory — document it (name, clock, where)"
+                    ),
+                    key=f"O-SPAN-INVENTORY:{relpath}:{name}",
+                    suppressable=False,
+                )
+            )
+    for name in sorted(listed - set(emitted)):
+        out.append(
+            Finding(
+                rule="O-SPAN-STALE",
+                severity="error",
+                relpath="README.md",
+                line=0,
+                message=(
+                    f"README's span inventory lists `{name}` but no code in "
+                    "rust/src emits it — remove the stale row"
+                ),
+                key=f"O-SPAN-STALE:README.md:{name}",
+                suppressable=False,
+            )
+        )
+    return out
+
+
+def _check_enter_under(ctx):
+    out = []
+    for sf in ctx.files:
+        if sf.kind != "src":
+            continue
+        scope_lines = [
+            i for i, l in enumerate(sf.pure) if re.search(r"thread::scope\s*\(", l)
+        ]
+        if not scope_lines:
+            continue
+        text = sf.code_text()
+        for m in ENTER_UNDER.finditer(text):
+            line0 = text.count("\n", 0, m.start())  # 0-based
+            if sf.in_test(line0):
+                continue
+            # nearest scope opening at or before this call = the fork
+            # this call runs inside (enter_under before any scope is
+            # same-thread use and needs no capture discipline)
+            encl = [s for s in scope_lines if s <= line0]
+            if not encl:
+                continue
+            scope_line = encl[-1]
+            # the parent argument: Some(ident) within the call's args
+            tail = text[m.end() : m.end() + 200]
+            pm = re.search(r"Some\s*\(\s*(\w+)\s*\)", tail)
+            if not pm:
+                continue  # None / computed parent: nothing to cross-check
+            ident = pm.group(1)
+            assigned_before = any(
+                re.search(rf"\blet\s+(?:mut\s+)?{re.escape(ident)}\b", sf.pure[j])
+                or re.search(rf"\b{re.escape(ident)}\s*=[^=]", sf.pure[j])
+                for j in range(0, scope_line)
+            )
+            if not assigned_before:
+                out.append(
+                    Finding(
+                        rule="O-ENTER-UNDER",
+                        severity="error",
+                        relpath=sf.relpath,
+                        line=line0 + 1,
+                        message=(
+                            f"enter_under parent `{ident}` is not assigned before "
+                            f"the enclosing thread::scope (line {scope_line + 1}) — "
+                            "capture the span id on the dispatching thread before "
+                            "the fork"
+                        ),
+                        key=f"O-ENTER-UNDER:{sf.relpath}:{ident}",
+                    )
+                )
+    return out
+
+
+def _check_reference_twins(ctx):
+    out = []
+    # all *_reference oracles declared in src
+    oracles = []  # (name, relpath, line)
+    src_text_all = []
+    for sf in ctx.files:
+        if sf.kind == "src":
+            src_text_all.append(sf.pure_text())
+            for i, line in enumerate(sf.pure):
+                m = REFERENCE_FN.search(line)
+                if m and not sf.in_test(i):
+                    oracles.append((m.group(1), sf.relpath, i + 1))
+    src_blob = "\n".join(src_text_all)
+    # files that may carry the pinning test: integration/prop tests,
+    # benches, and #[cfg(test)] regions inside src
+    test_files = []
+    for sf in ctx.files:
+        if sf.kind in ("test", "bench"):
+            test_files.append(sf.pure_text())
+        elif sf.kind == "src":
+            tl = [l for i, l in enumerate(sf.pure) if sf.in_test(i)]
+            if tl:
+                test_files.append("\n".join(tl))
+    for name, relpath, line in oracles:
+        twin = name.replace("_reference", "", 1)
+        if not re.search(rf"\bfn\s+{re.escape(twin)}\s*\(", src_blob):
+            out.append(
+                Finding(
+                    rule="O-REFERENCE-TWIN",
+                    severity="error",
+                    relpath=relpath,
+                    line=line,
+                    message=(
+                        f"oracle `{name}` has no optimized twin `{twin}` anywhere "
+                        "in rust/src — a reference with nothing to check is dead "
+                        "weight; delete it or restore the twin"
+                    ),
+                    key=f"O-REFERENCE-TWIN:{relpath}:{name}",
+                )
+            )
+            continue
+        pinned = any(
+            re.search(rf"\b{re.escape(name)}\b", t)
+            and re.search(rf"\b{re.escape(twin)}\b(?!_)", t)
+            for t in test_files
+        )
+        if not pinned:
+            out.append(
+                Finding(
+                    rule="O-REFERENCE-TWIN",
+                    severity="error",
+                    relpath=relpath,
+                    line=line,
+                    message=(
+                        f"no single test/bench file references both `{name}` and "
+                        f"`{twin}` — the bit-identity pair is unpinned"
+                    ),
+                    key=f"O-REFERENCE-TWIN:{relpath}:{name}",
+                )
+            )
+    return out

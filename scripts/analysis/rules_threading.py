@@ -1,0 +1,157 @@
+"""Rule family T — threading.
+
+The crate's threading model (README "Threading model") has three fork
+points, one shared budget (``threads.rs``), and a determinism contract
+that only holds because every parallel path merges in a fixed order.
+Three rules keep new code inside that model:
+
+* ``T-SPAWN`` (error, allowlistable): ``std::thread::spawn`` in
+  library code. Free-running threads escape both the scoped-borrow
+  discipline and the thread budget; the two sanctioned long-lived
+  spawns (trainer worker threads, joined via handles) carry allowlist
+  entries explaining their lifetime.
+* ``T-SHARED-COMMENT`` (warn, allowlistable): a module-level
+  ``static`` item, an ``Atomic*`` declaration, or an ``unsafe`` block
+  with no comment on the same line or the three lines above. Shared
+  mutable state is only safe here by *argument* (see threads.rs,
+  obs/trace.rs) — the rule makes the argument's presence checkable.
+  Consecutive static items form one group; one comment covers it.
+* ``T-INTRA-LEASE`` (error, allowlistable): a call to
+  ``set_intra_threads(n)`` with non-literal-1 ``n`` in a file that
+  never touches ``threads::reserve``/``ThreadLease``. Pinning 1 is
+  always safe (a worker renouncing parallelism); sizing to anything
+  else must visibly participate in the budget, or say where its lease
+  lives.
+"""
+
+from __future__ import annotations
+
+import re
+
+from rustlex import Finding, make_key
+
+SPAWN = re.compile(r"(?:std\s*::\s*)?thread\s*::\s*spawn\b")
+SCOPED = re.compile(r"\b\w+\s*\.\s*spawn\s*\(")  # scope.spawn(...) / s.spawn(...)
+STATIC_ITEM = re.compile(r"^\s*(?:pub(?:\([^)]*\))?\s+)?static\s+[A-Z_][A-Z0-9_]*\s*:")
+ATOMIC_DECL = re.compile(r"\bAtomic(?:Bool|Usize|Isize|U8|U16|U32|U64|I8|I16|I32|I64)\b")
+UNSAFE = re.compile(r"\bunsafe\b")
+INTRA = re.compile(r"\bset_intra_threads\s*\(\s*([^)]*?)\s*\)")
+LEASE = re.compile(r"threads\s*::\s*reserve\b|\bThreadLease\b")
+
+
+def _has_nearby_comment(sf, i) -> bool:
+    """A comment on the line itself or within the 3 lines above."""
+    lo = max(0, i - 3)
+    for j in range(lo, i + 1):
+        raw = sf.raw[j]
+        if "//" in raw or "/*" in raw or raw.lstrip().startswith("*"):
+            return True
+    return False
+
+
+def run(ctx):
+    findings = []
+    for sf in ctx.files:
+        if sf.kind != "src":
+            continue
+        findings.extend(_check_spawn(sf))
+        findings.extend(_check_shared_comments(sf))
+        findings.extend(_check_intra_lease(sf))
+    return findings
+
+
+def _check_spawn(sf):
+    out = []
+    for i, line in enumerate(sf.pure):
+        if sf.in_test(i):
+            continue
+        m = SPAWN.search(line)
+        if not m:
+            continue
+        out.append(
+            Finding(
+                rule="T-SPAWN",
+                severity="error",
+                relpath=sf.relpath,
+                line=i + 1,
+                message=(
+                    "std::thread::spawn in library code — use std::thread::scope "
+                    "workers sized through threads::reserve; a long-lived pool "
+                    "needs an allowlist entry stating who joins it"
+                ),
+                key=make_key("T-SPAWN", sf.relpath, sf.raw[i]),
+            )
+        )
+    return out
+
+
+def _check_shared_comments(sf):
+    out = []
+    for i, line in enumerate(sf.pure):
+        if sf.in_test(i):
+            continue
+        is_static = bool(STATIC_ITEM.match(line))
+        is_unsafe = bool(UNSAFE.search(line))
+        is_atomic_decl = bool(ATOMIC_DECL.search(line)) and (
+            is_static or re.search(r"^\s*(?:pub(?:\([^)]*\))?\s+)?\w+\s*:\s*", line)
+        )
+        if not (is_static or is_unsafe or is_atomic_decl):
+            continue
+        # a contiguous run of statics shares one justification comment:
+        # only the head of the run is checked
+        if is_static and i > 0 and STATIC_ITEM.match(sf.pure[i - 1]):
+            continue
+        if _has_nearby_comment(sf, i):
+            continue
+        what = "unsafe block" if is_unsafe and not is_static else (
+            "static item" if is_static else "Atomic field"
+        )
+        out.append(
+            Finding(
+                rule="T-SHARED-COMMENT",
+                severity="warn",
+                relpath=sf.relpath,
+                line=i + 1,
+                message=(
+                    f"{what} with no ordering/justification comment nearby: "
+                    f"`{sf.raw[i].strip()[:80]}` — shared state is safe here only "
+                    "by argument; write the argument next to the site"
+                ),
+                key=make_key("T-SHARED-COMMENT", sf.relpath, sf.raw[i]),
+            )
+        )
+    return out
+
+
+def _check_intra_lease(sf):
+    out = []
+    if sf.relpath == "rust/src/tensor/ops.rs":
+        return out  # the definition site
+    body = sf.pure_text()
+    has_lease = bool(LEASE.search(body))
+    for i, line in enumerate(sf.pure):
+        if sf.in_test(i):
+            continue
+        m = INTRA.search(line)
+        if not m:
+            continue
+        arg = m.group(1).strip()
+        if arg == "1":
+            continue  # renouncing parallelism is always budget-safe
+        if has_lease:
+            continue
+        out.append(
+            Finding(
+                rule="T-INTRA-LEASE",
+                severity="error",
+                relpath=sf.relpath,
+                line=i + 1,
+                message=(
+                    f"set_intra_threads({arg}) in a file with no threads::reserve/"
+                    "ThreadLease — size GEMM parallelism through the process "
+                    "budget, or allowlist stating which file holds the lease"
+                ),
+                key=make_key("T-INTRA-LEASE", sf.relpath, sf.raw[i]),
+            )
+        )
+    return out

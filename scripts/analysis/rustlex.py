@@ -1,0 +1,283 @@
+"""Lightweight lexical model of a Rust source file.
+
+This is NOT a Rust parser. It is the smallest amount of lexical
+machinery the contract rules need to avoid lying: comment and string
+stripping (so a rule never fires on prose), `#[cfg(test)]` region
+detection (so test-only code is exempt from library hygiene), and
+brace-depth tracking (so module-level items are distinguishable from
+methods inside `impl` blocks). Everything is line-oriented; every view
+of the file has exactly as many lines as the raw source, so findings
+can always report real line numbers.
+
+Three parallel views of each file:
+
+* ``raw``   — the file as written (rules that look for the *presence*
+  of a comment, e.g. the static/unsafe justification rule, read this).
+* ``code``  — comments blanked, string literals kept (rules that read
+  string contents, e.g. span-name extraction, read this).
+* ``pure``  — comments blanked AND string contents blanked (rules that
+  match code tokens, e.g. ``Instant::now`` or ``.unwrap()``, read this
+  so a quoted example in a string can never fire a rule).
+
+Zero dependencies beyond the Python 3 stdlib, by design: this harness
+must run in authoring containers that have python3 and nothing else.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+
+def strip_comments_and_strings(text: str):
+    """Return ``(code, pure)`` — same length/line structure as ``text``.
+
+    ``code`` blanks comments (line, nested block, doc) to spaces;
+    ``pure`` additionally blanks the interiors of string/char literals
+    (quotes are kept so the token shape stays visible). Handles nested
+    ``/* */``, escapes inside strings, raw strings ``r#"..."#``, and
+    the char-literal vs lifetime ambiguity of ``'``.
+    """
+    n = len(text)
+    code = list(text)
+    pure = list(text)
+    i = 0
+    NORMAL, LINE_COMMENT, BLOCK_COMMENT, STRING, RAW_STRING, CHAR = range(6)
+    state = NORMAL
+    block_depth = 0
+    raw_hashes = 0
+
+    def blank(buf, j):
+        if buf[j] not in ("\n", "\r"):
+            buf[j] = " "
+
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if state == NORMAL:
+            if c == "/" and nxt == "/":
+                state = LINE_COMMENT
+                blank(code, i)
+                blank(pure, i)
+            elif c == "/" and nxt == "*":
+                state = BLOCK_COMMENT
+                block_depth = 1
+                blank(code, i)
+                blank(pure, i)
+            elif c == '"':
+                # raw string? look back for r / br and hashes
+                state = STRING
+            elif c == "r" and (nxt == '"' or nxt == "#"):
+                # r"..." or r#"..."# (also br"...")
+                j = i + 1
+                hashes = 0
+                while j < n and text[j] == "#":
+                    hashes += 1
+                    j += 1
+                if j < n and text[j] == '"':
+                    state = RAW_STRING
+                    raw_hashes = hashes
+                    i = j  # keep the r and hashes; interior blanking starts past the quote
+            elif c == "'":
+                # char literal vs lifetime: a char literal closes with a
+                # quote within a few chars ('x', '\n', '\u{1F600}')
+                m = re.match(r"'(\\.[^']*|\\u\{[0-9a-fA-F]+\}|[^'\\])'", text[i:])
+                if m:
+                    end = i + m.end() - 1
+                    k = i + 1
+                    while k < end:
+                        blank(pure, k)
+                        k += 1
+                    i = end
+                # else: lifetime — fall through, nothing to blank
+            i += 1
+        elif state == LINE_COMMENT:
+            if c == "\n":
+                state = NORMAL
+            else:
+                blank(code, i)
+                blank(pure, i)
+            i += 1
+        elif state == BLOCK_COMMENT:
+            if c == "/" and nxt == "*":
+                block_depth += 1
+                blank(code, i)
+                blank(pure, i)
+                blank(code, i + 1)
+                blank(pure, i + 1)
+                i += 2
+                continue
+            if c == "*" and nxt == "/":
+                block_depth -= 1
+                blank(code, i)
+                blank(pure, i)
+                blank(code, i + 1)
+                blank(pure, i + 1)
+                i += 2
+                if block_depth == 0:
+                    state = NORMAL
+                continue
+            blank(code, i)
+            blank(pure, i)
+            i += 1
+        elif state == STRING:
+            if c == "\\":
+                blank(pure, i)
+                if i + 1 < n:
+                    blank(pure, i + 1)
+                i += 2
+                continue
+            if c == '"':  # closing quote (escapes were consumed above)
+                state = NORMAL
+                i += 1
+                continue
+            blank(pure, i)
+            i += 1
+        elif state == RAW_STRING:
+            if c == '"':
+                # close only on " followed by raw_hashes #s
+                j = i + 1
+                h = 0
+                while j < n and text[j] == "#" and h < raw_hashes:
+                    h += 1
+                    j += 1
+                if h == raw_hashes:
+                    state = NORMAL
+                    i = j
+                    continue
+            blank(pure, i)
+            i += 1
+        else:  # CHAR — unused (handled inline)
+            i += 1
+    return "".join(code), "".join(pure)
+
+
+def _find_matching_brace(lines, start_line, start_col):
+    """Line index of the ``}`` matching the first ``{`` at/after
+    ``(start_line, start_col)`` in a list of pure lines; None if
+    unbalanced."""
+    depth = 0
+    seen_open = False
+    for li in range(start_line, len(lines)):
+        col0 = start_col if li == start_line else 0
+        for col in range(col0, len(lines[li])):
+            ch = lines[li][col]
+            if ch == "{":
+                depth += 1
+                seen_open = True
+            elif ch == "}":
+                depth -= 1
+                if seen_open and depth == 0:
+                    return li
+    return None
+
+
+@dataclass
+class SourceFile:
+    """One Rust file plus its stripped views and test-region mask."""
+
+    relpath: str  # repo-relative, forward slashes
+    kind: str  # "src" | "test" | "bench" | "example"
+    raw: list = field(default_factory=list)
+    code: list = field(default_factory=list)
+    pure: list = field(default_factory=list)
+    test_mask: list = field(default_factory=list)  # True = inside #[cfg(test)]
+
+    @classmethod
+    def from_text(cls, relpath: str, text: str, kind: str = "src") -> "SourceFile":
+        code, pure = strip_comments_and_strings(text)
+        sf = cls(
+            relpath=relpath.replace("\\", "/"),
+            kind=kind,
+            raw=text.splitlines(),
+            code=code.splitlines(),
+            pure=pure.splitlines(),
+        )
+        # splitlines() on trailing-newline text drops nothing we need,
+        # but the three views must agree on line count
+        m = max(len(sf.raw), len(sf.code), len(sf.pure))
+        for view in (sf.raw, sf.code, sf.pure):
+            while len(view) < m:
+                view.append("")
+        sf.test_mask = sf._compute_test_mask()
+        return sf
+
+    @classmethod
+    def from_path(cls, path, relpath: str, kind: str = "src") -> "SourceFile":
+        with open(path, encoding="utf-8") as f:
+            return cls.from_text(relpath, f.read(), kind)
+
+    def _compute_test_mask(self):
+        mask = [False] * len(self.pure)
+        i = 0
+        attr = re.compile(r"#\[\s*cfg\s*\(\s*test\s*\)\s*\]")
+        while i < len(self.pure):
+            if attr.search(self.pure[i]):
+                # find the opening brace of the annotated item, then its close
+                j = i
+                col = 0
+                while j < len(self.pure):
+                    col = self.pure[j].find("{")
+                    if col >= 0:
+                        break
+                    # a cfg(test) on a braceless item (use/fn decl ending in ;)
+                    if ";" in self.pure[j] and j > i:
+                        break
+                    j += 1
+                if j < len(self.pure) and col >= 0:
+                    end = _find_matching_brace(self.pure, j, col)
+                    end = end if end is not None else len(self.pure) - 1
+                    for k in range(i, end + 1):
+                        mask[k] = True
+                    i = end + 1
+                    continue
+                else:
+                    mask[i] = True
+            i += 1
+        return mask
+
+    def in_test(self, line_idx: int) -> bool:
+        """True if 0-based ``line_idx`` sits inside a #[cfg(test)] region."""
+        return 0 <= line_idx < len(self.test_mask) and self.test_mask[line_idx]
+
+    def code_text(self) -> str:
+        return "\n".join(self.code)
+
+    def pure_text(self) -> str:
+        return "\n".join(self.pure)
+
+
+def slugify(line: str, max_len: int = 60) -> str:
+    """Stable allowlist key fragment for one source line: collapse
+    everything non-alphanumeric to '-', truncate. Whitespace and
+    line-number churn do not change it; editing the line does."""
+    s = re.sub(r"[^A-Za-z0-9_]+", "-", line.strip()).strip("-")
+    return s[:max_len] if s else "empty"
+
+
+@dataclass
+class Finding:
+    """One rule violation. ``key`` is the exact allowlist key; a
+    file-granular ``RULE:path`` entry also suppresses it (except for
+    rules marked non-suppressable by the driver)."""
+
+    rule: str
+    severity: str  # "error" | "warn"
+    relpath: str
+    line: int  # 1-based; 0 = whole-file / cross-file finding
+    message: str
+    key: str = ""
+    allowlisted: bool = False
+    suppressable: bool = True
+
+    def __post_init__(self):
+        if not self.key:
+            self.key = f"{self.rule}:{self.relpath}"
+
+    @property
+    def file_key(self) -> str:
+        return f"{self.rule}:{self.relpath}"
+
+
+def make_key(rule: str, relpath: str, line_text: str) -> str:
+    return f"{rule}:{relpath}:{slugify(line_text)}"

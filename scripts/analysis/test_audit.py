@@ -1,0 +1,402 @@
+"""Self-tests for the static contract checker.
+
+Every rule family gets a fires / doesn't-fire fixture pair, so a
+refactor of the analyzer that silently stops detecting a violation
+class fails here instead of shipping a green-but-blind audit. Pure
+stdlib; run with::
+
+    python3 -m unittest discover scripts/analysis
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import audit  # noqa: E402
+import rules_determinism  # noqa: E402
+import rules_exports  # noqa: E402
+import rules_hygiene  # noqa: E402
+import rules_observability  # noqa: E402
+import rules_threading  # noqa: E402
+from rustlex import SourceFile, make_key, slugify, strip_comments_and_strings  # noqa: E402
+
+
+class Ctx:
+    def __init__(self, files, readme_text=""):
+        self.root = "/nonexistent"
+        self.files = files
+        self.readme_text = readme_text
+
+
+def src(relpath, text, kind="src"):
+    return SourceFile.from_text(relpath, text, kind)
+
+
+def rules_of(findings):
+    return sorted(f.rule for f in findings)
+
+
+# A README whose inventory matches the spans the fixtures emit.
+INVENTORY = (
+    "## Spans\n"
+    "<!-- span-inventory:begin -->\n"
+    "| `train.epoch` | wall | trainer |\n"
+    "<!-- span-inventory:end -->\n"
+)
+
+
+class LexerTests(unittest.TestCase):
+    def test_comments_and_strings_are_stripped(self):
+        code, pure = strip_comments_and_strings(
+            'let x = "Instant::now"; // Instant::now\n/* Instant::now */ let y = 1;\n'
+        )
+        self.assertNotIn("Instant::now", pure)
+        self.assertIn('"Instant::now"', code)  # code keeps strings
+        self.assertNotIn("// Instant::now", code)  # ...but not comments
+
+    def test_raw_strings_and_lifetimes(self):
+        code, pure = strip_comments_and_strings(
+            'let r = r#"un"balanced // not a comment"#;\nfn f<\'a>(x: &\'a str) {}\n'
+        )
+        self.assertNotIn("not a comment", pure)
+        self.assertIn("'a", pure)  # lifetime survives char-literal logic
+
+    def test_cfg_test_region_is_masked(self):
+        sf = src(
+            "rust/src/a.rs",
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n",
+        )
+        self.assertFalse(sf.in_test(0))
+        self.assertTrue(sf.in_test(3))
+        self.assertFalse(sf.in_test(5))
+
+    def test_make_key_is_line_content_based(self):
+        a = make_key("D-TIME", "rust/src/a.rs", "  let t0 = Instant::now();  ")
+        b = make_key("D-TIME", "rust/src/a.rs", "let t0 = Instant::now();")
+        self.assertEqual(a, b)
+        self.assertTrue(a.startswith("D-TIME:rust/src/a.rs:"))
+        self.assertLessEqual(len(slugify("x" * 500)), 60)
+
+
+class DeterminismTests(unittest.TestCase):
+    def test_time_banned_fires_in_banned_zone(self):
+        ctx = Ctx([src("rust/src/graph/x.rs", "fn f() { let t = Instant::now(); }\n")])
+        fs = rules_determinism.run(ctx)
+        self.assertEqual(rules_of(fs), ["D-TIME-BANNED"])
+        self.assertFalse(fs[0].suppressable)
+
+    def test_time_elsewhere_is_allowlistable_warn(self):
+        ctx = Ctx([src("rust/src/serve/x.rs", "fn f() { let t = Instant::now(); }\n")])
+        fs = rules_determinism.run(ctx)
+        self.assertEqual(rules_of(fs), ["D-TIME"])
+        self.assertTrue(fs[0].suppressable)
+
+    def test_duration_arithmetic_outside_banned_zone_is_clean(self):
+        ctx = Ctx([src("rust/src/serve/x.rs", "use std::time::Duration;\nfn f(d: Duration) {}\n")])
+        self.assertEqual(rules_determinism.run(ctx), [])
+
+    def test_clock_in_cfg_test_is_exempt(self):
+        ctx = Ctx(
+            [src("rust/src/graph/x.rs", "#[cfg(test)]\nmod t {\n fn f() { Instant::now(); }\n}\n")]
+        )
+        self.assertEqual(rules_determinism.run(ctx), [])
+
+    def test_entropy_fires_outside_rng(self):
+        bad = Ctx([src("rust/src/augment/x.rs", "fn f() { let r = rand::thread_rng(); }\n")])
+        ok = Ctx([src("rust/src/rng.rs", "fn f() { let r = rand::thread_rng(); }\n")])
+        self.assertIn("D-ENTROPY", rules_of(rules_determinism.run(bad)))
+        self.assertEqual(rules_determinism.run(ok), [])
+
+    def test_hash_iter_fires_without_sort(self):
+        text = (
+            "use std::collections::HashMap;\n"
+            "fn f(m: &HashMap<u32, u32>) -> Vec<u32> {\n"
+            "    let mut out = Vec::new();\n"
+            "    for (k, _) in m { out.push(*k); }\n"
+            "    out\n}\n"
+        )
+        # the `m: &HashMap<...>` param form is the binding detector here
+        ctx = Ctx([src("rust/src/serve/x.rs", text)])
+        self.assertEqual(rules_of(rules_determinism.run(ctx)), ["D-HASH-ITER"])
+
+    def test_hash_iter_redeemed_by_sort_within_window(self):
+        text = (
+            "fn f() {\n"
+            "    let m: HashMap<u32, u32> = HashMap::new();\n"
+            "    let mut ks: Vec<u32> = m.keys().copied().collect();\n"
+            "    ks.sort_unstable();\n"
+            "}\n"
+        )
+        ctx = Ctx([src("rust/src/serve/x.rs", text)])
+        self.assertEqual(rules_determinism.run(ctx), [])
+
+    def test_hash_iter_order_insensitive_terminal_is_clean(self):
+        text = "fn f() {\n    let m: HashMap<u32, u32> = HashMap::new();\n    let n = m.keys().count();\n}\n"
+        ctx = Ctx([src("rust/src/serve/x.rs", text)])
+        self.assertEqual(rules_determinism.run(ctx), [])
+
+    def test_local_vec_shadowing_a_hash_field_name_is_clean(self):
+        # regression: a struct field `edges: HashSet<..>` must not make a
+        # *local* Vec named `edges` in another fn fire the rule
+        text = (
+            "struct S {\n    edges: HashSet<u64>,\n}\n"
+            "fn g(nn: &N) {\n"
+            "    for &v in nn.edges.iter().rev() { use_it(v); }\n"
+            "}\n"
+        )
+        # nn.edges here is a Vec field of N, not S's HashSet — only
+        # `self.edges` / `x.edges` on an S would be genuinely unordered,
+        # but the rule cannot see types; it must at least not fire on a
+        # *bare* local of the same name:
+        text2 = (
+            "struct S {\n    edges: HashSet<u64>,\n}\n"
+            "fn g(edges: &Vec<u64>) {\n"
+            "    for &v in edges { use_it(v); }\n"
+            "}\n"
+        )
+        ctx = Ctx([src("rust/src/serve/x.rs", text2)])
+        self.assertEqual(rules_determinism.run(ctx), [])
+        # ...while the prefixed receiver still fires:
+        ctx = Ctx([src("rust/src/serve/y.rs", text)])
+        self.assertEqual(rules_of(rules_determinism.run(ctx)), ["D-HASH-ITER"])
+
+
+class ThreadingTests(unittest.TestCase):
+    def test_spawn_fires_in_src_not_in_tests(self):
+        bad = Ctx([src("rust/src/a.rs", "fn f() { std::thread::spawn(|| {}); }\n")])
+        self.assertEqual(rules_of(rules_threading.run(bad)), ["T-SPAWN"])
+        tst = Ctx(
+            [src("rust/src/a.rs", "#[cfg(test)]\nmod t {\n fn f() { std::thread::spawn(|| {}); }\n}\n")]
+        )
+        self.assertEqual(rules_threading.run(tst), [])
+        scoped = Ctx([src("rust/src/a.rs", "fn f() { std::thread::scope(|s| {}); }\n")])
+        self.assertEqual(rules_threading.run(scoped), [])
+
+    def test_static_needs_a_nearby_comment(self):
+        bad = Ctx([src("rust/src/a.rs", "static COUNTER: AtomicU64 = AtomicU64::new(0);\n")])
+        self.assertEqual(rules_of(rules_threading.run(bad)), ["T-SHARED-COMMENT"])
+        ok = Ctx(
+            [src(
+                "rust/src/a.rs",
+                "// read only after the scope joins; relaxed is safe\n"
+                "static COUNTER: AtomicU64 = AtomicU64::new(0);\n",
+            )]
+        )
+        self.assertEqual(rules_threading.run(ok), [])
+
+    def test_intra_lease_cross_check(self):
+        bad = Ctx([src("rust/src/a.rs", "fn f(n: usize) { crate::tensor::set_intra_threads(n); }\n")])
+        self.assertEqual(rules_of(rules_threading.run(bad)), ["T-INTRA-LEASE"])
+        ok = Ctx(
+            [src(
+                "rust/src/a.rs",
+                "fn f(n: usize) {\n"
+                "    let _lease = crate::threads::reserve(n);\n"
+                "    crate::tensor::set_intra_threads(n);\n"
+                "}\n",
+            )]
+        )
+        self.assertEqual(rules_threading.run(ok), [])
+        one = Ctx([src("rust/src/a.rs", "fn f() { crate::tensor::set_intra_threads(1); }\n")])
+        self.assertEqual(rules_threading.run(one), [])
+
+
+class ObservabilityTests(unittest.TestCase):
+    def test_undocumented_span_fires(self):
+        ctx = Ctx(
+            [src("rust/src/a.rs", 'fn f() { let _s = crate::span!("serve.mystery"); }\n')],
+            readme_text=INVENTORY,
+        )
+        self.assertIn("O-SPAN-INVENTORY", rules_of(rules_observability.run(ctx)))
+
+    def test_stale_inventory_row_fires(self):
+        ctx = Ctx([src("rust/src/a.rs", "fn f() {}\n")], readme_text=INVENTORY)
+        self.assertIn("O-SPAN-STALE", rules_of(rules_observability.run(ctx)))
+
+    def test_matching_inventory_is_clean(self):
+        ctx = Ctx(
+            [src("rust/src/a.rs", 'fn f() { let _s = crate::span!("train.epoch"); }\n')],
+            readme_text=INVENTORY,
+        )
+        self.assertEqual(rules_observability.run(ctx), [])
+
+    def test_enter_under_parent_captured_inside_scope_fires(self):
+        text = (
+            "fn f() {\n"
+            "    std::thread::scope(|s| {\n"
+            "        let wid = outer.id();\n"
+            '        let _g = SpanGuard::enter_under("train.epoch", Some(wid), &[]);\n'
+            "    });\n"
+            "}\n"
+        )
+        ctx = Ctx([src("rust/src/a.rs", text)], readme_text=INVENTORY)
+        self.assertIn("O-ENTER-UNDER", rules_of(rules_observability.run(ctx)))
+
+    def test_enter_under_parent_captured_before_scope_is_clean(self):
+        text = (
+            "fn f() {\n"
+            "    let wid = outer.id();\n"
+            "    std::thread::scope(|s| {\n"
+            '        let _g = SpanGuard::enter_under("train.epoch", Some(wid), &[]);\n'
+            "    });\n"
+            "}\n"
+        )
+        ctx = Ctx([src("rust/src/a.rs", text)], readme_text=INVENTORY)
+        self.assertEqual(rules_observability.run(ctx), [])
+
+    def test_reference_twin_missing_pin_test_fires(self):
+        lib = src(
+            "rust/src/a.rs",
+            "pub fn gemm_reference() {}\n"
+            'pub fn gemm() { let _s = crate::span!("train.epoch"); }\n',
+        )
+        ctx = Ctx([lib], readme_text=INVENTORY)
+        self.assertIn("O-REFERENCE-TWIN", rules_of(rules_observability.run(ctx)))
+        pin = src(
+            "rust/tests/pin.rs",
+            "fn pin() { assert_eq!(gad::a::gemm_reference(), gad::a::gemm()); }\n",
+            kind="test",
+        )
+        ctx = Ctx([lib, pin], readme_text=INVENTORY)
+        self.assertEqual(rules_observability.run(ctx), [])
+
+    def test_reference_without_optimized_twin_fires(self):
+        lib = src("rust/src/a.rs", "pub fn gemm_reference() {}\n")
+        pin = src("rust/tests/pin.rs", "fn pin() { gad::a::gemm_reference(); }\n", kind="test")
+        ctx = Ctx([lib, pin], readme_text=INVENTORY)
+        self.assertIn("O-REFERENCE-TWIN", rules_of(rules_observability.run(ctx)))
+
+
+LIB_RS = (
+    "pub mod tensor;\n"
+    "mod internal;\n"
+    "pub mod prelude {\n"
+    "    pub use crate::tensor::Tensor;\n"
+    "}\n"
+)
+TENSOR_RS = "pub struct Tensor;\npub fn gemm() {}\npub(crate) fn secret() {}\n"
+
+
+def exports_ctx(test_text):
+    return Ctx(
+        [
+            src("rust/src/lib.rs", LIB_RS),
+            src("rust/src/tensor.rs", TENSOR_RS),
+            src("rust/tests/t.rs", test_text, kind="test"),
+        ]
+    )
+
+
+class ExportsTests(unittest.TestCase):
+    def test_valid_imports_resolve(self):
+        ctx = exports_ctx(
+            "use gad::tensor::{Tensor, gemm};\nuse gad::prelude::*;\n"
+            "fn f() { let t: gad::tensor::Tensor = gad::prelude::Tensor; }\n"
+        )
+        self.assertEqual(rules_exports.run(ctx), [])
+
+    def test_nonexistent_item_fires(self):
+        ctx = exports_ctx("use gad::tensor::NoSuchThing;\n")
+        self.assertEqual(rules_of(rules_exports.run(ctx)), ["X-UNRESOLVED"])
+
+    def test_private_module_fires(self):
+        ctx = exports_ctx("use gad::internal;\n")
+        self.assertEqual(rules_of(rules_exports.run(ctx)), ["X-UNRESOLVED"])
+
+    def test_pub_crate_item_is_invisible_to_integration_tests(self):
+        ctx = exports_ctx("use gad::tensor::secret;\n")
+        self.assertEqual(rules_of(rules_exports.run(ctx)), ["X-UNRESOLVED"])
+
+    def test_reexport_chain_resolves(self):
+        ctx = exports_ctx("use gad::prelude::Tensor;\n")
+        self.assertEqual(rules_exports.run(ctx), [])
+
+
+class HygieneTests(unittest.TestCase):
+    def test_unwrap_fires_in_lib_not_cli_or_tests(self):
+        bad = Ctx([src("rust/src/a.rs", "fn f() { x.unwrap(); }\n")])
+        self.assertEqual(rules_of(rules_hygiene.run(bad)), ["H-UNWRAP"])
+        cli = Ctx([src("rust/src/cli/a.rs", "fn f() { x.unwrap(); }\n")])
+        self.assertEqual(rules_hygiene.run(cli), [])
+        tst = Ctx([src("rust/src/a.rs", "#[cfg(test)]\nmod t {\n fn f() { x.unwrap(); }\n}\n")])
+        self.assertEqual(rules_hygiene.run(tst), [])
+
+    def test_each_hygiene_pattern_fires(self):
+        text = (
+            "fn a() { x.expect(\"boom\"); }\n"
+            "fn b() { panic!(\"no\"); }\n"
+            "fn c() { println!(\"out\"); }\n"
+        )
+        ctx = Ctx([src("rust/src/a.rs", text)])
+        self.assertEqual(rules_of(rules_hygiene.run(ctx)), ["H-EXPECT", "H-PANIC", "H-PRINT"])
+
+
+class AllowlistTests(unittest.TestCase):
+    def _tmp(self, content):
+        f = tempfile.NamedTemporaryFile("w", suffix=".txt", delete=False)
+        self.addCleanup(os.unlink, f.name)
+        f.write(content)
+        f.close()
+        return f.name
+
+    def _finding(self, rule="D-TIME", relpath="rust/src/a.rs", line_text="let t = Instant::now();"):
+        ctx = Ctx([src(relpath, f"fn f() {{ {line_text} }}\n", kind="src")])
+        fs = rules_determinism.run(ctx)
+        self.assertEqual(len(fs), 1)
+        return fs[0]
+
+    def test_exact_key_suppresses(self):
+        f = self._finding()
+        path = self._tmp(f"{f.key}  timing only, never feeds answers\n")
+        entries, malformed = audit.parse_allowlist(path)
+        self.assertEqual(malformed, [])
+        out = audit.apply_allowlist([f], entries, "allowlist.txt")
+        self.assertTrue(out[0].allowlisted)
+        self.assertEqual(len(out), 1)  # no ALLOWLIST-UNUSED
+
+    def test_file_level_key_suppresses(self):
+        f = self._finding()
+        path = self._tmp("D-TIME:rust/src/a.rs  whole file is bench timing\n")
+        entries, _ = audit.parse_allowlist(path)
+        out = audit.apply_allowlist([f], entries, "allowlist.txt")
+        self.assertTrue(out[0].allowlisted)
+
+    def test_stale_entry_is_flagged(self):
+        path = self._tmp("D-TIME:rust/src/gone.rs:let-t-Instant-now  obsolete\n")
+        entries, _ = audit.parse_allowlist(path)
+        out = audit.apply_allowlist([], entries, "allowlist.txt")
+        self.assertEqual(rules_of(out), ["ALLOWLIST-UNUSED"])
+        self.assertFalse(out[0].suppressable)
+
+    def test_malformed_line_is_flagged(self):
+        path = self._tmp("justawordwithnokey\n")
+        _, malformed = audit.parse_allowlist(path)
+        self.assertEqual(rules_of(malformed), ["ALLOWLIST-MALFORMED"])
+
+    def test_non_suppressable_findings_ignore_the_allowlist(self):
+        ctx = Ctx([src("rust/src/graph/x.rs", "fn f() { let t = Instant::now(); }\n")])
+        f = rules_determinism.run(ctx)[0]
+        self.assertEqual(f.rule, "D-TIME-BANNED")
+        path = self._tmp(f"{f.key}  nice try\n")
+        entries, _ = audit.parse_allowlist(path)
+        out = audit.apply_allowlist([f], entries, "allowlist.txt")
+        self.assertFalse(out[0].allowlisted)
+
+
+class EndToEndTests(unittest.TestCase):
+    def test_real_tree_is_green(self):
+        """The merged tree must audit clean — same check CI runs."""
+        root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        if not os.path.isdir(os.path.join(root, "rust", "src")):
+            self.skipTest("not running inside the repo")
+        rc = audit.main(["--root", root])
+        self.assertEqual(rc, 0, "audit must exit 0 on the merged tree")
+
+
+if __name__ == "__main__":
+    unittest.main()

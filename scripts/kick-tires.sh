@@ -9,6 +9,14 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 OUT="${1:-out}"
 
+# static contract audit first: it needs only python3, so it still runs
+# (and still gates) in containers that have no rust toolchain at all
+echo "== kick-tires: static contract audit =="
+mkdir -p "$OUT"
+python3 scripts/analysis/audit.py --json "$OUT/static_audit.json"
+python3 -m json.tool "$OUT/static_audit.json" >/dev/null
+echo "ok: $OUT/static_audit.json parses as JSON"
+
 echo "== kick-tires: building release CLI =="
 cargo build --release --manifest-path rust/Cargo.toml
 
@@ -71,7 +79,7 @@ cp "$OUT/fig13_rebalance.json" "$OUT/BENCH_fig13.json"
 cp "$OUT/fig14_load_knee.json" "$OUT/BENCH_fig14.json"
 cp "$OUT/fig15_profile.json" "$OUT/BENCH_fig15.json"
 cp "$OUT/fig16_kernels.json" "$OUT/BENCH_fig16.json"
-for f in BENCH_fig11.json BENCH_fig12.json BENCH_fig13.json BENCH_fig14.json BENCH_fig15.json BENCH_fig16.json; do
+for f in BENCH_fig11.json BENCH_fig12.json BENCH_fig13.json BENCH_fig14.json BENCH_fig15.json BENCH_fig16.json static_audit.json; do
     if [[ ! -s "$OUT/$f" ]]; then
         echo "MISSING or empty: $OUT/$f" >&2
         status=1
@@ -84,4 +92,4 @@ if [[ $status -ne 0 ]]; then
     echo "kick-tires FAILED" >&2
     exit $status
 fi
-echo "kick-tires passed: fig11-16 artifacts (+BENCH_*.json, trace) present in $OUT/"
+echo "kick-tires passed: fig11-16 artifacts (+BENCH_*.json, static_audit.json, trace) present in $OUT/"
